@@ -1,0 +1,37 @@
+"""Figure-style scaling: per-step cost vs nominal dimensionality d at fixed
+p — the paper's core claim is the lazy algorithm is O(p), independent of d,
+while dense regularization is O(d)."""
+import time
+
+import jax
+
+from repro.core import LinearConfig, ScheduleConfig, init_state, make_round_fn
+from repro.data import BowConfig, SyntheticBow
+
+DIMS = (10_000, 50_000, 260_941, 1_000_000)
+
+
+def _time_mode(mode, dim, steps=256):
+    ds = SyntheticBow(BowConfig(dim=dim))
+    cfg = LinearConfig(
+        dim=dim, flavor="fobos", lam1=1e-5, lam2=1e-6,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.5, t0=100.0), round_len=steps,
+    )
+    round_fn = make_round_fn(cfg, mode)
+    state = init_state(cfg, mode=mode)
+    state, _ = round_fn(state, ds.sample_round(0, steps, 1))
+    jax.block_until_ready(state.wpsi)
+    t0 = time.perf_counter()
+    state, _ = round_fn(state, ds.sample_round(1, steps, 1))
+    jax.block_until_ready(state.wpsi)
+    return (time.perf_counter() - t0) / steps * 1e6  # us/step
+
+
+def run():
+    rows = []
+    for dim in DIMS:
+        lazy = _time_mode("lazy", dim)
+        dense = _time_mode("dense", dim)
+        rows.append((f"scaling_lazy_d{dim}", lazy, f"O(p) step at d={dim}"))
+        rows.append((f"scaling_dense_d{dim}", dense, f"O(d) step at d={dim}"))
+    return rows

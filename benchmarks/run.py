@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure (+ the kernel and
+minibatch extensions).  Prints ``name,us_per_call,derived`` CSV.
+
+  table1      paper §7 Table 1 (lazy vs dense FoBoS elastic net, Medline stats)
+  scaling     O(p) vs O(d): per-step cost against nominal dimensionality
+  dp_overhead the elastic-net DP caches' constant factor vs l1-only/ridge/none
+  kernels     fused lazy_enet row kernel vs unfused reference
+  minibatch   lazy minibatch extension throughput
+
+Roofline tables (per arch x shape x mesh) come from the dry-run artifacts:
+``python -m repro.analysis.roofline`` (results/dryrun must exist).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--fast", action="store_true", help="smaller step counts")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_dp_overhead,
+        bench_kernels,
+        bench_lazy_vs_dense,
+        bench_minibatch,
+        bench_scaling,
+    )
+
+    steps = 128 if args.fast else 512
+    suites = {
+        "table1": lambda: bench_lazy_vs_dense.run(steps=steps),
+        "scaling": lambda: bench_scaling.run(),
+        "dp_overhead": lambda: bench_dp_overhead.run(steps=steps),
+        "kernels": lambda: bench_kernels.run(),
+        "minibatch": lambda: bench_minibatch.run(steps=min(steps, 256)),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.2f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # report and continue: one table failing
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+KV-cache/state machinery (the same decode_fn the decode_32k/long_500k dry-run
+cells lower).  Works for every assigned architecture, including the
+attention-free (rwkv6) and hybrid (recurrentgemma) families.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6_7b --new-tokens 48
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internvl2_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+    out = serve(
+        args.arch,
+        reduced=True,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        new_tokens=args.new_tokens,
+    )
+    print("generated token ids (first sequence):", out[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

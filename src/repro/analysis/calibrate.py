@@ -1,0 +1,138 @@
+"""Scan-calibrated cost accounting.
+
+XLA's ``cost_analysis()`` counts a while-loop (lax.scan) body ONCE,
+ignoring the trip count (verified experimentally: a 16-iteration scanned
+matmul reports 1 matmul of FLOPs).  Every model here scans over layers, so
+raw dry-run FLOPs/bytes/collective-bytes undercount by ~n_layers x.
+
+Correction: lower each cell twice more at n_layers = v1, v2 (FULL batch and
+sequence, so every non-scanned op is identical), and take
+
+    body     = f(v2) - f(v1)          (one scan iteration's true cost)
+    corrected = f(v1) + (trips_full - trips_v1) * body
+
+This is exact for single-level scans: the variants differ only in the scan
+trip count.  Special cases:
+
+* whisper (two scans: encoder + decoder): vary them independently —
+  f(e2,d1)-f(e1,d1) and f(e1,d2)-f(e1,d1).
+* recurrentgemma: the scan unit is a (rec, rec, attn) GROUP; variants use
+  n_layers = 5 (1 group + 2 tail) and 8 (2 groups + 2 tail); tail layers are
+  python-unrolled and counted exactly in both.
+* rwkv6 train/prefill has a nested chunk scan.  Both the per-layer cost and
+  the non-scanned cost (embed/logits/loss) are *linear in S with zero
+  intercept* for this attention-free arch, so we calibrate at S=32 (2
+  chunks, unrolled -> no inner while at all) and scale by S_full/32.
+  total(L, S) = (S/32) * [ f(L=1, S=32) + (L-1) * body(S=32) ].
+
+Collective bytes (parsed from the HLO, where a scan body also prints once)
+are corrected with the same deltas.  Memory analysis is NOT corrected —
+peak memory is a property of the full compiled module and the full-depth
+dry-run reports it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Tuple
+
+from repro.configs import SHAPES, ArchConfig, ShapeCell, cell_applicable, get_arch
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+
+def _extract(res) -> Dict[str, float]:
+    cost = res.get("cost_analysis") or {}
+    out = {k: float(cost.get(k, 0.0)) for k in _KEYS}
+    for fam, v in (res.get("collective_bytes") or {}).items():
+        out[f"coll:{fam}"] = float(v)
+    return out
+
+
+def _lower(cfg, cell, multi_pod):
+    from repro.launch.dryrun import lower_and_analyze
+
+    res = lower_and_analyze(cfg, cell, multi_pod)
+    res.pop("_hlo", None)
+    return res
+
+
+def _combine(base: Dict[str, float], body: Dict[str, float], extra_trips: float):
+    return {k: base.get(k, 0.0) + extra_trips * body.get(k, 0.0) for k in set(base) | set(body)}
+
+
+def _delta(a: Dict[str, float], b: Dict[str, float]):
+    return {k: b.get(k, 0.0) - a.get(k, 0.0) for k in set(a) | set(b)}
+
+
+def calibrated_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    cfg = get_arch(arch)
+    cell = SHAPES[shape]
+    ok, reason = cell_applicable(cfg, cell)
+    mesh_name = "multipod" if multi_pod else "pod"
+    base_info = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "method": "scan-calibrated",
+    }
+    if not ok:
+        return {**base_info, "status": "skipped", "reason": reason}
+
+    if cfg.encdec:
+        f11 = _lower(dataclasses.replace(cfg, n_layers=1, n_enc_layers=1, unroll_layers=True), cell, multi_pod)
+        c11 = _extract(f11)
+        # decode cells never lower the encoder: skip the encoder variant
+        if cell.kind == "decode":
+            c21 = c11
+        else:
+            c21 = _extract(_lower(dataclasses.replace(cfg, n_layers=1, n_enc_layers=2, unroll_layers=True), cell, multi_pod))
+        c12 = _extract(_lower(dataclasses.replace(cfg, n_layers=2, n_enc_layers=1, unroll_layers=True), cell, multi_pod))
+        enc_body = _delta(c11, c21)
+        dec_body = _delta(c11, c12)
+        corrected = _combine(
+            _combine(c11, enc_body, cfg.n_enc_layers - 1), dec_body, cfg.n_layers - 1
+        )
+        n_dev = f11["n_devices"]
+    elif cfg.rglru:
+        G = cfg.n_layers // 3
+        T = cfg.n_layers % 3
+        f1 = _lower(dataclasses.replace(cfg, n_layers=3 + T, unroll_layers=True), cell, multi_pod)
+        c1 = _extract(f1)
+        c2 = _extract(_lower(dataclasses.replace(cfg, n_layers=6 + T, unroll_layers=True), cell, multi_pod))
+        body = _delta(c1, c2)
+        corrected = _combine(c1, body, G - 1)
+        n_dev = f1["n_devices"]
+    elif cfg.attn_free and cell.kind in ("train", "prefill"):
+        s_cal = 32
+        cal_cell = dataclasses.replace(cell, seq_len=s_cal)
+        f1 = _lower(dataclasses.replace(cfg, n_layers=1, unroll_layers=True), cal_cell, multi_pod)
+        c1 = _extract(f1)
+        c2 = _extract(_lower(dataclasses.replace(cfg, n_layers=2, unroll_layers=True), cal_cell, multi_pod))
+        body = _delta(c1, c2)
+        at32 = _combine(c1, body, cfg.n_layers - 1)
+        scale = cell.seq_len / s_cal
+        corrected = {k: v * scale for k, v in at32.items()}
+        n_dev = f1["n_devices"]
+    else:
+        f1 = _lower(dataclasses.replace(cfg, n_layers=1, unroll_layers=True), cell, multi_pod)
+        c1 = _extract(f1)
+        c2 = _extract(_lower(dataclasses.replace(cfg, n_layers=2, unroll_layers=True), cell, multi_pod))
+        body = _delta(c1, c2)
+        corrected = _combine(c1, body, cfg.n_layers - 1)
+        n_dev = f1["n_devices"]
+
+    coll = {k.split(":", 1)[1]: v for k, v in corrected.items() if k.startswith("coll:")}
+    return {
+        **base_info,
+        "status": "ok",
+        "n_devices": n_dev,
+        "cost_analysis": {k: corrected.get(k, 0.0) for k in _KEYS},
+        "collective_bytes": coll,
+    }
+
+
+def cell_path(arch, shape, mesh_name) -> Path:
+    return RESULTS_DIR / f"calib__{arch}__{shape}__{mesh_name}.json"

@@ -1,0 +1,80 @@
+"""HLO op-level profiling for the dry-run artifacts: histogram dot FLOPs and
+collective bytes by shape, from a (usually 1-layer unrolled) compiled module.
+This is the 'profiler' of the §Perf loop — no real hardware, so we reason
+from the lowered IR."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_SHAPE = r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "s16": 2,
+    "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+
+def _nelem(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def dot_flops_by_shape(hlo: str, top: int = 15):
+    """Approximate dot FLOPs: 2 * prod(result dims) * contracted size.
+    Returns [(flops, count, line-signature)] sorted desc."""
+    out: Dict[str, list] = defaultdict(lambda: [0.0, 0])
+    for line in hlo.splitlines():
+        m = re.search(rf"=\s*{_SHAPE}\s+dot\(", line)
+        if not m:
+            continue
+        res_elems = _nelem(m.group(2))
+        # contracted size: parse lhs shape and contracting dims
+        ops = re.findall(_SHAPE, line)
+        cdim = re.search(r"lhs_contracting_dims=\{([0-9,]+)\}", line)
+        if len(ops) >= 2 and cdim:
+            lhs_dims = [int(x) for x in ops[1][1].split(",") if x]
+            k = 1
+            for ci in cdim.group(1).split(","):
+                if int(ci) < len(lhs_dims):
+                    k *= lhs_dims[int(ci)]
+        else:
+            k = 1
+        sig = f"{ops[0][0]}[{ops[0][1]}] <- " + " x ".join(f"{d}[{s}]" for d, s in ops[1:3])
+        out[sig][0] += 2.0 * res_elems * k
+        out[sig][1] += 1
+    rows = sorted(((v[0], v[1], k) for k, v in out.items()), reverse=True)
+    return rows[:top]
+
+
+def collective_by_shape(hlo: str, top: int = 15):
+    out: Dict[str, list] = defaultdict(lambda: [0.0, 0])
+    for line in hlo.splitlines():
+        m = re.search(
+            rf"=\s*(?:\([^)]*\)|{_SHAPE})\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(",
+            line,
+        )
+        if not m:
+            continue
+        op = m.group(3)
+        shapes = re.findall(_SHAPE, line.split("(", 1)[1])
+        total = sum(_nelem(d) * _DTYPE_BYTES.get(t, 4) for t, d in shapes[:4])
+        sig = f"{op} " + ",".join(f"{t}[{d}]" for t, d in shapes[:2])
+        out[sig][0] += total
+        out[sig][1] += 1
+    rows = sorted(((v[0], v[1], k) for k, v in out.items()), reverse=True)
+    return rows[:top]
+
+
+def report(hlo: str) -> str:
+    lines = ["== top dot FLOPs (per device, loop bodies once) =="]
+    for fl, cnt, sig in dot_flops_by_shape(hlo):
+        lines.append(f"  {fl:10.3e} x{cnt:<3} {sig[:110]}")
+    lines.append("== top collective bytes ==")
+    for by, cnt, sig in collective_by_shape(hlo):
+        lines.append(f"  {by/1e9:8.2f}GB x{cnt:<3} {sig[:110]}")
+    return "\n".join(lines)

@@ -1,0 +1,69 @@
+"""Regenerate the EXPERIMENTS.md roofline/dry-run tables from the artifacts
+in results/dryrun (full-depth + calibrated).
+
+  PYTHONPATH=src python -m repro.analysis.report
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis.roofline import load_all, make_table
+
+REPO = Path(__file__).resolve().parents[3]
+MARKER = "<!-- ROOFLINE_TABLES -->"
+END_MARKER = "<!-- /ROOFLINE_TABLES -->"
+
+
+def dryrun_summary() -> str:
+    recs = load_all()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    compile_s = [r.get("compile_s", 0) or 0 for r in ok]
+    lines = [
+        f"* cells: **{len(ok)} compiled OK**, {len(skipped)} recorded skips, {len(err)} errors",
+        f"* compile time (1 CPU core): min {min(compile_s):.1f}s / median "
+        f"{sorted(compile_s)[len(compile_s)//2]:.1f}s / max {max(compile_s):.1f}s",
+    ]
+    # memory extremes per kind
+    for kind in ("decode", "prefill", "train"):
+        cells = [
+            (r["arch"], ((r.get("memory_analysis") or {}).get("temp_size_in_bytes") or 0) / 1e9)
+            for r in ok
+            if r["kind"] == kind and r["mesh"] == "pod"
+        ]
+        if cells:
+            mx = max(cells, key=lambda t: t[1])
+            mn = min(cells, key=lambda t: t[1])
+            lines.append(
+                f"* {kind} temp/device (pod): {mn[1]:.1f} GB ({mn[0]}) … {mx[1]:.1f} GB ({mx[0]})"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    body = [MARKER, ""]
+    body.append("#### Dry-run summary (post-§Perf code)\n")
+    body.append(dryrun_summary())
+    body.append("\n#### Single-pod (16×16, 256 chips) — scan-calibrated\n")
+    body.append(make_table("pod"))
+    body.append("\n#### Multi-pod (2×16×16, 512 chips) — scan-calibrated\n")
+    body.append(make_table("multipod"))
+    body.append("")
+    body.append(END_MARKER)
+    block = "\n".join(body)
+
+    exp = REPO / "EXPERIMENTS.md"
+    text = exp.read_text()
+    if END_MARKER in text:
+        pre = text.split(MARKER)[0]
+        post = text.split(END_MARKER)[1]
+        text = pre + block + post
+    else:
+        text = text.replace(MARKER, block)
+    exp.write_text(text)
+    print(f"updated {exp}")
+
+
+if __name__ == "__main__":
+    main()

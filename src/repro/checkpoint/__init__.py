@@ -1,0 +1,4 @@
+from . import checkpointer
+from .checkpointer import keep_last, latest_step, restore, restore_distributed, save
+
+__all__ = ["checkpointer", "keep_last", "latest_step", "restore", "restore_distributed", "save"]

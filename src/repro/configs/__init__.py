@@ -1,0 +1,167 @@
+"""Architecture configs (assigned pool) + input-shape cells.
+
+Every assigned architecture is an :class:`ArchConfig`; ``reduced()`` yields
+the same-family smoke-test size.  ``REGISTRY`` maps ``--arch <id>`` names to
+configs; ``SHAPES`` holds the four assigned input-shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.core.schedules import ScheduleConfig
+
+DENSE, MOE, SSM, HYBRID, ENCDEC, VLM = "dense", "moe", "ssm", "hybrid", "encdec", "vlm"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    # ---- structural options -------------------------------------------------
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    norm: str = "rms"  # rms | ln
+    rope_pct: float = 1.0
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    act: str = "swiglu"  # swiglu | gelu
+    # MoE
+    n_experts: int = 0
+    topk: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # rwkv / rglru
+    attn_free: bool = False  # rwkv6
+    rglru: bool = False  # recurrentgemma hybrid (2 recurrent : 1 local-attn)
+    window: int = 0  # local attention window (rglru blocks)
+    rnn_width: Optional[int] = None
+    conv_width: int = 4
+    # enc-dec (whisper)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500  # stub audio frames
+    # vlm
+    n_patches: int = 0  # stub ViT patches prepended
+    # ---- training/runtime ---------------------------------------------------
+    param_dtype: str = "bfloat16"
+    optimizer: str = "adamw"  # adamw | adafactor | sgdm
+    schedule: ScheduleConfig = dataclasses.field(
+        default_factory=lambda: ScheduleConfig(kind="inv_sqrt", eta0=3e-4, t0=1000.0)
+    )
+    # the paper's technique, attached to the embedding table (+ experts)
+    lazy_embedding_reg: bool = True
+    reg_flavor: str = "fobos"
+    lam1: float = 1e-6
+    lam2: float = 1e-7
+    reg_round_len: int = 1024
+    emb_lr: float = 0.05
+    grad_accum: int = 1  # microbatch count (memory knob at 1T scale)
+    clip_norm: float = 1.0
+    remat: bool = True
+    remat_policy: str = "full"  # full | dots (save dot outputs: no attention
+    #   or TP-collective recompute in backward, at higher activation memory)
+    ce_chunks: int = 1  # >1: chunk the CE loss over tokens so [tokens, vocab]
+    #   logits never materialize (python-unrolled; keeps cost calibration exact)
+    seq_parallel: bool = False  # Megatron-SP: residual stream sharded over the
+    #   model axis between blocks (saved scan carries / collectives shrink)
+    grad_compress_pod: bool = False  # int8 gradient all-reduce across pods
+    #   (multipod meshes; dist/compress.py)
+    # calibration mode: python-loop the layer stack instead of lax.scan so
+    # XLA cost_analysis counts every iteration (analysis/calibrate)
+    unroll_layers: bool = False
+    fsdp: bool = False  # shard params over the data axis too (ZeRO-3 style)
+    # serving
+    kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8
+    weight_quant_serve: bool = False  # int8 expert/ffn weights when serving
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_rnn(self) -> int:
+        return self.rnn_width or self.d_model
+
+    def reduced(self) -> "ArchConfig":
+        """Same family, smoke-test size: runs a CPU forward/train step fast."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 4 if self.rglru else 2),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4),
+            topk=min(self.topk, 2),
+            capacity_factor=4.0,  # no token dropping at smoke-test scale
+
+            rnn_width=64 if self.rnn_width else None,
+            window=min(self.window, 16) if self.window else 0,
+            enc_seq=24,
+            n_patches=min(self.n_patches, 8),
+            param_dtype="float32",
+            reg_round_len=64,
+            remat=False,
+            fsdp=False,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "whisper_medium",
+    "minicpm_2b",
+    "stablelm_3b",
+    "qwen15_32b",
+    "granite_34b",
+    "kimi_k2_1t",
+    "dbrx_132b",
+    "rwkv6_7b",
+    "internvl2_2b",
+    "recurrentgemma_9b",
+)
+
+
+def get_arch(name: str) -> ArchConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def registry() -> Dict[str, ArchConfig]:
+    return {a: get_arch(a) for a in ARCH_IDS}
+
+
+def cell_applicable(cfg: ArchConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """Whether (arch, shape) runs; reason string when skipped.
+
+    long_500k needs sub-quadratic attention: only the SSM (rwkv6) and the
+    hybrid (recurrentgemma: O(1) RG-LRU state + fixed 2048 local window)
+    qualify; dense-KV archs are skipped per the assignment sheet."""
+    if cell.name == "long_500k" and not (cfg.attn_free or cfg.rglru):
+        return False, "long_500k skipped: full-attention arch (dense 500k KV cache is the excluded quadratic regime)"
+    return True, ""

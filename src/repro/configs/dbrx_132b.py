@@ -1,0 +1,19 @@
+"""DBRX-132B [hf:databricks/dbrx-base; unverified] — 40L MoE, 16 experts
+top-4 (fine-grained), GQA kv=8."""
+from repro.configs import MOE, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="dbrx_132b",
+    family=MOE,
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10_752,
+    vocab_size=100_352,
+    n_experts=16,
+    topk=4,
+    fsdp=True,
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=2e-4, t0=2000.0),
+)

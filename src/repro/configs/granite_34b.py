@@ -1,0 +1,17 @@
+"""Granite-34B-code [arXiv:2405.04324; hf] — llama-arch, MQA (kv=1), 88L."""
+from repro.configs import DENSE, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="granite_34b",
+    family=DENSE,
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24_576,
+    vocab_size=49_152,
+    act="gelu",  # non-gated MLP (2 mats) — matches the 34B total at 88L
+    fsdp=True,
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-4, t0=1000.0),
+)

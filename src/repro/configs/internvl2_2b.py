@@ -1,0 +1,18 @@
+"""InternVL2-2B [arXiv:2404.16821; hf] — InternLM2 LM backbone; the InternViT
+frontend is a STUB: input_specs() provides precomputed patch embeddings
+(B, 256, 2048) prepended to the token sequence (loss on token positions)."""
+from repro.configs import VLM, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="internvl2_2b",
+    family=VLM,
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_553,
+    n_patches=256,
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-4, t0=1000.0),
+)

@@ -1,0 +1,25 @@
+"""Kimi-K2 1T-A32B [arXiv:2501.kimi2; unverified] — 61L MoE, 384 experts
+top-8 + 1 shared, GQA kv=8.  Adafactor (AdamW state would be 8TB), FSDP +
+EP; int8 expert weights + int8 KV for serving cells (DESIGN.md §7 memory
+notes: bf16 params alone are 8GB/chip on a 256-chip pod)."""
+from repro.configs import MOE, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="kimi_k2_1t",
+    family=MOE,
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=163_840,
+    n_experts=384,
+    topk=8,
+    n_shared_experts=1,
+    optimizer="adafactor",
+    fsdp=True,
+    kv_cache_dtype="int8",
+    weight_quant_serve=True,
+    schedule=ScheduleConfig(kind="wsd", eta0=2e-4, warmup_steps=2000, stable_steps=400_000, decay_steps=60_000),
+)

@@ -1,0 +1,22 @@
+"""MiniCPM-2B [arXiv:2404.06395; hf] — llama-like dense, WSD schedule.
+
+The WSD (warmup-stable-decay) schedule is exactly the *varying learning
+rate* regime the paper's DP caches exist for — this config exercises the
+lazy elastic-net embedding regularizer under a non-monotone eta(t)."""
+from repro.configs import DENSE, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="minicpm_2b",
+    family=DENSE,
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122_753,
+    tie_embeddings=True,
+    schedule=ScheduleConfig(
+        kind="wsd", eta0=1e-2, warmup_steps=2000, stable_steps=200_000, decay_steps=20_000, min_ratio=0.1
+    ),
+)

@@ -1,0 +1,18 @@
+"""Qwen1.5-32B [hf:Qwen/Qwen1.5-0.5B; hf] — dense, QKV bias, FSDP-sharded."""
+from repro.configs import DENSE, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="qwen15_32b",
+    family=DENSE,
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27_392,
+    vocab_size=152_064,
+    qkv_bias=True,
+    fsdp=True,
+    kv_cache_dtype="int8",  # 32k decode_32k KV (no GQA compression) exceeds HBM in bf16
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-4, t0=1000.0),
+)

@@ -1,0 +1,22 @@
+"""RecurrentGemma-9B [arXiv:2402.19427; unverified] — Griffin: RG-LRU
+recurrent blocks and local attention (window 2048), 2:1 pattern,
+38 = 12x(rec,rec,attn) + (rec,rec).  MQA (kv=1).  long_500k runs: O(1)
+recurrent state + fixed-window cache."""
+from repro.configs import HYBRID, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma_9b",
+    family=HYBRID,
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12_288,
+    vocab_size=256_000,
+    rglru=True,
+    window=2048,
+    act="geglu",
+    conv_width=4,
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-4, t0=1000.0),
+)

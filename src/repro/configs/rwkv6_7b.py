@@ -1,0 +1,20 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892; hf] — attention-free, data-dependent
+decay, head size 64 (64 heads at d=4096).  long_500k runs: decode state is
+O(1) in sequence length."""
+from repro.configs import SSM, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6_7b",
+    family=SSM,
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # wkv head size 64
+    n_kv_heads=64,
+    d_ff=14_336,
+    vocab_size=65_536,
+    head_dim=64,
+    attn_free=True,
+    norm="ln",
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-4, t0=1000.0),
+)

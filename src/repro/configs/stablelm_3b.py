@@ -1,0 +1,18 @@
+"""StableLM-3B [hf:stabilityai/stablelm-2-1_6b; unverified] — dense,
+LayerNorm, partial rotary (25%)."""
+from repro.configs import DENSE, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="stablelm_3b",
+    family=DENSE,
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=6912,
+    vocab_size=50_304,
+    norm="ln",
+    rope_pct=0.25,
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-4, t0=1000.0),
+)

@@ -1,0 +1,27 @@
+"""Whisper-medium backbone [arXiv:2212.04356; unverified].
+
+Enc-dec; the conv audio frontend is a STUB — input_specs() provides
+precomputed frame embeddings (B, 1500, 1024).  Whisper's real decoder ctx is
+448; the assigned shapes (4k/32k) are used as specified, with RoPE standing
+in for learned absolute positions so the assigned lengths are well-defined
+(deviation noted in DESIGN.md §6)."""
+from repro.configs import ENCDEC, ArchConfig
+from repro.core.schedules import ScheduleConfig
+
+CONFIG = ArchConfig(
+    name="whisper_medium",
+    family=ENCDEC,
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51_865,
+    norm="ln",
+    act="gelu",
+    encdec=True,
+    n_enc_layers=24,
+    enc_seq=1500,
+    qkv_bias=True,
+    schedule=ScheduleConfig(kind="inv_sqrt", eta0=1e-3, t0=2000.0),
+)

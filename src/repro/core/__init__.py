@@ -1,0 +1,57 @@
+"""repro.core — the paper's contribution: O(1) lazy (delayed) closed-form
+elastic-net regularization updates for sparse training (Lipton & Elkan 2015).
+"""
+from .dp_caches import FLAVORS, FOBOS, SGD, RegCaches, extend, init_caches, log_a
+from .dense_enet import reg_update
+from .lazy_enet import catchup, catchup_factors
+from .linear_trainer import (
+    LOGISTIC,
+    SQUARED,
+    LinearConfig,
+    LinearState,
+    SparseBatch,
+    current_weights,
+    flush,
+    init_state,
+    make_dense_step,
+    make_lazy_step,
+    make_round_fn,
+    nnz,
+    predict_proba,
+    psi,
+    weights,
+)
+from .schedules import Schedule, ScheduleConfig, constant, inv_sqrt, inv_t, validate_schedule, wsd
+
+__all__ = [
+    "FLAVORS",
+    "FOBOS",
+    "SGD",
+    "RegCaches",
+    "extend",
+    "init_caches",
+    "log_a",
+    "reg_update",
+    "catchup",
+    "catchup_factors",
+    "LOGISTIC",
+    "SQUARED",
+    "LinearConfig",
+    "LinearState",
+    "SparseBatch",
+    "current_weights",
+    "flush",
+    "init_state",
+    "make_dense_step",
+    "make_lazy_step",
+    "make_round_fn",
+    "nnz",
+    "predict_proba",
+    "Schedule",
+    "ScheduleConfig",
+    "constant",
+    "inv_sqrt",
+    "inv_t",
+    "validate_schedule",
+    "wsd",
+]

@@ -1,0 +1,29 @@
+"""Dense per-step regularization updates — the paper's baseline and the
+ground-truth oracle for the lazy closed forms.
+
+Per-step update of a weight whose loss-gradient is zero this step:
+
+  SGD   (Eq 9):   w <- sgn(w) * [ (1 - eta*lam2)|w| - eta*lam1 ]_+
+  FoBoS (§6.2):   w <- sgn(w) * [ (|w| - eta*lam1) / (1 + eta*lam2) ]_+
+
+The dense trainer applies this to EVERY coordinate every step, O(d); the
+lazy trainer defers it for absent features, O(p).  Both produce identical
+trajectories (tests/core/test_lazy_equals_dense.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .dp_caches import FOBOS, SGD
+
+
+def reg_update(w: jnp.ndarray, eta: jnp.ndarray, lam1: float, lam2: float, flavor: str) -> jnp.ndarray:
+    """One regularization-only step applied elementwise to ``w``."""
+    aw = jnp.abs(w)
+    if flavor == SGD:
+        mag = (1.0 - eta * lam2) * aw - eta * lam1
+    elif flavor == FOBOS:
+        mag = (aw - eta * lam1) / (1.0 + eta * lam2)
+    else:
+        raise ValueError(f"unknown flavor {flavor!r}")
+    return jnp.sign(w) * jnp.maximum(mag, 0.0)

@@ -1,0 +1,111 @@
+"""Dynamic-programming caches for O(1) lazy regularization catch-ups.
+
+The paper (§5, §6) caches, per SGD/FoBoS step ``t``:
+
+  * ``P(t)   = prod_{tau<=t} a_tau``   with ``a = 1 - eta*lam2`` (SGD, Eq 7)
+    or ``a = 1/(1 + eta*lam2)`` (FoBoS, §6.1 — there called ``Phi``),
+  * ``B(t)`` — a partial sum of eta over inverse partial products
+    (Thm 1 / Thm 2 — there called ``beta`` for FoBoS),
+  * ``S(t)   = sum_{tau<=t} eta_tau`` (the pure-l1 cache of Eq 4).
+
+We deviate from the paper in two *numerical* (not mathematical) ways,
+documented in DESIGN.md §2:
+
+  1. ``P`` is stored in log-space.  Over 10^5+ steps ``P`` underflows fp32;
+     the catch-up only ever needs *ratios* ``P(k-1)/P(psi-1)``, which are
+     ``exp(logP[k] - logP[psi])`` and perfectly representable.
+  2. The caches are *round-local* and are rebased (logP=0, B=0, S=0) whenever
+     the trainer flushes all weights current — the paper's own space-budget
+     amortization (§1 fn.1, §5.1), which doubles as the overflow guard for
+     ``B`` (which grows like 1/P).
+
+Index convention (crucial; used everywhere downstream):
+
+  slot ``i`` stores the prefix over round-local steps ``tau < i``.  So
+  ``logP[0] = B[0] = S[0] = 0`` is the empty prefix, and a weight with
+  ``psi_j = i`` has all regularization applied for steps ``tau < i``.
+
+The paper's ``P(k-1)/P(psi_j - 1)`` is ``exp(logP[k] - logP[psi])`` here.
+
+Off-by-one between flavors (this is where the paper's Eq 10/13/14 are
+internally inconsistent — we re-derive and validate against the dense
+oracle in tests/core):
+
+  SGD    per-step:  m <- a_t*m - eta_t*lam1         (Eq 9: shrink then shift)
+  FoBoS  per-step:  m <- a_t*(m - eta_t*lam1)       (§6.2: shift then shrink)
+
+  Unrolling, the lam1 shift at step tau is multiplied by the ``a``'s of steps
+  *after* tau (SGD) or of steps tau *and after* (FoBoS):
+
+  SGD:    B[i+1] = B[i] + eta_i * exp(-logP[i+1])
+  FoBoS:  B[i+1] = B[i] + eta_i * exp(-logP[i])
+
+and in both flavors the catch-up of a magnitude ``m`` from ``psi`` to ``k`` is
+
+  m' = m * exp(logP[k] - logP[psi]) - lam1 * exp(logP[k]) * (B[k] - B[psi])
+
+with the final sign-restoring clip applied once (exactness of the single
+outer clip vs per-step clips is proven in tests/core/test_lazy_equals_dense).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+SGD = "sgd"
+FOBOS = "fobos"
+FLAVORS = (SGD, FOBOS)
+
+
+class RegCaches(NamedTuple):
+    """Round-local DP caches. Arrays have length ``capacity + 1``; slot i is
+    the prefix over round-local steps tau < i."""
+
+    logP: jnp.ndarray  # [cap+1] f32: sum_{tau<i} log a_tau
+    B: jnp.ndarray  # [cap+1] f32: flavor-dependent partial sum (see module doc)
+    S: jnp.ndarray  # [cap+1] f32: sum_{tau<i} eta_tau
+
+
+def init_caches(capacity: int) -> RegCaches:
+    # three distinct buffers (never aliased — they are donated independently)
+    return RegCaches(
+        logP=jnp.zeros((capacity + 1,), dtype=jnp.float32),
+        B=jnp.zeros((capacity + 1,), dtype=jnp.float32),
+        S=jnp.zeros((capacity + 1,), dtype=jnp.float32),
+    )
+
+
+def log_a(eta: jnp.ndarray, lam2: float, flavor: str) -> jnp.ndarray:
+    """log of the per-step multiplicative decay factor."""
+    eta = jnp.asarray(eta, dtype=jnp.float32)
+    if lam2 == 0.0:
+        return jnp.zeros_like(eta)
+    if flavor == SGD:
+        # a = 1 - eta*lam2  (requires eta*lam2 < 1; validated at config time)
+        return jnp.log1p(-eta * lam2)
+    if flavor == FOBOS:
+        # a = 1 / (1 + eta*lam2)
+        return -jnp.log1p(eta * lam2)
+    raise ValueError(f"unknown flavor {flavor!r}")
+
+
+def extend(caches: RegCaches, i: jnp.ndarray, eta_i: jnp.ndarray, lam2: float, flavor: str) -> RegCaches:
+    """Fill slot ``i+1`` given slots ``<= i`` are valid.  O(1) per step
+    (the paper's DP recurrences, Lemma 1 + Thm 1/2).  ``i`` is the
+    round-local step index about to be executed."""
+    la = log_a(eta_i, lam2, flavor)
+    logP_i = caches.logP[i]
+    logP_next = logP_i + la
+    if flavor == SGD:
+        # shift at step i is multiplied by a's of steps AFTER i
+        b_inc = eta_i * jnp.exp(-logP_next)
+    else:
+        # FoBoS: shift at step i is multiplied by a_i as well
+        b_inc = eta_i * jnp.exp(-logP_i)
+    new = RegCaches(
+        logP=caches.logP.at[i + 1].set(logP_next),
+        B=caches.B.at[i + 1].set(caches.B[i] + b_inc),
+        S=caches.S.at[i + 1].set(caches.S[i] + eta_i),
+    )
+    return new

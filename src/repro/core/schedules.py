@@ -1,0 +1,119 @@
+"""Learning-rate schedules.
+
+All schedules are pure functions ``t -> eta`` where ``t`` may be a traced
+int32 scalar (they are called inside jit'd training steps) and the result is
+a float32 scalar.  The paper's lazy updates support any *time-dependent*
+schedule (constant, 1/t, 1/sqrt(t), warmup-stable-decay, ...); they do NOT
+support per-coordinate schedules such as AdaGrad (paper §3), which is why the
+lazy optimizer in :mod:`repro.optim.lazy_rows` is SGD/FoBoS-flavored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(eta0: float) -> Schedule:
+    def sched(t):
+        return jnp.full((), eta0, dtype=jnp.float32)
+
+    return sched
+
+
+def inv_t(eta0: float, t0: float = 1.0) -> Schedule:
+    """eta_t = eta0 * t0 / (t0 + t)  (harmonic decay, paper §5.1)."""
+
+    def sched(t):
+        tf = jnp.asarray(t, dtype=jnp.float32)
+        return (eta0 * t0 / (t0 + tf)).astype(jnp.float32)
+
+    return sched
+
+
+def inv_sqrt(eta0: float, t0: float = 1.0) -> Schedule:
+    """eta_t = eta0 * sqrt(t0) / sqrt(t0 + t)."""
+
+    def sched(t):
+        tf = jnp.asarray(t, dtype=jnp.float32)
+        return (eta0 * jnp.sqrt(t0) / jnp.sqrt(t0 + tf)).astype(jnp.float32)
+
+    return sched
+
+
+def wsd(
+    eta0: float,
+    warmup_steps: int,
+    stable_steps: int,
+    decay_steps: int,
+    min_ratio: float = 0.1,
+) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395).
+
+    Linear warmup 0 -> eta0 over ``warmup_steps``, constant eta0 for
+    ``stable_steps``, then exponential-style linear decay to
+    ``min_ratio * eta0`` over ``decay_steps``; constant afterwards.
+    """
+
+    def sched(t):
+        tf = jnp.asarray(t, dtype=jnp.float32)
+        w = jnp.float32(max(warmup_steps, 1))
+        s = jnp.float32(stable_steps)
+        d = jnp.float32(max(decay_steps, 1))
+        warm = eta0 * jnp.minimum(tf + 1.0, w) / w
+        decay_frac = jnp.clip((tf - w - s) / d, 0.0, 1.0)
+        decay = eta0 * (1.0 - (1.0 - min_ratio) * decay_frac)
+        return jnp.where(tf < w + s, warm, decay).astype(jnp.float32)
+
+    return sched
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Serializable schedule description (checkpointable / config files)."""
+
+    kind: str = "constant"  # constant | inv_t | inv_sqrt | wsd
+    eta0: float = 0.1
+    t0: float = 1.0
+    warmup_steps: int = 0
+    stable_steps: int = 0
+    decay_steps: int = 1
+    min_ratio: float = 0.1
+
+    def make(self) -> Schedule:
+        if self.kind == "constant":
+            return constant(self.eta0)
+        if self.kind == "inv_t":
+            return inv_t(self.eta0, self.t0)
+        if self.kind == "inv_sqrt":
+            return inv_sqrt(self.eta0, self.t0)
+        if self.kind == "wsd":
+            return wsd(
+                self.eta0,
+                self.warmup_steps,
+                self.stable_steps,
+                self.decay_steps,
+                self.min_ratio,
+            )
+        raise ValueError(f"unknown schedule kind: {self.kind!r}")
+
+
+def validate_schedule(sched: Schedule, lam2: float, flavor: str, horizon: int) -> None:
+    """The SGD flavor requires eta_t * lam2 < 1 for every step (otherwise the
+    multiplicative factor 1 - eta*lam2 goes non-positive and log-space caching
+    is invalid — and plain SGD would diverge anyway).  FoBoS has no such
+    constraint.  Called eagerly (not jitted) at trainer construction."""
+    if flavor != "sgd" or lam2 == 0.0:
+        return
+    import numpy as np
+
+    ts = np.unique(np.clip(np.geomspace(1, max(horizon, 2), 64).astype(np.int64) - 1, 0, None))
+    etas = np.array([float(sched(jnp.asarray(int(t)))) for t in ts])
+    if np.any(etas * lam2 >= 1.0):
+        raise ValueError(
+            f"schedule violates eta*lam2 < 1 required by SGD-flavor lazy l2^2 "
+            f"(max eta*lam2 = {float(np.max(etas * lam2)):.3g})"
+        )

@@ -1,0 +1,12 @@
+from .lm_data import LMDataConfig, SyntheticLMData
+from .synthetic_bow import MEDLINE_DIM, MEDLINE_N, MEDLINE_P_MEAN, BowConfig, SyntheticBow
+
+__all__ = [
+    "LMDataConfig",
+    "SyntheticLMData",
+    "MEDLINE_DIM",
+    "MEDLINE_N",
+    "MEDLINE_P_MEAN",
+    "BowConfig",
+    "SyntheticBow",
+]

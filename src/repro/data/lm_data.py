@@ -1,0 +1,44 @@
+"""Synthetic LM token pipeline.
+
+Zipf-distributed token streams with enough local structure (a noisy
+copy/induction pattern) that a transformer's loss measurably decreases
+within a few hundred steps — used by examples/train_lm.py and the
+integration tests.  Counter-seeded per step: restartable from (seed, step).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    zipf_s: float = 1.1
+    copy_prob: float = 0.7  # induction-head-learnable structure
+    copy_offset: int = 3
+    seed: int = 0
+
+
+class SyntheticLMData:
+    def __init__(self, cfg: LMDataConfig):
+        self.cfg = cfg
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        probs = ranks ** (-cfg.zipf_s)
+        self._cdf = np.cumsum(probs / probs.sum())
+
+    def batch(self, step: int) -> np.ndarray:
+        """[B, S+1] int32 — slice [:, :-1] inputs / [:, 1:] targets."""
+        cfg = self.cfg
+        rng = np.random.RandomState((cfg.seed * 9_999_991 + step) % (2**31 - 1))
+        shape = (cfg.batch_size, cfg.seq_len + 1)
+        u = rng.uniform(size=shape)
+        toks = np.minimum(np.searchsorted(self._cdf, u), cfg.vocab_size - 1).astype(np.int32)
+        # overlay a copy pattern: tok[t] = tok[t - offset] with prob copy_prob
+        copy_mask = rng.uniform(size=shape) < cfg.copy_prob
+        for t in range(cfg.copy_offset, shape[1]):
+            toks[:, t] = np.where(copy_mask[:, t], toks[:, t - cfg.copy_offset], toks[:, t])
+        return toks

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels:
+
+* lazy_enet — fused lazy catch-up + gradient update on gathered rows
+  (the paper's hot spot)
+* enet_prox — dense elastic-net shrink sweep (dense baseline / flush)
+* flash_attn — forward flash attention for the serving cells (the §Perf-
+  identified memory-term eliminator on dense-attention archs)
+
+ops.py holds the padded/jit'd public wrappers; ref.py the pure-jnp oracles.
+"""
+from .flash_attn import flash_attention
+from .ops import enet_prox, lazy_enet_update
+from . import ref
+
+__all__ = ["enet_prox", "flash_attention", "lazy_enet_update", "ref"]

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: forward flash attention (online softmax), GQA-aware.
+
+Motivation (EXPERIMENTS.md §Perf, stablelm iteration): after sharding fixes,
+the dominant roofline term on dense-attention archs is the materialized
+[B,H,S,S] f32 mask+softmax chain — ~80% of per-layer bytes in the op
+histogram.  Flash attention never materializes it: each program owns one
+(batch*head, q-block) tile, streams k/v in BK-sized blocks, and keeps the
+running max / normalizer / weighted accumulator in VMEM registers:
+
+    m_new = max(m, rowmax(s));  alpha = exp(m - m_new)
+    l     = l * alpha + rowsum(exp(s - m_new))
+    acc   = acc * alpha + exp(s - m_new) @ v
+
+HBM traffic drops from O(H*S^2) to O(S*(d_q + d_kv)) — the structural fix
+for the memory term.
+
+TPU mapping:
+* grid = (B * H, Sq / BQ); q tile (BQ, hd) in VMEM; k/v arrive as the
+  full (Skv, hd) slab for the program's kv-head (GQA: kv head = h // G via
+  the BlockSpec index_map) and are consumed BK rows at a time with a
+  fori_loop — for Skv beyond VMEM the same loop runs over an ANY-space ref
+  (decode cells have Sq = 1, so the q side is trivially resident).
+* causal masking via absolute positions: q_offset lets the same kernel do
+  training (offset 0), chunked prefill, and single-token decode
+  (Sq=1, offset=pos).
+
+Forward-only by design: serving (prefill_32k / decode_32k / long_500k
+cells) has no backward; training keeps the einsum path (remat-friendly).
+Validated under interpret=True against the pure-jnp GQA oracle across
+shape/dtype/causality sweeps (tests/kernels/test_flash_attn.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, qoff_ref, out_ref, *, bk: int, causal: bool, scale: float, skv_real: int
+):
+    q = q_ref[0].astype(jnp.float32) * scale  # [BQ, hd]
+    BQ = q.shape[0]
+    Skv = k_ref.shape[1]
+    nq = pl.program_id(1)
+    q_pos = qoff_ref[0, 0] + nq * BQ + jax.lax.iota(jnp.int32, BQ)  # absolute q positions
+
+    def body(i, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(i * bk, bk)].astype(jnp.float32)  # [BK, hd]
+        v = v_ref[0, pl.dslice(i * bk, bk)].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [BQ, BK]
+        kv_pos = i * bk + jax.lax.iota(jnp.int32, bk)
+        mask = (kv_pos < skv_real)[None, :]  # padded kv rows never score
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((BQ, q.shape[1]), jnp.float32)
+    m0 = jnp.full((BQ,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((BQ,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, Skv // bk, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, H, Sq, hd]
+    k: jnp.ndarray,  # [B, KV, Skv, hd]
+    v: jnp.ndarray,  # [B, KV, Skv, hd]
+    q_offset: jnp.ndarray | int = 0,  # absolute position of q[0] (decode: pos)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns [B, H, Sq, hd].  Sq is padded to block_q and Skv to block_k
+    internally (padded kv is masked off by causality or zero-prob rows)."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    # padded kv rows are masked off inside the kernel (kv_pos >= Skv)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sq_p, Skv_p = Sq + pq, Skv + pk
+
+    # flatten (B, H) -> grid dim 0; GQA: kv head for q-head h is h // G
+    q2 = qp.reshape(B * H, Sq_p, hd)
+    offs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B * H,)).reshape(B * H, 1)
+
+    grid = (B * H, Sq_p // block_q)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=block_k, causal=causal, scale=scale, skv_real=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, nq: (bh, nq, 0)),  # q tile
+            pl.BlockSpec((1, Skv_p, hd), lambda bh, nq, KV=KV, G=G, B=B: ((bh // (G * KV)) * KV + (bh % (G * KV)) // G, 0, 0)),
+            pl.BlockSpec((1, Skv_p, hd), lambda bh, nq, KV=KV, G=G, B=B: ((bh // (G * KV)) * KV + (bh % (G * KV)) // G, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, nq: (bh, 0)),  # q_offset scalar
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, nq: (bh, nq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, hd), q.dtype),
+        interpret=interpret,
+    )(q2, kp.reshape(B * KV, Skv_p, hd), vp.reshape(B * KV, Skv_p, hd), offs)
+
+    return out.reshape(B, H, Sq_p, hd)[:, :, :Sq]

@@ -1,0 +1,98 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle: deriving per-row catch-up factors from the DP caches, padding
+ragged shapes to hardware-aligned block multiples, 1-D <-> 2-D reshaping,
+and interpret-mode fallback on CPU (this container) vs compiled mode on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp_caches import RegCaches
+from repro.core.lazy_enet import catchup_factors
+
+from .enet_prox import enet_prox_kernel
+from .lazy_enet import lazy_enet_rows_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    R, D = x.shape
+    pr = (-R) % rows
+    pc = (-D) % cols
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lam1", "block_rows", "block_cols", "interpret")
+)
+def lazy_enet_update(
+    w_rows: jnp.ndarray,  # [R, D] gathered parameter rows
+    grad: jnp.ndarray,  # [R, D] loss gradient for those rows
+    psi: jnp.ndarray,  # [R] int32 last-touch step per row
+    k: jnp.ndarray,  # scalar int32 current step (catch up over [psi, k))
+    caches: RegCaches,
+    eta: jnp.ndarray,  # scalar f32 learning rate for the gradient step
+    *,
+    lam1: float,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Fused: bring rows current (O(1)/row via DP caches) + SGD step.
+
+    Padding is safe: padded w=grad=0 rows/cols produce 0 (sign(0)=0)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    R, D = w_rows.shape
+    ratio, shift = catchup_factors(psi, k, caches, lam1)  # [R] f32 each
+    ratio = jnp.broadcast_to(ratio, (R,))
+    shift = jnp.broadcast_to(shift, (R,))
+    wp = _pad_to(w_rows, block_rows, block_cols)
+    gp = _pad_to(grad, block_rows, block_cols)
+    pr = wp.shape[0] - R
+    if pr:
+        ratio = jnp.pad(ratio, (0, pr))
+        shift = jnp.pad(shift, (0, pr))
+    out = lazy_enet_rows_kernel(
+        wp, gp, ratio, shift, jnp.asarray(eta, jnp.float32),
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return out[:R, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def enet_prox(
+    w: jnp.ndarray,  # any shape; flattened internally
+    a: jnp.ndarray,  # scalar multiplicative decay
+    s: jnp.ndarray,  # scalar l1 shift
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Dense elastic-net shrink sweep, shape-preserving."""
+    if interpret is None:
+        interpret = _default_interpret()
+    shape = w.shape
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    cols = block_cols
+    rows_needed = -(-n // cols)
+    pad_rows = (-rows_needed) % block_rows
+    total = (rows_needed + pad_rows) * cols
+    flat = jnp.pad(flat, (0, total - n))
+    w2 = flat.reshape(rows_needed + pad_rows, cols)
+    out = enet_prox_kernel(
+        w2, jnp.asarray(a, jnp.float32), jnp.asarray(s, jnp.float32),
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return out.reshape(-1)[:n].reshape(shape)

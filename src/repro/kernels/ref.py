@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dp_caches import RegCaches
+from repro.core.lazy_enet import catchup_factors
+
+
+def lazy_enet_rows_ref(w, grad, ratio, shift, eta):
+    """Oracle for kernels.lazy_enet: per-row catchup then gradient step."""
+    w32 = w.astype(jnp.float32)
+    mag = jnp.abs(w32) * ratio[:, None] - shift[:, None]
+    cur = jnp.sign(w32) * jnp.maximum(mag, 0.0)
+    return (cur - eta * grad.astype(jnp.float32)).astype(w.dtype)
+
+
+def lazy_enet_update_ref(
+    w: jnp.ndarray,  # [R, D]
+    grad: jnp.ndarray,  # [R, D]
+    psi: jnp.ndarray,  # [R] int32
+    k: jnp.ndarray,  # scalar int32
+    caches: RegCaches,
+    lam1: float,
+    eta: jnp.ndarray,
+):
+    """Oracle for the full ops.lazy_enet_update path (factors + fused row op)."""
+    ratio, shift = catchup_factors(psi, k, caches, lam1)
+    return lazy_enet_rows_ref(w, grad, ratio, shift, eta)
+
+
+def enet_prox_ref(w, a, s):
+    """Oracle for kernels.enet_prox."""
+    w32 = w.astype(jnp.float32)
+    return (jnp.sign(w32) * jnp.maximum(a * jnp.abs(w32) - s, 0.0)).astype(w.dtype)

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count locks on first backend init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (16, 16) ("data", "model").
+    Multi-pod: 2 pods x 256 chips as (2, 16, 16) ("pod", "data", "model") —
+    the pod axis carries data parallelism (and optional gradient-compressed
+    all-reduce, dist/compress.py) across the inter-pod DCN/ICI boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(n: int = 1, model: int = 1):
+    """Small debugging mesh over host devices (tests use subprocesses with
+    --xla_force_host_platform_device_count)."""
+    return jax.make_mesh(
+        (n, model), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )

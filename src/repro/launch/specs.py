@@ -1,0 +1,57 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape-cell)
+input — weak-type-correct, shardable, zero allocation.  The dry-run lowers
+against exactly these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ArchConfig, ShapeCell, get_arch
+from repro.models import build, make_prefill_batch_specs, make_train_batch_specs, param_shapes
+from repro.train.train_step import state_shapes
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """Returns {"kind", "fn_inputs": tuple of SDS trees} for the cell's step
+    function (train_step / prefill / decode), plus the pieces needed to build
+    shardings."""
+    return cell_input_specs(get_arch(arch), SHAPES[shape])
+
+
+def cell_input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """As input_specs, but from an explicit (possibly modified) config —
+    used by the scan-calibration variants (analysis/calibrate)."""
+    model = build(cfg)
+    params_sds = param_shapes(model)
+
+    if cell.kind == "train":
+        state_sds = state_shapes(cfg, model, params_sds)
+        batch_sds = make_train_batch_specs(cfg, cell.global_batch, cell.seq_len)
+        return {
+            "kind": "train",
+            "cfg": cfg,
+            "model": model,
+            "fn_inputs": (state_sds, batch_sds),
+        }
+
+    if cell.kind == "prefill":
+        batch_sds = make_prefill_batch_specs(cfg, cell.global_batch, cell.seq_len)
+        return {
+            "kind": "prefill",
+            "cfg": cfg,
+            "model": model,
+            "fn_inputs": (params_sds, batch_sds),
+        }
+
+    # decode: one new token against a seq_len-deep cache
+    cache_sds = model.cache_spec(cell.global_batch, cell.seq_len)
+    token_sds = jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    return {
+        "kind": "decode",
+        "cfg": cfg,
+        "model": model,
+        "fn_inputs": (params_sds, cache_sds, token_sds, pos_sds),
+    }

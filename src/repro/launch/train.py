@@ -1,0 +1,143 @@
+"""End-to-end training driver.
+
+Runs reduced configs on this CPU container end-to-end and full configs on a
+real mesh unchanged (the step function and shardings are the dry-run's).
+
+Fault tolerance model (documented here; exercised in tests/checkpoint):
+  * checkpoint every --ckpt-every steps: atomic dir rename, retention of
+    the last 3; the manifest carries the data cursor (seed, step) and the
+    lazy-regularizer round state, so a killed job resumes bit-identically;
+  * node failure -> restart the job; --resume picks up the newest intact
+    checkpoint (a torn write is impossible by construction);
+  * elastic restart: the checkpoint stores full logical arrays;
+    checkpointer.restore_distributed() re-shards onto any new mesh size
+    (straggler mitigation at the cluster level is re-scheduling + elastic
+    re-mesh: same global batch, different chip count);
+  * the embedding's lazy elastic-net round is flushed before every save so
+    restores never owe cross-round catch-ups.
+
+Usage (CPU-scale):
+  python -m repro.launch.train --arch stablelm_3b --reduced --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.configs import get_arch
+from repro.data import LMDataConfig, SyntheticLMData
+from repro.models import build, init_params
+from repro.train import make_flush_fn, make_init_state, make_train_step
+
+
+def make_batch_fn(cfg, batch_size: int, seq_len: int, seed: int):
+    data = SyntheticLMData(
+        LMDataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len, batch_size=batch_size, seed=seed)
+    )
+
+    def batch_fn(step: int):
+        toks = data.batch(step)
+        out = {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+        if cfg.encdec:
+            rng = np.random.RandomState(step + 7)
+            out["frames"] = jnp.asarray(
+                rng.randn(batch_size, cfg.enc_seq, cfg.d_model).astype(np.float32) * 0.1
+            )
+        if cfg.n_patches:
+            rng = np.random.RandomState(step + 13)
+            out["patches"] = jnp.asarray(
+                rng.randn(batch_size, cfg.n_patches, cfg.d_model).astype(np.float32) * 0.02
+            )
+        return out
+
+    return batch_fn
+
+
+def train(
+    arch: str,
+    *,
+    reduced: bool = True,
+    steps: int = 100,
+    batch_size: int = 4,
+    seq_len: int = 64,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    resume: bool = False,
+    seed: int = 0,
+    log_every: int = 10,
+):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    step_fn = jax.jit(make_train_step(cfg, model), donate_argnums=0)
+    flush_fn = make_flush_fn(cfg)
+    init_fn = make_init_state(cfg, model)
+    batch_fn = make_batch_fn(cfg, batch_size, seq_len, seed)
+
+    start = 0
+    state = None
+    if resume and ckpt_dir:
+        last = checkpointer.latest_step(ckpt_dir)
+        if last is not None:
+            template = jax.eval_shape(init_fn, jax.eval_shape(lambda: init_params(model, seed)))
+            state, manifest = checkpointer.restore(ckpt_dir, last, template)
+            state = jax.tree.map(jnp.asarray, state)
+            start = int(manifest["extra"]["next_step"])
+            print(f"resumed from step {last} (next data step {start})")
+    if state is None:
+        state = init_fn(init_params(model, seed))
+
+    losses = []
+    t0 = time.time()
+    for t in range(start, steps):
+        state, metrics = step_fn(state, batch_fn(t))
+        losses.append(float(metrics["loss"]))
+        if state.lazy is not None and int(state.lazy.i) >= cfg.reg_round_len:
+            state = flush_fn(state)
+        if log_every and (t + 1) % log_every == 0:
+            rate = (t + 1 - start) / (time.time() - t0)
+            print(f"step {t+1}/{steps} loss={losses[-1]:.4f} "
+                  f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.2f} "
+                  f"({rate:.1f} steps/s)", flush=True)
+        if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
+            state = flush_fn(state)  # no cross-round debt inside checkpoints
+            checkpointer.save(ckpt_dir, t + 1, state, extra_meta={"next_step": t + 1, "seed": seed})
+            checkpointer.keep_last(ckpt_dir, 3)
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    _, losses = train(
+        args.arch,
+        reduced=args.reduced,
+        steps=args.steps,
+        batch_size=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        resume=args.resume,
+        seed=args.seed,
+    )
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

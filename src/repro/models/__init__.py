@@ -1,0 +1,10 @@
+from .api import ModelFns, build, init_params, make_prefill_batch_specs, make_train_batch_specs, param_shapes
+
+__all__ = [
+    "ModelFns",
+    "build",
+    "init_params",
+    "make_prefill_batch_specs",
+    "make_train_batch_specs",
+    "param_shapes",
+]

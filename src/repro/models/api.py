@@ -1,0 +1,73 @@
+"""Unified model API: ``build(cfg)`` returns the callables every downstream
+layer (train_step, serve_step, dryrun, examples) consumes, dispatched on the
+architecture family."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import encdec, params as pp, transformer
+
+
+class ModelFns(NamedTuple):
+    cfg: ArchConfig
+    defs: pp.ParamTree
+    loss_fn: Callable  # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable  # (params, batch) -> (last logits, cache)
+    decode_fn: Callable  # (params, cache, token [B], pos) -> (logits, cache)
+    cache_spec: Callable  # (B, prefill_len) -> SDS tree
+
+
+def build(cfg: ArchConfig) -> ModelFns:
+    if cfg.encdec:
+        return ModelFns(
+            cfg=cfg,
+            defs=encdec.encdec_defs(cfg),
+            loss_fn=lambda p, b: encdec.loss_fn(cfg, p, b),
+            prefill_fn=lambda p, b: encdec.prefill(cfg, p, b),
+            decode_fn=lambda p, c, t, pos: encdec.decode_step(cfg, p, c, t, pos),
+            cache_spec=lambda B, n: encdec.cache_spec(cfg, B, n),
+        )
+    return ModelFns(
+        cfg=cfg,
+        defs=transformer.lm_defs(cfg),
+        loss_fn=lambda p, b: transformer.loss_fn(cfg, p, b),
+        prefill_fn=lambda p, b: transformer.prefill(cfg, p, b),
+        decode_fn=lambda p, c, t, pos: transformer.decode_step(cfg, p, c, t, pos),
+        cache_spec=lambda B, n: transformer.cache_spec(cfg, B, n),
+    )
+
+
+def init_params(model: ModelFns, seed: int = 0):
+    dtype = jnp.bfloat16 if model.cfg.param_dtype == "bfloat16" else jnp.float32
+    return pp.init_params(model.defs, jax.random.PRNGKey(seed), param_dtype=dtype)
+
+
+def param_shapes(model: ModelFns):
+    dtype = jnp.bfloat16 if model.cfg.param_dtype == "bfloat16" else jnp.float32
+    return pp.shape_tree(model.defs, param_dtype=dtype)
+
+
+def make_train_batch_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one training batch (dry-run inputs)."""
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.encdec:
+        specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.n_patches:
+        specs["patches"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    return specs
+
+
+def make_prefill_batch_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.encdec:
+        specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.n_patches:
+        specs["patches"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model), jnp.float32)
+    return specs

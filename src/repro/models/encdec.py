@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB: the batch provides precomputed frame
+embeddings ``frames [B, F, d]`` (input_specs does the same for the dry-run).
+Encoder: non-causal self-attention stack over frames.  Decoder: causal
+self-attention + cross-attention to the encoder output.  RoPE stands in for
+Whisper's learned absolute positions so the assigned 4k/32k sequence lengths
+are well-defined (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.dist.api import shard
+from repro.models import layers as ll
+from repro.models import params as pp
+from repro.models.transformer import CACHE_EXTRA, _adtype, _cache_read, _cache_write, _quantize_full
+
+
+def enc_block_defs(cfg: ArchConfig, L: int):
+    return {
+        "norm1": ll.norm_defs(cfg, lead=(L,)),
+        "attn": ll.attn_defs(cfg, L),
+        "norm2": ll.norm_defs(cfg, lead=(L,)),
+        "mlp": ll.mlp_defs(cfg, L),
+    }
+
+
+def dec_block_defs(cfg: ArchConfig, L: int):
+    return {
+        "norm1": ll.norm_defs(cfg, lead=(L,)),
+        "attn": ll.attn_defs(cfg, L),
+        "normx": ll.norm_defs(cfg, lead=(L,)),
+        "xattn": ll.attn_defs(cfg, L, cross=True),
+        "norm2": ll.norm_defs(cfg, lead=(L,)),
+        "mlp": ll.mlp_defs(cfg, L),
+    }
+
+
+def encdec_defs(cfg: ArchConfig) -> pp.ParamTree:
+    return {
+        **ll.embed_defs(cfg),
+        "enc_blocks": enc_block_defs(cfg, cfg.n_enc_layers),
+        "enc_norm": ll.norm_defs(cfg),
+        "dec_blocks": dec_block_defs(cfg, cfg.n_layers),
+        "final_norm": ll.norm_defs(cfg),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames [B, F, d] -> encoder output [B, F, d]."""
+    x = shard(frames.astype(_adtype(cfg)), "batch", None, None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, pl):
+        h = ll.apply_norm(cfg, pl["norm1"], xc)
+        q, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=positions)
+        o = ll.gqa_attention(q, k, v, causal=False)
+        xc = xc + ll.attn_out(pl["attn"], o)
+        h = ll.apply_norm(cfg, pl["norm2"], xc)
+        xc = xc + ll.mlp_apply(cfg, pl["mlp"], h)
+        return shard(xc, "batch", None, None), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    from repro.models.transformer import layer_scan
+    x, _ = layer_scan(cfg, body, x, params["enc_blocks"])
+    return ll.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(cfg, pl, xc, enc_out, positions, *, collect=False):
+    h = ll.apply_norm(cfg, pl["norm1"], xc)
+    q, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=positions)
+    self_kv = (k, v) if collect else None
+    o = ll.gqa_attention(q, k, v, causal=True)
+    xc = xc + ll.attn_out(pl["attn"], o)
+    h = ll.apply_norm(cfg, pl["normx"], xc)
+    qx = jnp.einsum("bsd,dnh->bsnh", h, pl["xattn"]["wq"])
+    kx = jnp.einsum("bfd,dnh->bfnh", enc_out, pl["xattn"]["wk"])
+    vx = jnp.einsum("bfd,dnh->bfnh", enc_out, pl["xattn"]["wv"])
+    cross_kv = (kx, vx) if collect else None
+    ox = ll.gqa_attention(qx, kx, vx, causal=False)
+    xc = xc + ll.attn_out(pl["xattn"], ox)
+    h = ll.apply_norm(cfg, pl["norm2"], xc)
+    xc = xc + ll.mlp_apply(cfg, pl["mlp"], h)
+    return shard(xc, "batch", None, None), (self_kv, cross_kv)
+
+
+def decode_train(cfg: ArchConfig, params, tokens, enc_out, *, collect=False):
+    x = ll.embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, pl):
+        xc, kvs = _dec_block(cfg, pl, xc, enc_out, positions, collect=collect)
+        return xc, kvs if collect else None
+
+    wrapped = jax.checkpoint(body) if (cfg.remat and not collect) else body
+    from repro.models.transformer import layer_scan
+    x, ys = layer_scan(cfg, wrapped, x, params["dec_blocks"])
+    x = ll.apply_norm(cfg, params["final_norm"], x)
+    return ll.logits_out(cfg, params, x), ys
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    enc_out = encode(cfg, params, batch["frames"])
+    logits, _ = decode_train(cfg, params, batch["tokens"], enc_out)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ArchConfig, B: int, prefill_len: int) -> Dict[str, Any]:
+    L, KV, hd, F = cfg.n_layers, cfg.n_kv_heads, cfg.hd, cfg.enc_seq
+    C = prefill_len + CACHE_EXTRA
+    adt = _adtype(cfg)
+    spec = {
+        "cross_k": jax.ShapeDtypeStruct((L, B, F, KV, hd), adt),
+        "cross_v": jax.ShapeDtypeStruct((L, B, F, KV, hd), adt),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        spec.update(
+            k=jax.ShapeDtypeStruct((L, B, C, KV, hd), jnp.int8),
+            k_s=jax.ShapeDtypeStruct((L, B, C, KV, 1), jnp.float32),
+            v=jax.ShapeDtypeStruct((L, B, C, KV, hd), jnp.int8),
+            v_s=jax.ShapeDtypeStruct((L, B, C, KV, 1), jnp.float32),
+        )
+    else:
+        spec.update(
+            k=jax.ShapeDtypeStruct((L, B, C, KV, hd), adt),
+            v=jax.ShapeDtypeStruct((L, B, C, KV, hd), adt),
+        )
+    return spec
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """batch: {"frames": [B,F,d], "tokens": [B,S]} -> (last logits, cache)."""
+    enc_out = encode(cfg, params, batch["frames"])
+    logits, ys = decode_train(cfg, params, batch["tokens"], enc_out, collect=True)
+    (k, v), (kx, vx) = ys  # [L,B,S,KV,hd], [L,B,F,KV,hd]
+    S = batch["tokens"].shape[1]
+    C = S + CACHE_EXTRA
+    pad = [(0, 0), (0, 0), (0, C - S), (0, 0), (0, 0)]
+    cache = _quantize_full(cfg, jnp.pad(k, pad), jnp.pad(v, pad))
+    cache["cross_k"] = kx.astype(_adtype(cfg))
+    cache["cross_v"] = vx.astype(_adtype(cfg))
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, pos):
+    x = ll.embed_tokens(cfg, params, token[:, None])
+    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    C = cache["k"].shape[2]
+    kv_pos = jnp.arange(C, dtype=jnp.int32)
+
+    def body(xc, inp):
+        pl, ck, cv, kx, vx = inp
+        cl = {**ck, **cv}
+        h = ll.apply_norm(cfg, pl["norm1"], xc)
+        q, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=pos_arr)
+        ncl = _cache_write(cfg, cl, k[:, 0], v[:, 0], pos)
+        kf, vf = _cache_read(cfg, ncl, xc.dtype)
+        o = ll.gqa_attention(q, kf, vf, causal=True, q_positions=pos_arr, kv_positions=kv_pos)
+        xc = xc + ll.attn_out(pl["attn"], o)
+        h = ll.apply_norm(cfg, pl["normx"], xc)
+        qx = jnp.einsum("bsd,dnh->bsnh", h, pl["xattn"]["wq"])
+        ox = ll.gqa_attention(qx, kx.astype(xc.dtype), vx.astype(xc.dtype), causal=False)
+        xc = xc + ll.attn_out(pl["xattn"], ox)
+        h = ll.apply_norm(cfg, pl["norm2"], xc)
+        xc = xc + ll.mlp_apply(cfg, pl["mlp"], h)
+        nck = {kk: ncl[kk] for kk in ck}
+        ncv = {kk: ncl[kk] for kk in cv}
+        return xc, (nck, ncv)
+
+    k_keys = {"k"} | ({"k_s"} if cfg.kv_cache_dtype == "int8" else set())
+    v_keys = {"v"} | ({"v_s"} if cfg.kv_cache_dtype == "int8" else set())
+    ck = {kk: cache[kk] for kk in k_keys}
+    cv = {kk: cache[kk] for kk in v_keys}
+    from repro.models.transformer import layer_scan
+    x, (nck, ncv) = layer_scan(cfg, body, x, (params["dec_blocks"], ck, cv, cache["cross_k"], cache["cross_v"]))
+    new_cache = {**nck, **ncv, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    x = ll.apply_norm(cfg, params["final_norm"], x)
+    logits = ll.logits_out(cfg, params, x)[:, 0]
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,247 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (causal / local /
+cross / decode), gated MLPs, embedding utilities, int8 KV quantization.
+
+All functions are pure; parameters arrive as dict leaves declared by the
+``*_defs`` builders (models/params.py), so dry-run lowering never allocates.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.dist.api import shard
+from repro.models import params as pp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_defs(cfg: ArchConfig, lead=()):
+    d = cfg.d_model
+    lead_axes = ("layers",) * len(lead)
+    if cfg.norm == "ln":
+        return {
+            "scale": pp.ones(lead + (d,), lead_axes + ("embed",)),
+            "bias": pp.zeros(lead + (d,), lead_axes + ("embed",)),
+        }
+    return {"scale": pp.ones(lead + (d,), lead_axes + ("embed",))}
+
+
+def apply_norm(cfg: ArchConfig, p, x, eps=None):
+    eps = eps if eps is not None else 1e-5
+    if cfg.norm == "ln":
+        return layer_norm(x, p["scale"], p["bias"], eps)
+    return rms_norm(x, p["scale"], eps)
+
+
+# --------------------------------------------------------------------------
+# RoPE (partial-rotary supported: stablelm rope_pct=0.25)
+# --------------------------------------------------------------------------
+
+
+def apply_rope(x, positions, rope_pct=1.0, theta=10_000.0):
+    """x: [B, S, N, hd]; positions: [S] or [B, S] int32."""
+    hd = x.shape[-1]
+    rot = int(hd * rope_pct) // 2 * 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * freqs  # [S, half] or [B, S, half]
+    if ang.ndim == 2:  # [S, half] -> [1, S, 1, half]
+        ang = ang[None, :, None, :]
+    else:  # [B, S, half] -> [B, S, 1, half]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., :half].astype(jnp.float32), x_rot[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ArchConfig, L: Optional[int] = None, cross: bool = False):
+    """QKV(+bias)/O projections, optionally stacked over a scan 'layers' dim."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    lead = (L,) if L is not None else ()
+    la = ("layers",) if L is not None else ()
+    scale = d**-0.5
+    defs = {
+        "wq": pp.nd(lead + (d, H, hd), la + ("embed", "heads", "head_dim"), scale),
+        "wk": pp.nd(lead + (d, KV, hd), la + ("embed", "kv_heads", "head_dim"), scale),
+        "wv": pp.nd(lead + (d, KV, hd), la + ("embed", "kv_heads", "head_dim"), scale),
+        "wo": pp.nd(lead + (H, hd, d), la + ("heads", "head_dim", "embed"), (H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = pp.zeros(lead + (H, hd), la + ("heads", "head_dim"))
+        defs["bk"] = pp.zeros(lead + (KV, hd), la + ("kv_heads", "head_dim"))
+        defs["bv"] = pp.zeros(lead + (KV, hd), la + ("kv_heads", "head_dim"))
+    return defs
+
+
+def qkv_proj(cfg: ArchConfig, p, x, *, rope_positions=None):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,S,KV,hd] (RoPE applied if positions).
+
+    The activation head dim is explicitly constrained to the model axis
+    ("heads_act"): unlike jit argument shardings, a with_sharding_constraint
+    may shard a non-divisible dim (GSPMD pads), so archs with 36/40 heads
+    still get 16-way tensor-parallel attention instead of 16x-replicated
+    attention FLOPs (EXPERIMENTS.md §Perf, qwen/minicpm iterations)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if rope_positions is not None:
+        q = apply_rope(q, rope_positions, cfg.rope_pct, cfg.rope_theta)
+        k = apply_rope(k, rope_positions, cfg.rope_pct, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads_act", None)
+    k = shard(k, "batch", None, "kv_act", None)
+    v = shard(v, "batch", None, "kv_act", None)
+    return q, k, v
+
+
+def gqa_attention(
+    q,  # [B, Sq, H, hd]
+    k,  # [B, Skv, KV, hd]
+    v,  # [B, Skv, KV, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_positions=None,  # [Sq] int32 absolute positions (decode: [1] = pos)
+    kv_positions=None,  # [Skv] int32
+    kv_valid=None,  # [Skv] bool or [B, Skv] — mask invalid cache slots
+):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(hd)
+    Skv = k.shape[1]
+    if q_positions is None:
+        q_positions = jnp.arange(Sq, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv, dtype=jnp.int32)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kv_positions[None, :] <= q_positions[:, None]
+    if window:
+        mask &= kv_positions[None, :] > q_positions[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if kv_valid is not None:
+        kvm = kv_valid if kv_valid.ndim == 2 else kv_valid[None]
+        logits = jnp.where(kvm[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attn_out(p, o):  # o [B,S,H,hd] -> [B,S,d]
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# gated MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ArchConfig, L: Optional[int] = None, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    lead = (L,) if L is not None else ()
+    la = ("layers",) if L is not None else ()
+    defs = {
+        "wi": pp.nd(lead + (d, f), la + ("embed", "mlp"), d**-0.5),
+        "wo": pp.nd(lead + (f, d), la + ("mlp", "embed"), f**-0.5),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        defs["wg"] = pp.nd(lead + (d, f), la + ("embed", "mlp"), d**-0.5)
+    return defs
+
+
+def mlp_apply(cfg: ArchConfig, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.act == "swiglu":
+        h = h * jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    elif cfg.act == "geglu":
+        h = h * jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# embeddings / logits
+# --------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ArchConfig):
+    defs = {"embedding": pp.nd((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), 1.0)}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = pp.nd((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg.d_model**-0.5)
+    return defs
+
+
+def embed_tokens(cfg: ArchConfig, p, tokens):
+    # scaled like most llama-likes: table init N(0,1), scaled at lookup
+    x = p["embedding"][tokens].astype(jnp.float32) * (cfg.d_model**-0.5)
+    return shard(x.astype(_adtype(cfg)), "batch", None, None)
+
+
+def logits_out(cfg: ArchConfig, p, x):
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(x.dtype) * (cfg.d_model**-0.5)
+        out = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    # "vocab_act": constraint-level sharding pads odd vocab sizes (51865,
+    # 122753, 92553) that the divisibility-gated param rule must replicate
+    return shard(out, "batch", None, "vocab_act")
+
+
+def _adtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# int8 KV-cache quantization (serving memory optimization, DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+
+def kv_quantize(x):
+    """[..., hd] -> (int8 values, f32 scale per leading index)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with scatter-based dispatch.
+
+TPU adaptation (DESIGN.md §7): we avoid the GShard [S,E,C] one-hot dispatch
+einsum — whose FLOPs would exceed the expert GEMMs themselves at kimi-k2
+scale — and instead compute per-token positions with a cumsum ranking over a
+[G, S*K, E] one-hot (int32, memory-cheap per group) followed by a batched
+scatter-add into capacity buffers [G, E, C, d].  Tokens over capacity are
+dropped (standard GShard semantics; capacity_factor controls the drop rate).
+
+Sharding (EXPERIMENTS.md §Perf dbrx iterations): everything carries an
+EXPLICIT group dim G (one group per batch row; a single group at decode) and
+the dispatch buffers are constrained to (G -> data, E -> model).  An earlier
+vmap-based formulation let GSPMD replicate the expert GEMMs across the data
+axis (16x the FLOPs at dbrx scale).  Expert weights are optionally
+all-gathered out of their FSDP (d -> data) layout before the GEMMs — a
+0.4GB/layer weight gather instead of a 56GB/layer activation all-reduce —
+gated on bank size (kimi's 34GB bank stays sharded; its contraction
+partial-sums are 16x smaller once G is properly sharded).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.dist.api import shard
+from repro.models import params as pp
+
+# gather expert banks out of FSDP for the GEMMs when the bank is below this
+WEIGHT_GATHER_MAX_BYTES = 8e9
+
+
+def moe_defs(cfg: ArchConfig, L: Optional[int] = None):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    lead = (L,) if L is not None else ()
+    la = ("layers",) if L is not None else ()
+    defs = {
+        "router": pp.nd(lead + (d, E), la + ("embed", "experts"), d**-0.5),
+        "wi": pp.nd(lead + (E, d, f), la + ("experts", "embed", "mlp"), d**-0.5),
+        "wo": pp.nd(lead + (E, f, d), la + ("experts", "mlp", "embed"), f**-0.5),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        defs["wg"] = pp.nd(lead + (E, d, f), la + ("experts", "embed", "mlp"), d**-0.5)
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        defs["shared_wi"] = pp.nd(lead + (d, fs), la + ("embed", "mlp"), d**-0.5)
+        defs["shared_wg"] = pp.nd(lead + (d, fs), la + ("embed", "mlp"), d**-0.5)
+        defs["shared_wo"] = pp.nd(lead + (fs, d), la + ("mlp", "embed"), fs**-0.5)
+    return defs
+
+
+def capacity(tokens_per_group: int, topk: int, n_experts: int, cf: float) -> int:
+    c = int(math.ceil(tokens_per_group * topk / n_experts * cf))
+    # MXU-align the expert GEMM "token" dim
+    if c >= 128:
+        return ((c + 127) // 128) * 128
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _act(cfg, h, g):
+    if cfg.act == "swiglu":
+        return h * jax.nn.silu(g)
+    if cfg.act == "geglu":
+        return h * jax.nn.gelu(g)
+    return jax.nn.gelu(h)
+
+
+def _bank_bytes(cfg: ArchConfig) -> float:
+    mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+    return cfg.n_experts * cfg.d_model * cfg.d_ff * mats * 2.0  # bf16
+
+
+def moe_apply(cfg: ArchConfig, p, x):
+    """x: [B, S, d] -> ([B, S, d], aux) (+ shared experts)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.topk
+    if S == 1:  # decode: one group over the whole batch
+        xg = x.reshape(1, B, d)
+    else:  # one group per batch row
+        xg = x
+    G, Sg, _ = xg.shape
+    C = capacity(Sg, K, E, cfg.capacity_factor)
+
+    if _bank_bytes(cfg) <= WEIGHT_GATHER_MAX_BYTES:
+        p = dict(p)
+        for kk in ("wi", "wg", "wo"):
+            if kk in p:  # EP-only layout for the GEMMs (weight all-gather)
+                p[kk] = shard(p[kk], "experts", None, None)
+
+    router_logits = jnp.einsum(
+        "gsd,de->gse", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)  # [G, S, K]
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+
+    N = Sg * K
+    flat_e = gate_idx.reshape(G, N)  # [G, N]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [G, N, E]
+    # exclusive running count of earlier slots routed to the same expert
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_own = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]  # [G, N]
+    keep = pos_own < C
+
+    # sort-based dispatch: slot (e, c) is filled by the c-th (stable order)
+    # token routed to expert e.  All data movement is BATCHED GATHERS, which
+    # GSPMD partitions on G — a batched scatter here loses the G sharding and
+    # all-reduces the full buffer (EXPERIMENTS.md §Perf dbrx iteration 2).
+    sort_idx = jnp.argsort(flat_e, axis=1)  # [G, N] stable
+    counts = onehot.sum(axis=1)  # [G, E]
+    offsets = jnp.cumsum(counts, axis=1) - counts  # exclusive per-expert starts
+    c_iota = jnp.arange(C, dtype=jnp.int32)
+    slot_pos = offsets[:, :, None] + c_iota[None, None, :]  # [G, E, C]
+    valid = c_iota[None, None, :] < jnp.minimum(counts[:, :, None], C)
+    slot_sorted = jnp.take_along_axis(
+        sort_idx, jnp.clip(slot_pos, 0, N - 1).reshape(G, E * C), axis=1
+    )  # [G, E*C] slot ids
+    tok_for_slot = slot_sorted // K  # token ids
+    buf = jnp.take_along_axis(xg, tok_for_slot[..., None], axis=1).reshape(G, E, C, d)
+    buf = jnp.where(valid[..., None], buf, 0.0)
+    buf = shard(buf, "batch", "experts", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"])
+    if "wg" in p:
+        h = _act(cfg, h, jnp.einsum("gecd,edf->gecf", buf, p["wg"]))
+    else:
+        h = _act(cfg, h, None)
+    h = shard(h, "batch", "experts", None, None)
+    ob = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    ob = shard(ob, "batch", "experts", None, None)
+
+    # gather back: slot n reads ob[g, flat_e[n], pos_own[n]] (batched gather)
+    slot_idx = flat_e * C + jnp.minimum(pos_own, C - 1)  # [G, N]
+    out_slots = jnp.take_along_axis(
+        ob.reshape(G, E * C, d), slot_idx[..., None], axis=1
+    )  # [G, N, d]
+    out_slots = jnp.where(keep[..., None], out_slots, 0.0)
+    combined = (out_slots * gate_w.reshape(G, Sg * K, 1).astype(out_slots.dtype)).reshape(
+        G, Sg, K, d
+    )
+    out = jnp.sum(combined, axis=2).reshape(B, S, d)
+
+    # load-balance aux (Switch-style) + drop-rate diagnostics
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(onehot.astype(jnp.float32).reshape(G, Sg, K, E).sum(2), axis=(0, 1))
+    aux = {
+        "aux_loss": E * jnp.sum(me * ce),
+        "dropped": jnp.mean(1.0 - keep.astype(jnp.float32)),
+    }
+
+    if cfg.n_shared_experts:
+        hs = jnp.einsum("bsd,df->bsf", x, p["shared_wi"])
+        hs = _act(cfg, hs, jnp.einsum("bsd,df->bsf", x, p["shared_wg"]))
+        out = out + jnp.einsum("bsf,fd->bsd", hs, p["shared_wo"])
+    return out, aux

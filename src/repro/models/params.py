@@ -1,0 +1,127 @@
+"""Parameter-definition system.
+
+Models declare their parameters as a nested dict of :class:`ParamDef` —
+shape, dtype, *logical axes*, and init spec.  From that single declaration we
+derive:
+
+* ``init_params``       — materialized arrays (smoke tests, real training)
+* ``shape_tree``        — ShapeDtypeStructs (dry-run lowering, NO allocation)
+* ``axes_tree``         — logical-axis names per dim (sharding rules)
+
+Logical axis vocabulary (mapped to mesh axes by repro.dist.sharding):
+  "vocab"   embedding rows            "embed"    model width
+  "heads"   q heads                   "kv_heads" k/v heads
+  "head_dim"                          "mlp"      ffn hidden
+  "experts" MoE expert banks          "layers"   scan-stacked (never sharded)
+  "rnn"     recurrent width           "conv"     conv taps
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | constant
+    scale: float = 0.02
+    const: float = 0.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+ParamTree = Dict[str, Any]  # nested dict of ParamDef (or arrays once realized)
+
+
+def _iter_leaves(tree: ParamTree, path=()):  # deterministic order
+    for k in sorted(tree):
+        v = tree[k]
+        if isinstance(v, dict):
+            yield from _iter_leaves(v, path + (k,))
+        else:
+            yield path + (k,), v
+
+
+def map_defs(tree: ParamTree, fn):
+    """Apply fn(path, ParamDef) -> leaf, preserving structure."""
+    if not isinstance(tree, dict):
+        raise TypeError(tree)
+
+    def rec(sub, path):
+        out = {}
+        for k in sorted(sub):
+            v = sub[k]
+            out[k] = rec(v, path + (k,)) if isinstance(v, dict) else fn(path + (k,), v)
+        return out
+
+    return rec(tree, ())
+
+
+def init_params(tree: ParamTree, key: jax.Array, param_dtype=jnp.float32) -> ParamTree:
+    leaves = list(_iter_leaves(tree))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    key_by_path = {path: keys[i] for i, (path, _) in enumerate(leaves)}
+
+    def make(path, d: ParamDef):
+        dtype = param_dtype if d.init in ("normal", "zeros") else d.dtype
+        if d.init == "normal":
+            return (jax.random.normal(key_by_path[path], d.shape, jnp.float32) * d.scale).astype(dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "constant":
+            return jnp.full(d.shape, d.const, d.dtype)
+        raise ValueError(d.init)
+
+    return map_defs(tree, make)
+
+
+def shape_tree(tree: ParamTree, param_dtype=jnp.float32) -> ParamTree:
+    """ShapeDtypeStruct stand-ins — dry-run lowering without allocation."""
+
+    def make(path, d: ParamDef):
+        dtype = param_dtype if d.init in ("normal", "zeros") else d.dtype
+        return jax.ShapeDtypeStruct(d.shape, dtype)
+
+    return map_defs(tree, make)
+
+
+def axes_tree(tree: ParamTree) -> ParamTree:
+    return map_defs(tree, lambda p, d: d.axes)
+
+
+def count_params(tree: ParamTree) -> int:
+    return int(sum(np.prod(d.shape) for _, d in _iter_leaves(tree)))
+
+
+def bytes_params(tree: ParamTree, param_dtype=jnp.float32) -> int:
+    itemsize = jnp.dtype(param_dtype).itemsize
+    return count_params(tree) * itemsize
+
+
+# --- tiny constructors used throughout the model code -----------------------
+
+
+def nd(shape, axes, scale=0.02):
+    return ParamDef(tuple(shape), tuple(axes), init="normal", scale=scale)
+
+
+def zeros(shape, axes):
+    return ParamDef(tuple(shape), tuple(axes), init="zeros")
+
+
+def ones(shape, axes):
+    return ParamDef(tuple(shape), tuple(axes), init="ones")
+
+
+def const(shape, axes, value):
+    return ParamDef(tuple(shape), tuple(axes), init="constant", const=value)

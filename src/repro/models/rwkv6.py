@@ -1,0 +1,216 @@
+"""RWKV-6 "Finch" time-mix (attention-free token mixing with data-dependent
+per-channel decay) and channel-mix blocks.
+
+TPU adaptation (DESIGN.md §4/§7): training uses the *chunked* linear-
+attention form — sequential ``lax.scan`` over chunks of CHUNK tokens with a
+carried [H, K, V] state, closed-form intra-chunk matmuls (MXU-friendly
+[C x C] and [C x K] GEMMs) instead of a length-S sequential scan.  Decode is
+the O(1)-state recurrence:
+
+    out_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+
+Numerical safety: within a chunk we factor decay products as
+``r~_i = r_i * exp(L_{i-1})`` (bounded: L <= 0) and ``k~_j = k_j * exp(-L_j)``
+with log-decay clamped to [-LOGW_CLAMP, -1e-6] and CHUNK=16 so the largest
+exponent is CHUNK*LOGW_CLAMP = 80 < log(f32max) ~ 88.  State-side terms use
+the bounded form ``exp(L_C - L_j) <= 1``.  (Deviation from the reference
+CUDA kernel, which recomputes per-tile in fp64; noted in DESIGN.md.)
+
+Simplification vs the full Finch block: token-shift mixing uses learned
+static lerp coefficients (mu) rather than the 5-way data-dependent ddlerp
+LoRA; the decay itself keeps the data-dependent LoRA (the paper-defining
+feature).  The paper under reproduction contributes the *optimizer*, not
+RWKV internals — noted in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import params as pp
+
+CHUNK = 16
+LOGW_CLAMP = 5.0
+DECAY_LORA = 64
+
+
+def time_mix_defs(cfg: ArchConfig, L: Optional[int] = None):
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    lead = (L,) if L is not None else ()
+    la = ("layers",) if L is not None else ()
+    s = d**-0.5
+    return {
+        "mu_r": pp.const(lead + (d,), la + ("embed",), 0.5),
+        "mu_k": pp.const(lead + (d,), la + ("embed",), 0.5),
+        "mu_v": pp.const(lead + (d,), la + ("embed",), 0.5),
+        "mu_g": pp.const(lead + (d,), la + ("embed",), 0.5),
+        "mu_w": pp.const(lead + (d,), la + ("embed",), 0.5),
+        "wr": pp.nd(lead + (d, H, hd), la + ("embed", "heads", "head_dim"), s),
+        "wk": pp.nd(lead + (d, H, hd), la + ("embed", "heads", "head_dim"), s),
+        "wv": pp.nd(lead + (d, H, hd), la + ("embed", "heads", "head_dim"), s),
+        "wg": pp.nd(lead + (d, H, hd), la + ("embed", "heads", "head_dim"), s),
+        # data-dependent decay LoRA: logw = w_base + tanh(x W1) W2
+        "w_base": pp.const(lead + (H, hd), la + ("heads", "head_dim"), -2.0),
+        "wd1": pp.nd(lead + (d, DECAY_LORA), la + ("embed", None), s),
+        "wd2": pp.nd(lead + (DECAY_LORA, H, hd), la + (None, "heads", "head_dim"), DECAY_LORA**-0.5),
+        "u_bonus": pp.const(lead + (H, hd), la + ("heads", "head_dim"), 0.5),
+        # per-head group-norm on the wkv output
+        "gn_scale": pp.ones(lead + (d,), la + ("embed",)),
+        "gn_bias": pp.zeros(lead + (d,), la + ("embed",)),
+        "wo": pp.nd(lead + (H, hd, d), la + ("heads", "head_dim", "embed"), (H * hd) ** -0.5),
+    }
+
+
+def channel_mix_defs(cfg: ArchConfig, L: Optional[int] = None):
+    d, f = cfg.d_model, cfg.d_ff
+    lead = (L,) if L is not None else ()
+    la = ("layers",) if L is not None else ()
+    return {
+        "mu_k": pp.const(lead + (d,), la + ("embed",), 0.5),
+        "mu_r": pp.const(lead + (d,), la + ("embed",), 0.5),
+        "wk": pp.nd(lead + (d, f), la + ("embed", "mlp"), d**-0.5),
+        "wv": pp.nd(lead + (f, d), la + ("mlp", "embed"), f**-0.5),
+        "wr": pp.nd(lead + (d, d), la + ("embed", None), d**-0.5),
+    }
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def _group_norm_heads(x, scale, bias, H):
+    """x [B,S,H,hd] normalized per head, then affine over flattened d."""
+    B, S, _, hd = x.shape
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, S, H * hd)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rkvgw(cfg: ArchConfig, p, x, xprev):
+    """Project shifted inputs to r, k, v, g, logw heads."""
+    r = jnp.einsum("bsd,dnh->bsnh", _lerp(x, xprev, p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dnh->bsnh", _lerp(x, xprev, p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", _lerp(x, xprev, p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,dnh->bsnh", _lerp(x, xprev, p["mu_g"]), p["wg"])
+    xw = _lerp(x, xprev, p["mu_w"])
+    lora = jnp.einsum("bsr,rnh->bsnh", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["wd1"])), p["wd2"])
+    logw_raw = p["w_base"].astype(jnp.float32)[None, None] + lora.astype(jnp.float32)
+    # decay w = exp(-exp(logw_raw)) in (0,1); clamp for chunked stability
+    logw = -jnp.clip(jnp.exp(logw_raw), 1e-6, LOGW_CLAMP)  # [B,S,H,hd] <= 0
+    return r, k, v, g, logw
+
+
+def _wkv_chunked(r, k, v, logw, u, s0):
+    """Chunked WKV. r/k/v/logw: [B,S,H,hd] (S % CHUNK == 0), u: [H,hd],
+    s0: [B,H,K,V] initial state.  Returns ([B,S,H,hd] outputs, final state)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    nc = S // CHUNK
+    rc = r.reshape(B, nc, CHUNK, H, K).astype(jnp.float32)
+    kc = k.reshape(B, nc, CHUNK, H, K).astype(jnp.float32)
+    vc = v.reshape(B, nc, CHUNK, H, V).astype(jnp.float32)
+    lw = logw.reshape(B, nc, CHUNK, H, K)
+
+    # move chunk axis first for scan
+    rc, kc, vc, lw = (jnp.moveaxis(t, 1, 0) for t in (rc, kc, vc, lw))
+
+    tri_strict = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+
+    def chunk_step(s, inp):
+        rci, kci, vci, lwi = inp  # [B,C,H,*]
+        L = jnp.cumsum(lwi, axis=1)  # inclusive log-decay prefix [B,C,H,K]
+        Lprev = L - lwi
+        r_t = rci * jnp.exp(Lprev)  # bounded (Lprev <= 0)
+        k_t = kci * jnp.exp(-L)  # large but < f32 max given clamps
+        k_hat = kci * jnp.exp(L[:, -1:] - L)  # bounded (suffix decay <= 1)
+        # intra-chunk: A[i,j] = sum_K r~_i k~_j   (j < i strictly)
+        A = jnp.einsum("bihk,bjhk->bhij", r_t, k_t)
+        A = jnp.where(tri_strict[None, None], A, 0.0)
+        o = jnp.einsum("bhij,bjhv->bihv", A, vci)
+        # current-token bonus term: (r_i . u k_i) v_i
+        diag = jnp.einsum("bihk,hk,bihk->bih", rci, u.astype(jnp.float32), kci)
+        o = o + diag[..., None] * vci
+        # inter-chunk: r~_i . s0
+        o = o + jnp.einsum("bihk,bhkv->bihv", r_t, s)
+        # state to end of chunk
+        s_new = jnp.exp(L[:, -1])[..., None] * s + jnp.einsum("bjhk,bjhv->bhkv", k_hat, vci)
+        return s_new, o
+
+    # tiny chunk counts unroll fully: no while loop -> exact HLO cost
+    # accounting for the roofline calibration variants (analysis/calibrate)
+    s_final, outs = jax.lax.scan(
+        chunk_step, s0.astype(jnp.float32), (rc, kc, vc, lw), unroll=nc if nc <= 4 else 1
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, V)
+    return out, s_final
+
+
+def _shift(x, x_init=None):
+    """Token shift: xprev[t] = x[t-1]; first position uses x_init (or 0)."""
+    pad = jnp.zeros_like(x[:, :1]) if x_init is None else x_init[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def time_mix_apply(cfg: ArchConfig, p, x, *, state=None):
+    """Train/prefill path. x: [B,S,d]; S must be a multiple of CHUNK (the
+    caller pads).  state: optional dict carried across calls (prefill) with
+    keys wkv [B,H,K,V] and shift [B,d].  Returns (out, new_state)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xprev = _shift(x, None if state is None else state["shift"])
+    r, k, v, g, logw = _rkvgw(cfg, p, x, xprev)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state["wkv"]
+    pad = (-S) % CHUNK
+    if pad:
+        # pad with state-neutral steps: k=0 (no contribution), logw=0 (a=1,
+        # no decay) — the final state is exactly the state after S real steps
+        padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        rp, kp, vp = (jnp.pad(t, padw) for t in (r, k, v))
+        lwp = jnp.pad(logw, padw)
+        o, s_final = _wkv_chunked(rp, kp, vp, lwp, p["u_bonus"], s0)
+        o = o[:, :S]
+    else:
+        o, s_final = _wkv_chunked(r, k, v, logw, p["u_bonus"], s0)
+    o = _group_norm_heads(o.astype(x.dtype), p["gn_scale"], p["gn_bias"], H)
+    o = o.reshape(B, S, H, hd) * jax.nn.silu(g)
+    out = jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+    new_state = {"wkv": s_final, "shift": x[:, -1]}
+    return out, new_state
+
+
+def time_mix_decode(cfg: ArchConfig, p, x, state):
+    """x: [B,1,d]; state: {"wkv": [B,H,K,V] f32, "shift": [B,d]}."""
+    B, _, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xprev = state["shift"][:, None]
+    r, k, v, g, logw = _rkvgw(cfg, p, x, xprev)
+    r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # [B,H,hd]
+    w1 = jnp.exp(logw[:, 0])  # [B,H,K]
+    s = state["wkv"]
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    o = jnp.einsum("bhk,bhkv->bhv", r1, s + p["u_bonus"].astype(jnp.float32)[None, ..., None] * kv)
+    s_new = w1[..., None] * s + kv
+    o = _group_norm_heads(o[:, None].astype(x.dtype), p["gn_scale"], p["gn_bias"], H)
+    o = o.reshape(B, 1, H, hd) * jax.nn.silu(g)
+    out = jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+    return out, {"wkv": s_new, "shift": x[:, 0]}
+
+
+def channel_mix_apply(cfg: ArchConfig, p, x, *, state=None):
+    """RWKV FFN with token shift. Returns (out, new_shift [B,d])."""
+    xprev = _shift(x, None if state is None else state)
+    kx = _lerp(x, xprev, p["mu_k"])
+    rx = _lerp(x, xprev, p["mu_r"])
+    k = jnp.einsum("bsd,df->bsf", kx, p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", rx, p["wr"]))
+    return r * v, x[:, -1]

@@ -1,0 +1,583 @@
+"""Decoder LM covering the dense / MoE / VLM / SSM (rwkv6) / hybrid (rglru)
+families: parameter declarations, train forward+loss, prefill, and KV-cache /
+state decode — all scan-over-layers (small HLO, fast compile at 88 layers)
+and remat-able.
+
+Batch contracts
+---------------
+train:   {"tokens": [B,S] int32, "labels": [B,S] int32}
+         (+ "patches": [B,P,d] for vlm — stub frontend embeddings)
+prefill: {"tokens": [B,S] int32} (+ "patches")
+decode:  token [B] int32, pos scalar int32, cache (see cache_spec)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.dist.api import shard
+from repro.models import layers as ll
+from repro.models import moe as moe_mod
+from repro.models import params as pp
+from repro.models import rglru as rg
+from repro.models import rwkv6 as rwkv
+
+MOE_AUX_COEF = 0.01
+# decode head-room beyond the prefilled length; 16 keeps the cache-length dim
+# divisible by the 16-way model axis so it can be sequence-sharded
+CACHE_EXTRA = 16
+
+
+# ===========================================================================
+# parameter declarations
+# ===========================================================================
+
+
+def attn_family_block_defs(cfg: ArchConfig, L: int) -> Dict[str, Any]:
+    defs = {
+        "norm1": ll.norm_defs(cfg, lead=(L,)),
+        "attn": ll.attn_defs(cfg, L),
+        "norm2": ll.norm_defs(cfg, lead=(L,)),
+    }
+    if cfg.n_experts:
+        defs["moe"] = moe_mod.moe_defs(cfg, L)
+    else:
+        defs["mlp"] = ll.mlp_defs(cfg, L)
+    return defs
+
+
+def rwkv_block_defs(cfg: ArchConfig, L: int) -> Dict[str, Any]:
+    return {
+        "norm1": ll.norm_defs(cfg, lead=(L,)),
+        "tmix": rwkv.time_mix_defs(cfg, L),
+        "norm2": ll.norm_defs(cfg, lead=(L,)),
+        "cmix": rwkv.channel_mix_defs(cfg, L),
+    }
+
+
+def _rg_mixer_defs(cfg: ArchConfig, L: int, kind: str) -> Dict[str, Any]:
+    if kind == "rec":
+        mixer = rg.rglru_defs(cfg, L)
+    else:
+        mixer = ll.attn_defs(cfg, L)
+    return {
+        "norm1": ll.norm_defs(cfg, lead=(L,)),
+        "mixer": mixer,
+        "norm2": ll.norm_defs(cfg, lead=(L,)),
+        "mlp": ll.mlp_defs(cfg, L),
+    }
+
+
+def rg_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_groups of [rec, rec, attn], n_tail_rec_layers)."""
+    return cfg.n_layers // 3, cfg.n_layers % 3
+
+
+def lm_defs(cfg: ArchConfig) -> pp.ParamTree:
+    defs: Dict[str, Any] = dict(ll.embed_defs(cfg))
+    if cfg.attn_free:
+        defs["ln0"] = ll.norm_defs(cfg)  # rwkv input LN
+        defs["blocks"] = rwkv_block_defs(cfg, cfg.n_layers)
+    elif cfg.rglru:
+        G, T = rg_layout(cfg)
+        defs["groups"] = {
+            "rec1": _rg_mixer_defs(cfg, G, "rec"),
+            "rec2": _rg_mixer_defs(cfg, G, "rec"),
+            "attn": _rg_mixer_defs(cfg, G, "attn"),
+        }
+        for t in range(T):
+            defs[f"tail{t}"] = _rg_mixer_defs(cfg, 1, "rec")
+    else:
+        defs["blocks"] = attn_family_block_defs(cfg, cfg.n_layers)
+    defs["final_norm"] = ll.norm_defs(cfg)
+    return defs
+
+
+# ===========================================================================
+# train / prefill forward (full-sequence)
+# ===========================================================================
+
+
+def _res_shard(cfg: ArchConfig, x):
+    """Residual-stream activation constraint between blocks: batch over DP,
+    and (with cfg.seq_parallel) sequence over the model axis — Megatron-SP:
+    the scan's saved per-layer carries shrink by the model-axis size."""
+    return shard(x, "batch", "seq_sp" if cfg.seq_parallel else None, None)
+
+
+def _attn_block(cfg: ArchConfig, p, x, positions, *, window=0):
+    h = ll.apply_norm(cfg, p["norm1"], x)
+    q, k, v = ll.qkv_proj(cfg, p["attn"], h, rope_positions=positions)
+    o = ll.gqa_attention(q, k, v, causal=True, window=window)
+    x = x + ll.attn_out(p["attn"], o)
+    h = ll.apply_norm(cfg, p["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        mo, a = moe_mod.moe_apply(cfg, p["moe"], h)
+        x = x + mo
+        aux = a["aux_loss"]
+    else:
+        x = x + ll.mlp_apply(cfg, p["mlp"], h)
+    return _res_shard(cfg, x), aux
+
+
+def _rwkv_block(cfg: ArchConfig, p, x, *, tstate=None, cstate=None):
+    h = ll.apply_norm(cfg, p["norm1"], x)
+    o, new_t = rwkv.time_mix_apply(cfg, p["tmix"], h, state=tstate)
+    x = x + o
+    h = ll.apply_norm(cfg, p["norm2"], x)
+    o, new_c = rwkv.channel_mix_apply(cfg, p["cmix"], h, state=cstate)
+    x = x + o
+    return _res_shard(cfg, x), new_t, new_c
+
+
+def _rg_block(cfg: ArchConfig, p, x, positions, kind, *, state=None):
+    """One Griffin residual block: mixer (+MLP).  Returns (x, new_state)."""
+    h = ll.apply_norm(cfg, p["norm1"], x)
+    if kind == "rec":
+        o, new_state = rg.rglru_apply(cfg, p["mixer"], h, state=state)
+    else:
+        q, k, v = ll.qkv_proj(cfg, p["mixer"], h, rope_positions=positions)
+        o = ll.gqa_attention(q, k, v, causal=True, window=cfg.window)
+        o = ll.attn_out(p["mixer"], o)
+        new_state = (k, v)  # prefill collects these for the window cache
+    x = x + o
+    h = ll.apply_norm(cfg, p["norm2"], x)
+    x = x + ll.mlp_apply(cfg, p["mlp"], h)
+    return _res_shard(cfg, x), new_state
+
+
+def _maybe_remat(cfg: ArchConfig, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def layer_scan(cfg: ArchConfig, body, carry, xs):
+    """lax.scan over stacked layers, or an inlined python loop when
+    cfg.unroll_layers (scan-calibrated cost accounting — XLA counts a while
+    body once regardless of trip count; see analysis/calibrate)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys_all = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, ys = body(carry, x_i)
+        ys_all.append(ys)
+    if ys_all and ys_all[0] is not None:
+        stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ys_all)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def forward(cfg: ArchConfig, params, tokens, *, extra_embeds=None, collect_states=False):
+    """Full-sequence forward.  Returns (logits [B,S_total,V], aux, states).
+
+    states is None unless collect_states (prefill needs per-layer kv/rnn
+    states to seed the decode cache)."""
+    x = ll.embed_tokens(cfg, params, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x, aux_total, states = _trunk(cfg, params, x, collect_states=collect_states)
+    logits = ll.logits_out(cfg, params, x)
+    return logits, aux_total, states
+
+
+def _trunk(cfg: ArchConfig, params, x, *, collect_states=False):
+    """Blocks + final norm over embedded inputs: [B,S,d] -> [B,S,d]."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+    states = None
+
+    if cfg.attn_free:
+        x = ll.apply_norm(cfg, params["ln0"], x)
+
+        def body(carry, pl):
+            xc = carry
+            xo, t, c = _rwkv_block(cfg, pl, xc)
+            ys = (t, c) if collect_states else None
+            return xo, ys
+
+        x, ys = layer_scan(cfg, _maybe_remat(cfg, body), x, params["blocks"])
+        if collect_states:
+            states = {"tmix": ys[0], "cmix": ys[1]}
+
+    elif cfg.rglru:
+        G, T = rg_layout(cfg)
+
+        def gbody(carry, pl):
+            xc, pos = carry
+            xc, s1 = _rg_block(cfg, pl["rec1"], xc, pos, "rec")
+            xc, s2 = _rg_block(cfg, pl["rec2"], xc, pos, "rec")
+            xc, sa = _rg_block(cfg, pl["attn"], xc, pos, "attn")
+            ys = (s1, s2, sa) if collect_states else None
+            return (xc, pos), ys
+
+        (x, _), ys = layer_scan(cfg, _maybe_remat(cfg, gbody), (x, positions), params["groups"])
+        tail_states = []
+        for t in range(T):
+            pl = jax.tree.map(lambda a: a[0], params[f"tail{t}"])
+            x, st = _rg_block(cfg, pl, x, positions, "rec")
+            tail_states.append(st)
+        if collect_states:
+            states = {"groups": ys, "tails": tail_states}
+
+    else:
+
+        def body(carry, pl):
+            xc, aux = carry
+            xo, a = _attn_block(cfg, pl, xc, positions, window=cfg.window)
+            ys = None
+            if collect_states:
+                # re-project k/v for the cache (cheap relative to the block)
+                h = ll.apply_norm(cfg, pl["norm1"], xc)
+                _, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=positions)
+                ys = (k, v)
+            return (xo, aux + a), ys
+
+        (x, aux_total), ys = layer_scan(cfg, _maybe_remat(cfg, body), (x, aux_total), params["blocks"])
+        if collect_states:
+            states = {"kv": ys}
+
+    x = ll.apply_norm(cfg, params["final_norm"], x)
+    return x, aux_total, states
+
+
+def _ce_from_logits(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    extra = batch.get("patches")
+
+    if cfg.ce_chunks > 1:
+        # chunked CE (EXPERIMENTS.md §Perf): the [tokens, vocab] logits of
+        # big-vocab archs (40GB f32 at qwen's 152k vocab) never materialize;
+        # each chunk projects + reduces under remat.  Python-unrolled so the
+        # scan-calibrated cost accounting stays exact.
+        x = ll.embed_tokens(cfg, params, tokens)
+        if extra is not None:
+            x = jnp.concatenate([extra.astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        # run the trunk on the embedded sequence
+        h, aux, _ = _trunk(cfg, params, x)
+        if extra is not None:
+            h = h[:, extra.shape[1] :]
+        n_tok = h.shape[1]
+        chunk = -(-n_tok // cfg.ce_chunks)
+
+        @jax.checkpoint
+        def chunk_ce(hc, lc):
+            return _ce_from_logits(ll.logits_out(cfg, params, hc), lc)
+
+        total_ce = jnp.zeros((), jnp.float32)
+        for c in range(cfg.ce_chunks):
+            lo = c * chunk
+            hi = min(lo + chunk, n_tok)
+            if lo >= n_tok:
+                break
+            total_ce = total_ce + chunk_ce(h[:, lo:hi], labels[:, lo:hi])
+        ce = total_ce / (B * n_tok)
+    else:
+        logits, aux, _ = forward(cfg, params, tokens, extra_embeds=extra)
+        if extra is not None:
+            logits = logits[:, extra.shape[1] :]
+        ce = _ce_from_logits(logits, labels) / (labels.shape[0] * labels.shape[1])
+    total = ce + MOE_AUX_COEF * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ===========================================================================
+# KV / state caches
+# ===========================================================================
+
+
+def _adtype(cfg):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def _kv_cache_defs(cfg: ArchConfig, L: int, B: int, C: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    shape = (L, B, C, KV, hd)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "k_s": jax.ShapeDtypeStruct((L, B, C, KV, 1), jnp.float32),
+            "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v_s": jax.ShapeDtypeStruct((L, B, C, KV, 1), jnp.float32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(shape, _adtype(cfg)),
+        "v": jax.ShapeDtypeStruct(shape, _adtype(cfg)),
+    }
+
+
+def cache_spec(cfg: ArchConfig, B: int, prefill_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the decode cache (dry-run inputs)."""
+    C = prefill_len + CACHE_EXTRA
+    if cfg.attn_free:
+        H, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+        L = cfg.n_layers
+        return {
+            "wkv": jax.ShapeDtypeStruct((L, B, H, hd, hd), jnp.float32),
+            "shift_t": jax.ShapeDtypeStruct((L, B, d), _adtype(cfg)),
+            "shift_c": jax.ShapeDtypeStruct((L, B, d), _adtype(cfg)),
+        }
+    if cfg.rglru:
+        G, T = rg_layout(cfg)
+        dr, cw = cfg.d_rnn, cfg.conv_width
+        W = min(cfg.window, prefill_len + CACHE_EXTRA)  # ring (== prefill's choice)
+        spec: Dict[str, Any] = {}
+        for name, lead in [("g", G)] + [(f"t{t}", 1) for t in range(T)]:
+            spec[f"{name}_rec1"] = {
+                "h": jax.ShapeDtypeStruct((lead, B, dr), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((lead, B, cw - 1, dr), _adtype(cfg)),
+            }
+            spec[f"{name}_rec2"] = {
+                "h": jax.ShapeDtypeStruct((lead, B, dr), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((lead, B, cw - 1, dr), _adtype(cfg)),
+            }
+        spec["g_attn"] = dict(
+            _kv_cache_defs(cfg, G, B, W),
+            apos=jax.ShapeDtypeStruct((G, W), jnp.int32),
+        )
+        return spec
+    L = cfg.n_layers
+    return _kv_cache_defs(cfg, L, B, C)
+
+
+def cache_init(cfg: ArchConfig, B: int, prefill_len: int):
+    """Zero-initialized cache (apos = -1 marks empty window slots)."""
+
+    def mk(sds):
+        if sds.dtype == jnp.int32:
+            return jnp.full(sds.shape, -1, sds.dtype)
+        return jnp.zeros(sds.shape, sds.dtype)
+
+    return jax.tree.map(mk, cache_spec(cfg, B, prefill_len))
+
+
+def _cache_write(cfg, cl, k_new, v_new, slot):
+    """cl: one layer's cache slices {k,v[,k_s,v_s]} [B,C,KV,hd];
+    k_new/v_new: [B,KV,hd]; slot: scalar int32."""
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = ll.kv_quantize(k_new)
+        vq, vs = ll.kv_quantize(v_new)
+        return {
+            "k": cl["k"].at[:, slot].set(kq),
+            "k_s": cl["k_s"].at[:, slot].set(ks),
+            "v": cl["v"].at[:, slot].set(vq),
+            "v_s": cl["v_s"].at[:, slot].set(vs),
+        }
+    return {
+        "k": cl["k"].at[:, slot].set(k_new.astype(cl["k"].dtype)),
+        "v": cl["v"].at[:, slot].set(v_new.astype(cl["v"].dtype)),
+    }
+
+
+def _cache_read(cfg, cl, dtype):
+    if cfg.kv_cache_dtype == "int8":
+        return (
+            ll.kv_dequantize(cl["k"], cl["k_s"], dtype),
+            ll.kv_dequantize(cl["v"], cl["v_s"], dtype),
+        )
+    return cl["k"].astype(dtype), cl["v"].astype(dtype)
+
+
+def _quantize_full(cfg, k, v):
+    """Prefill-path cache fill: k/v [L,B,C,KV,hd] -> cache dict."""
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = ll.kv_quantize(k)
+        vq, vs = ll.kv_quantize(v)
+        return {"k": kq, "k_s": ks, "v": vq, "v_s": vs}
+    return {"k": k.astype(_adtype(cfg)), "v": v.astype(_adtype(cfg))}
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+
+def prefill(cfg: ArchConfig, params, batch):
+    """Returns (last-position logits [B,V], cache ready for decode at
+    pos = prompt_len)."""
+    tokens = batch["tokens"]
+    extra = batch.get("patches")
+    B, S = tokens.shape
+    P = extra.shape[1] if extra is not None else 0
+    total = S + P
+    logits, _, states = forward(cfg, params, tokens, extra_embeds=extra, collect_states=True)
+    last = logits[:, -1]
+
+    if cfg.attn_free:
+        cache = {
+            "wkv": states["tmix"]["wkv"],
+            "shift_t": states["tmix"]["shift"],
+            "shift_c": states["cmix"],
+        }
+        return last, cache
+
+    if cfg.rglru:
+        G, T = rg_layout(cfg)
+        W = min(cfg.window, total + CACHE_EXTRA)
+        s1, s2, sa = states["groups"]
+        cache: Dict[str, Any] = {}
+        cache["g_rec1"] = {"h": s1["h"], "conv": s1["conv"].astype(_adtype(cfg))}
+        cache["g_rec2"] = {"h": s2["h"], "conv": s2["conv"].astype(_adtype(cfg))}
+        k, v = sa  # [G,B,S,KV,hd]
+        if W > total:  # short prompt: left-pad to the ring size
+            padw = [(0, 0), (0, 0), (W - total, 0), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        # keep the last W positions in ring order slot = pos % W
+        pos_keep = jnp.arange(total - W, total, dtype=jnp.int32)
+        kW, vW = k[:, :, -W:], v[:, :, -W:]
+        slots = jnp.mod(pos_keep, W)
+        order = jnp.argsort(slots)
+        kr = jnp.take(kW, order, axis=2)
+        vr = jnp.take(vW, order, axis=2)
+        apos = jnp.broadcast_to(jnp.take(pos_keep, order)[None], (G, W))
+        cache["g_attn"] = dict(_quantize_full(cfg, kr, vr), apos=apos)
+        for t in range(T):
+            st = states["tails"][t]
+            cache[f"t{t}_rec1"] = {
+                "h": st["h"][None],
+                "conv": st["conv"][None].astype(_adtype(cfg)),
+            }
+            # NOTE: tails are single rec blocks; rec2 slot unused but kept for
+            # a uniform spec — zero-filled.
+            cache[f"t{t}_rec2"] = {
+                "h": jnp.zeros_like(st["h"][None]),
+                "conv": jnp.zeros_like(st["conv"][None].astype(_adtype(cfg))),
+            }
+        return last, cache
+
+    k, v = states["kv"]  # [L,B,S,KV,hd]
+    C = total + CACHE_EXTRA
+    pad = [(0, 0), (0, 0), (0, C - k.shape[2]), (0, 0), (0, 0)]
+    cache = _quantize_full(cfg, jnp.pad(k, pad), jnp.pad(v, pad))
+    return last, cache
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, pos):
+    """One token for every sequence.  token: [B] int32; pos: scalar int32
+    (current absolute position = number of tokens already in cache).
+    Returns (logits [B,V], new cache)."""
+    x = ll.embed_tokens(cfg, params, token[:, None])  # [B,1,d]
+    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+
+    if cfg.attn_free:
+        x = ll.apply_norm(cfg, params["ln0"], x)
+
+        def body(xc, inp):
+            pl, wkv, sh_t, sh_c = inp
+            h = ll.apply_norm(cfg, pl["norm1"], xc)
+            o, new_t = rwkv.time_mix_decode(cfg, pl["tmix"], h, {"wkv": wkv, "shift": sh_t})
+            xc = xc + o
+            h = ll.apply_norm(cfg, pl["norm2"], xc)
+            o, new_c = rwkv.channel_mix_apply(cfg, pl["cmix"], h, state=sh_c)
+            xc = xc + o
+            return xc, (new_t["wkv"], new_t["shift"].astype(sh_t.dtype), new_c.astype(sh_c.dtype))
+
+        x, (wkv, sh_t, sh_c) = layer_scan(
+            cfg, body, x, (params["blocks"], cache["wkv"], cache["shift_t"], cache["shift_c"])
+        )
+        new_cache = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+
+    elif cfg.rglru:
+        G, T = rg_layout(cfg)
+        W = cache["g_attn"]["k"].shape[2]
+
+        def rec_step(xc, pl, st):
+            h = ll.apply_norm(cfg, pl["norm1"], xc)
+            o, ns = rg.rglru_decode(cfg, pl["mixer"], h, {"h": st["h"], "conv": st["conv"].astype(xc.dtype)})
+            xc = xc + o
+            h = ll.apply_norm(cfg, pl["norm2"], xc)
+            xc = xc + ll.mlp_apply(cfg, pl["mlp"], h)
+            return xc, {"h": ns["h"], "conv": ns["conv"].astype(st["conv"].dtype)}
+
+        def gbody(xc, inp):
+            pl, c1, c2, ca = inp
+            xc, n1 = rec_step(xc, pl["rec1"], c1)
+            xc, n2 = rec_step(xc, pl["rec2"], c2)
+            # windowed attention layer
+            h = ll.apply_norm(cfg, pl["attn"]["norm1"], xc)
+            q, k, v = ll.qkv_proj(cfg, pl["attn"]["mixer"], h, rope_positions=pos_arr)
+            slot = jnp.mod(pos, W)
+            ca = dict(ca)
+            apos = ca.pop("apos").at[slot].set(pos)
+            ca = _cache_write(cfg, ca, k[:, 0], v[:, 0], slot)
+            kf, vf = _cache_read(cfg, ca, xc.dtype)
+            o = ll.gqa_attention(
+                q, kf, vf, causal=True, window=cfg.window,
+                q_positions=pos_arr, kv_positions=apos, kv_valid=apos >= 0,
+            )
+            xc = xc + ll.attn_out(pl["attn"]["mixer"], o)
+            h = ll.apply_norm(cfg, pl["attn"]["norm2"], xc)
+            xc = xc + ll.mlp_apply(cfg, pl["attn"]["mlp"], h)
+            ca["apos"] = apos
+            return xc, (n1, n2, ca)
+
+        # scan over groups
+        def scan_body(xc, inp):
+            pl, c1, c2, ca = inp
+            xc, (n1, n2, nca) = gbody(xc, (pl, c1, c2, ca))
+            return xc, (n1, n2, nca)
+
+        x, (n1, n2, nca) = layer_scan(
+            cfg, scan_body, x, (params["groups"], cache["g_rec1"], cache["g_rec2"], cache["g_attn"])
+        )
+        new_cache = {"g_rec1": n1, "g_rec2": n2, "g_attn": nca}
+        for t in range(T):
+            pl = jax.tree.map(lambda a: a[0], params[f"tail{t}"])
+            c1 = jax.tree.map(lambda a: a[0], cache[f"t{t}_rec1"])
+            x, nt = rec_step(x, pl, c1)
+            new_cache[f"t{t}_rec1"] = jax.tree.map(lambda a: a[None], nt)
+            new_cache[f"t{t}_rec2"] = cache[f"t{t}_rec2"]
+
+    else:
+        C = cache["k"].shape[2]
+        kv_pos = jnp.arange(C, dtype=jnp.int32)
+
+        def body(carry, inp):
+            xc = carry
+            pl, cl = inp
+            h = ll.apply_norm(cfg, pl["norm1"], xc)
+            q, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=pos_arr)
+            ncl = _cache_write(cfg, cl, k[:, 0], v[:, 0], pos)
+            kf, vf = _cache_read(cfg, ncl, xc.dtype)
+            o = ll.gqa_attention(
+                q, kf, vf, causal=True, window=cfg.window,
+                q_positions=pos_arr, kv_positions=kv_pos,
+            )
+            xc = xc + ll.attn_out(pl["attn"], o)
+            h = ll.apply_norm(cfg, pl["norm2"], xc)
+            if "moe" in pl:
+                mo, _ = moe_mod.moe_apply(cfg, pl["moe"], h)
+                xc = xc + mo
+            else:
+                xc = xc + ll.mlp_apply(cfg, pl["mlp"], h)
+            return xc, ncl
+
+        x, new_cache = layer_scan(cfg, body, x, (params["blocks"], cache))
+
+    x = ll.apply_norm(cfg, params["final_norm"], x)
+    logits = ll.logits_out(cfg, params, x)[:, 0]
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,13 @@
+from . import adafactor, adamw, lazy_rows, sgd
+
+
+def get_optimizer(name: str):
+    """(init, update) pair by config name."""
+    return {
+        "adamw": (adamw.init, adamw.update),
+        "adafactor": (adafactor.init, adafactor.update),
+        "sgdm": (sgd.init, sgd.update),
+    }[name]
+
+
+__all__ = ["adafactor", "adamw", "lazy_rows", "sgd", "get_optimizer"]

@@ -1,0 +1,63 @@
+"""Adafactor (Shazeer & Stern 2018) without momentum: factored second
+moments for >=2-D leaves (row/col RMS), full for 1-D.  The only optimizer
+whose state fits a 1T-parameter MoE on a 512-chip v5e footprint
+(DESIGN.md §7): state is ~(n+m)/(n*m) of AdamW's.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    vr: Any  # row factors (or full v for 1-D leaves)
+    vc: Any  # col factors (or () sentinel)
+    count: jnp.ndarray
+
+
+def _is_factored(p):
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _is_factored(p) else jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) if _is_factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        vr=jax.tree.map(vr, params),
+        vc=jax.tree.map(vc, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def update(params, grads, state: AdafactorState, lr, *, decay=0.8, eps=1e-30, clip=1.0, wd=0.0):
+    count = state.count + 1
+    beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _is_factored(p):
+            vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            r = vr_new / jnp.maximum(jnp.mean(vr_new, axis=-1, keepdims=True), eps)
+            u = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc_new)[..., None, :] + 1e-30)
+        else:
+            vr_new = beta * vr + (1 - beta) * g2
+            vc_new = vc
+            u = g32 / (jnp.sqrt(vr_new) + 1e-30)
+        # RMS update clipping
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if wd and p.ndim >= 2:
+            u = u + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr_new, vc_new
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), AdafactorState(vr=pick(1), vc=pick(2), count=count)

@@ -1,0 +1,50 @@
+"""AdamW (decoupled weight decay), tree-based, f32 moments over bf16 params.
+
+Weight decay is masked off for 1-D leaves (norm scales/biases) — standard
+practice, and it matters here: elastic-net regularization of the embedding
+table is the *paper's* job (optim.lazy_rows), so AdamW never touches it when
+lazy_embedding_reg is active.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def update(params, grads, state: AdamWState, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if p.ndim >= 2:  # decoupled decay, masked off norms/biases
+            u = u + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v, count=count)

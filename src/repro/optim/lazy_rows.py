@@ -1,0 +1,95 @@
+"""The paper's optimizer as a per-subtree transform for row-sparse-gradient
+parameter blocks (embedding tables; optionally MoE expert banks).
+
+Faithful to Algorithm 1's ordering, split in two phases around the forward/
+backward pass:
+
+  begin():  extend the DP caches with eta_t, bring the rows touched by this
+            batch current (all missed elastic-net updates, O(1)/row), mark
+            psi.  The forward pass then reads *current* rows — predictions
+            match the dense-update reference exactly.
+  finish(): apply the SGD loss-gradient step to those rows (their reg for
+            step t itself stays pending, exactly like the linear trainer).
+
+A *flush* (round boundary) brings every row current and rebases the caches.
+
+Note (DESIGN.md §3): with *tied* embeddings the unembedding contribution
+makes the loss gradient dense over the vocab, so the lazy technique does not
+apply — train_step falls back to the trunk optimizer for that leaf.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import dp_caches, lazy_enet
+from repro.core.dp_caches import RegCaches
+
+
+class LazyRowState(NamedTuple):
+    psi: jnp.ndarray  # [rows] int32: reg applied for round-local steps < psi
+    caches: RegCaches  # arrays [round_len + 1]
+    i: jnp.ndarray  # scalar int32 round-local step
+
+
+def init(n_rows: int, round_len: int) -> LazyRowState:
+    return LazyRowState(
+        psi=jnp.zeros((n_rows,), jnp.int32),
+        caches=dp_caches.init_caches(round_len),
+        i=jnp.zeros((), jnp.int32),
+    )
+
+
+def begin(
+    table: jnp.ndarray,  # [rows, d]
+    idx: jnp.ndarray,  # [n] int32 touched rows (duplicates fine: identical writes)
+    state: LazyRowState,
+    eta: jnp.ndarray,
+    *,
+    lam1: float,
+    lam2: float,
+    flavor: str,
+) -> Tuple[jnp.ndarray, LazyRowState]:
+    """Catch touched rows up to the current step; returns (current_table,
+    mid-state).  Run BEFORE the forward pass."""
+    caches = dp_caches.extend(state.caches, state.i, eta, lam2, flavor)
+    w_rows = table[idx].astype(jnp.float32)
+    cur = lazy_enet.catchup(w_rows, state.psi[idx][:, None], state.i, caches, lam1)
+    table_cur = table.at[idx].set(cur.astype(table.dtype))
+    new_psi = state.psi.at[idx].set(state.i)
+    return table_cur, LazyRowState(psi=new_psi, caches=caches, i=state.i)
+
+
+def finish(
+    table_cur: jnp.ndarray,
+    grad: jnp.ndarray,  # dense autodiff grad; only touched rows are read
+    idx: jnp.ndarray,
+    state: LazyRowState,
+    eta: jnp.ndarray,
+) -> Tuple[jnp.ndarray, LazyRowState]:
+    """SGD step on the touched (already-current) rows; advances the round."""
+    g_rows = grad[idx].astype(jnp.float32)
+    new_rows = table_cur[idx].astype(jnp.float32) - eta * g_rows
+    new_table = table_cur.at[idx].set(new_rows.astype(table_cur.dtype))
+    return new_table, LazyRowState(psi=state.psi, caches=state.caches, i=state.i + 1)
+
+
+def flush(table: jnp.ndarray, state: LazyRowState, *, lam1: float, round_len: int):
+    """Bring every row current; rebase the round (O(rows), amortized)."""
+    cur = lazy_enet.catchup(
+        table.astype(jnp.float32), state.psi[:, None], state.i, state.caches, lam1
+    )
+    return cur.astype(table.dtype), init(state.psi.shape[0], round_len)
+
+
+def current_table(table: jnp.ndarray, state: LazyRowState, *, lam1: float) -> jnp.ndarray:
+    """All rows brought current (pure — e.g. for eval/checkpoint export)."""
+    cur = lazy_enet.catchup(table.astype(jnp.float32), state.psi[:, None], state.i, state.caches, lam1)
+    return cur.astype(table.dtype)
+
+
+def row_nnz(table: jnp.ndarray, state: LazyRowState, *, lam1: float) -> jnp.ndarray:
+    """Rows with any surviving weight (model-sparsity statistic)."""
+    cur = current_table(table, state, lam1=lam1)
+    return jnp.sum(jnp.any(jnp.abs(cur) > 0, axis=-1))

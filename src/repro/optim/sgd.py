@@ -1,0 +1,30 @@
+"""SGD with momentum (f32 buffer)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDMState(NamedTuple):
+    mom: Any
+    count: jnp.ndarray
+
+
+def init(params) -> SGDMState:
+    return SGDMState(
+        mom=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def update(params, grads, state: SGDMState, lr, *, beta=0.9, wd=0.0):
+    def upd(p, g, m):
+        m_new = beta * m + g.astype(jnp.float32)
+        u = m_new + (wd * p.astype(jnp.float32) if (wd and p.ndim >= 2) else 0.0)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m_new
+
+    out = jax.tree.map(upd, params, grads, state.mom)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), SGDMState(mom=pick(1), count=state.count + 1)

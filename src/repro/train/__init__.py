@@ -1,0 +1,14 @@
+from .serve_step import generate, make_prefill_step, make_serve_step
+from .train_step import TrainState, lazy_enabled, make_flush_fn, make_init_state, make_train_step, state_shapes
+
+__all__ = [
+    "generate",
+    "make_prefill_step",
+    "make_serve_step",
+    "TrainState",
+    "lazy_enabled",
+    "make_flush_fn",
+    "make_init_state",
+    "make_train_step",
+    "state_shapes",
+]

@@ -1,0 +1,48 @@
+"""Serving steps: batched prefill and single-token decode with greedy or
+temperature sampling.  The decode path is what the decode_* / long_* shape
+cells lower (one new token against a seq_len-deep cache)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.api import ModelFns
+
+
+def make_prefill_step(cfg: ArchConfig, model: ModelFns):
+    def prefill_step(params, batch):
+        last_logits, cache = model.prefill_fn(params, batch)
+        next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        return next_tok, last_logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, model: ModelFns, *, temperature: float = 0.0):
+    def serve_step(params, cache, token, pos, key: Optional[jax.Array] = None):
+        logits, cache = model.decode_fn(params, cache, token, pos)
+        if temperature > 0.0 and key is not None:
+            next_tok = jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return serve_step
+
+
+def generate(cfg: ArchConfig, model: ModelFns, params, batch, n_new: int):
+    """Convenience loop (examples / tests): prefill then greedy-decode
+    n_new tokens.  Python loop — fine at example scale."""
+    prefill = jax.jit(make_prefill_step(cfg, model))
+    step = jax.jit(make_serve_step(cfg, model))
+    tok, _, cache = prefill(params, batch)
+    P = cfg.n_patches if cfg.n_patches else 0
+    pos = batch["tokens"].shape[1] + P
+    out = [tok]
+    for k in range(n_new - 1):
+        tok, _, cache = step(params, cache, tok, jnp.asarray(pos + k, jnp.int32))
+        out.append(tok)
+    return jnp.stack(out, axis=1)  # [B, n_new]

@@ -1,0 +1,202 @@
+"""The training step: loss -> grads (with optional microbatch accumulation)
+-> global-norm clip -> trunk optimizer (AdamW / Adafactor / SGDM) + the
+paper's lazy elastic-net row optimizer on the embedding table.
+
+Ordering is Algorithm-1-faithful: touched embedding rows are brought current
+*before* the forward pass, so predictions equal the dense-regularization
+reference exactly (tests/train/test_lm_lazy_equals_dense.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.api import ModelFns
+from repro.optim import get_optimizer, lazy_rows
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    lazy: Optional[lazy_rows.LazyRowState]  # None when the technique is off
+    step: jnp.ndarray
+
+
+def lazy_enabled(cfg: ArchConfig) -> bool:
+    # tied embeddings -> dense loss grad over the vocab -> technique n/a
+    return bool(cfg.lazy_embedding_reg and not cfg.tie_embeddings)
+
+
+def _split_emb(cfg, tree):
+    if not lazy_enabled(cfg):
+        return tree, None
+    trunk = dict(tree)
+    emb = trunk.pop("embedding")
+    return trunk, emb
+
+
+def _global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def make_init_state(cfg: ArchConfig, model: ModelFns):
+    opt_init, _ = get_optimizer(cfg.optimizer)
+
+    def init_state(params) -> TrainState:
+        trunk, _ = _split_emb(cfg, params)
+        lazy = lazy_rows.init(cfg.vocab_size, cfg.reg_round_len) if lazy_enabled(cfg) else None
+        return TrainState(
+            params=params,
+            opt=opt_init(trunk),
+            lazy=lazy,
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    return init_state
+
+
+def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None):
+    _, opt_update = get_optimizer(cfg.optimizer)
+    sched = cfg.schedule.make()
+    emb_sched = dataclasses.replace(cfg.schedule, eta0=cfg.emb_lr).make()
+    use_lazy = lazy_enabled(cfg)
+    use_compress = bool(
+        cfg.grad_compress_pod and mesh is not None and "pod" in mesh.axis_names and cfg.grad_accum == 1
+    )
+
+    def grads_of(params, batch):
+        if cfg.grad_accum > 1:
+            A = cfg.grad_accum
+            micro = jax.tree.map(lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                (l_acc, a_acc), g_acc = carry
+                (l, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return ((l_acc + l, a_acc + m["aux"]), g_acc), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            ((l, aux), g), _ = jax.lax.scan(acc, ((0.0, 0.0), zero_g), micro)
+            scale = 1.0 / A
+            return (l * scale, {"ce": l * scale, "aux": aux * scale}), jax.tree.map(
+                lambda x: x * scale, g
+            )
+        return jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+
+    if use_compress:
+        # int8 cross-pod gradient all-reduce (dist/compress.py): only the
+        # "pod" axis is manual; data/model stay under GSPMD so the inner
+        # grad computation partitions exactly like the uncompressed path.
+        from jax.sharding import PartitionSpec as P
+
+        from repro.dist.compress import quantized_psum
+
+        n_pods = mesh.shape["pod"]
+        inner = grads_of
+
+        def _strip_pod(rule):
+            if rule == "pod":
+                return None
+            if isinstance(rule, tuple):
+                kept = tuple(r for r in rule if r != "pod")
+                return kept or None
+            return rule
+
+        def pod_local(params, batch):
+            # inside the pod-manual region, activation constraints must not
+            # reference the (now-manual) pod axis
+            from repro.dist import api as dist_api
+
+            ctx = dist_api._current()
+            if ctx is not None:
+                m_, rules_ = ctx
+                rules2 = {k: _strip_pod(v) for k, v in rules_.items()}
+                with dist_api.activate(m_, rules2):
+                    (l, m), g = inner(params, batch)
+            else:
+                (l, m), g = inner(params, batch)
+            g = quantized_psum(g, "pod")
+            g = jax.tree.map(lambda x: (x.astype(jnp.float32) / n_pods).astype(x.dtype), g)
+            l = jax.lax.pmean(l, "pod")
+            m = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), m)
+            return (l, m), g
+
+        def grads_of_compressed(params, batch):
+            return jax.shard_map(
+                pod_local,
+                mesh=mesh,
+                in_specs=(P(), P("pod")),
+                out_specs=((P(), P()), P()),
+                axis_names={"pod"},
+                check_vma=False,
+            )(params, batch)
+
+        grads_of = grads_of_compressed
+
+    def train_step(state: TrainState, batch):
+        eta_emb = emb_sched(state.step)
+        params = state.params
+        mid_lazy = state.lazy
+        if use_lazy:
+            idx = batch["tokens"].reshape(-1)
+            emb_cur, mid_lazy = lazy_rows.begin(
+                params["embedding"], idx, state.lazy, eta_emb,
+                lam1=cfg.lam1, lam2=cfg.lam2, flavor=cfg.reg_flavor,
+            )
+            params = {**params, "embedding": emb_cur}
+
+        (loss, metrics), grads = grads_of(params, batch)
+
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)).astype(jnp.float32)
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+        lr = sched(state.step)
+        trunk_p, emb_p = _split_emb(cfg, params)
+        trunk_g, emb_g = _split_emb(cfg, grads)
+        new_trunk, new_opt = opt_update(trunk_p, trunk_g, state.opt, lr)
+
+        if use_lazy:
+            new_emb, new_lazy = lazy_rows.finish(emb_p, emb_g, idx, mid_lazy, eta_emb)
+            new_params = {**new_trunk, "embedding": new_emb}
+        else:
+            new_params, new_lazy = new_trunk, state.lazy
+
+        out_metrics = {
+            "loss": loss,
+            "ce": metrics["ce"],
+            "aux": metrics["aux"],
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return TrainState(new_params, new_opt, new_lazy, state.step + 1), out_metrics
+
+    return train_step
+
+
+def make_flush_fn(cfg: ArchConfig):
+    """Round-boundary flush of the lazy embedding state (jit separately; the
+    trainer loop calls it every cfg.reg_round_len steps and at checkpoints)."""
+
+    @jax.jit
+    def flush(state: TrainState) -> TrainState:
+        if state.lazy is None:
+            return state
+        emb, lazy = lazy_rows.flush(
+            state.params["embedding"], state.lazy, lam1=cfg.lam1, round_len=cfg.reg_round_len
+        )
+        return TrainState({**state.params, "embedding": emb}, state.opt, lazy, state.step)
+
+    return flush
+
+
+def state_shapes(cfg: ArchConfig, model: ModelFns, params_sds):
+    """ShapeDtypeStruct tree of TrainState — dry-run lowering, no alloc."""
+    init = make_init_state(cfg, model)
+    return jax.eval_shape(init, params_sds)

@@ -1,0 +1,80 @@
+"""Checkpoint/restart fault-tolerance tests: atomic save, exact restore
+(incl. bf16), retention, and the crash-resume == uninterrupted invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.launch.train import train
+
+
+def test_roundtrip_exact(tmp_path):
+    state = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5, "d": jnp.asarray(7, jnp.int32)},
+    }
+    checkpointer.save(tmp_path, 3, state)
+    template = jax.eval_shape(lambda: state)
+    restored, manifest = checkpointer.restore(tmp_path, 3, template)
+    assert manifest["step"] == 3
+    for got, want in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got, np.float32), np.asarray(want, np.float32))
+
+
+def test_latest_and_retention(tmp_path):
+    state = {"x": jnp.zeros((2,))}
+    for s in (1, 5, 9, 12):
+        checkpointer.save(tmp_path, s, state)
+    assert checkpointer.latest_step(tmp_path) == 12
+    checkpointer.keep_last(tmp_path, 2)
+    assert checkpointer.latest_step(tmp_path) == 12
+    assert sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()) == [9, 12]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    checkpointer.save(tmp_path, 1, {"x": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        checkpointer.restore(tmp_path, 1, {"x": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+def test_missing_leaf_rejected(tmp_path):
+    checkpointer.save(tmp_path, 1, {"x": jnp.zeros((4,))})
+    with pytest.raises(KeyError):
+        checkpointer.restore(
+            tmp_path, 1, {"x": jax.ShapeDtypeStruct((4,), jnp.float32), "y": jax.ShapeDtypeStruct((1,), jnp.float32)}
+        )
+
+
+def test_crash_resume_matches_uninterrupted(tmp_path):
+    """Kill-at-step-6 + resume == straight 12-step run (params bitwise-close;
+    data pipeline is counter-seeded, lazy round flushed at save)."""
+    kw = dict(reduced=True, batch_size=2, seq_len=16, seed=3, log_every=0)
+    # uninterrupted — but checkpoint at the same cadence, since a flush (an
+    # exact no-op semantically) happens at each save
+    s_full, l_full = train(
+        "stablelm_3b", steps=12, ckpt_dir=str(tmp_path / "full"), ckpt_every=6, **kw
+    )
+    # crashed run: stop after 6
+    train("stablelm_3b", steps=6, ckpt_dir=str(tmp_path / "crash"), ckpt_every=6, **kw)
+    # resume to 12
+    s_res, l_res = train(
+        "stablelm_3b", steps=12, ckpt_dir=str(tmp_path / "crash"), ckpt_every=6, resume=True, **kw
+    )
+    np.testing.assert_allclose(l_full[6:], l_res, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(s_full.params), jax.tree.leaves(s_res.params)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_atomicity_torn_write_invisible(tmp_path):
+    """A tmp dir from a crashed save must not be visible as a checkpoint."""
+    state = {"x": jnp.zeros((2,))}
+    checkpointer.save(tmp_path, 4, state)
+    # simulate a torn write
+    torn = tmp_path / ".tmp_step_00000009_999"
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"garbage")
+    assert checkpointer.latest_step(tmp_path) == 4

@@ -1,0 +1,11 @@
+# NOTE: deliberately NO XLA_FLAGS / device-count manipulation here.
+# Smoke tests and benches must see the single real CPU device; only
+# src/repro/launch/dryrun.py (run as its own process) forces 512 host
+# devices, and multi-device unit tests spawn subprocesses (tests/dist).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

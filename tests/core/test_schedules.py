@@ -1,0 +1,50 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ScheduleConfig, validate_schedule
+from repro.core.schedules import constant, inv_sqrt, inv_t, wsd
+
+
+def test_constant():
+    s = constant(0.25)
+    assert float(s(jnp.asarray(0))) == 0.25
+    assert float(s(jnp.asarray(10**6))) == 0.25
+
+
+def test_inv_t_harmonic():
+    s = inv_t(1.0, t0=1.0)
+    np.testing.assert_allclose(float(s(jnp.asarray(0))), 1.0)
+    np.testing.assert_allclose(float(s(jnp.asarray(1))), 0.5)
+    np.testing.assert_allclose(float(s(jnp.asarray(9))), 0.1)
+
+
+def test_inv_sqrt():
+    s = inv_sqrt(1.0, t0=1.0)
+    np.testing.assert_allclose(float(s(jnp.asarray(3))), 0.5)
+
+
+def test_wsd_shape():
+    s = wsd(1.0, warmup_steps=10, stable_steps=20, decay_steps=10, min_ratio=0.1)
+    etas = np.array([float(s(jnp.asarray(t))) for t in range(50)])
+    assert etas[0] == pytest.approx(0.1)  # first warmup step
+    assert etas[9] == pytest.approx(1.0)
+    assert np.all(etas[10:30] == pytest.approx(1.0))
+    assert etas[49] == pytest.approx(0.1)
+    assert np.all(np.diff(etas[30:40]) < 0)
+
+
+def test_validate_schedule_rejects_divergent_sgd():
+    cfg = ScheduleConfig(kind="constant", eta0=10.0)
+    with pytest.raises(ValueError):
+        validate_schedule(cfg.make(), lam2=0.5, flavor="sgd", horizon=100)
+    # fobos has no constraint
+    validate_schedule(cfg.make(), lam2=0.5, flavor="fobos", horizon=100)
+
+
+def test_schedule_config_roundtrip():
+    for kind in ["constant", "inv_t", "inv_sqrt", "wsd"]:
+        cfg = ScheduleConfig(kind=kind, eta0=0.3, warmup_steps=2, stable_steps=2, decay_steps=2)
+        s = cfg.make()
+        v = float(s(jnp.asarray(5)))
+        assert 0 < v <= 0.3 + 1e-6

@@ -1,0 +1,57 @@
+import numpy as np
+
+from repro.core import LinearConfig, ScheduleConfig, init_state, make_round_fn, nnz, current_weights
+from repro.data import BowConfig, SyntheticBow
+
+
+def small_cfg(**kw):
+    return BowConfig(dim=5000, p_max=32, p_mean=12.0, n_informative=64, informative_pool=512, **kw)
+
+
+def test_stats_match_config():
+    ds = SyntheticBow(small_cfg())
+    mean_nnz, bal = ds.stats_sample(2048)
+    assert abs(mean_nnz - 12.0) < 1.0
+    assert 0.2 < bal < 0.8
+
+
+def test_medline_scale_stats():
+    """Paper stats: d=260,941 and p ~= 88.54 (within padding clip)."""
+    ds = SyntheticBow(BowConfig())
+    b = ds.sample_round(0, 1, 512)
+    assert int(np.max(np.asarray(b.idx))) < 260_941
+    mean_nnz = float(np.mean(np.sum(np.asarray(b.val) > 0, axis=-1)))
+    assert abs(mean_nnz - 88.54) < 3.0
+
+
+def test_deterministic_rounds():
+    ds1, ds2 = SyntheticBow(small_cfg()), SyntheticBow(small_cfg())
+    b1, b2 = ds1.sample_round(7, 2, 3), ds2.sample_round(7, 2, 3)
+    np.testing.assert_array_equal(np.asarray(b1.idx), np.asarray(b2.idx))
+    np.testing.assert_array_equal(np.asarray(b1.val), np.asarray(b2.val))
+    b3 = ds1.sample_round(8, 2, 3)
+    assert not np.array_equal(np.asarray(b1.idx), np.asarray(b3.idx))
+
+
+def test_lazy_training_learns_and_sparsifies():
+    """End-to-end: lazy FoBoS elastic net on synthetic BoW decreases loss and
+    keeps the model sparse (the paper's reason to use elastic net)."""
+    ds = SyntheticBow(small_cfg())
+    cfg = LinearConfig(
+        dim=5000,
+        flavor="fobos",
+        lam1=2e-4,
+        lam2=1e-4,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.5, t0=100.0),
+        round_len=128,
+    )
+    round_fn = make_round_fn(cfg, "lazy")
+    state = init_state(cfg)
+    losses = []
+    for r in range(6):
+        state, ls = round_fn(state, ds.sample_round(r, 128, 4))
+        losses.append(float(np.mean(np.asarray(ls))))
+    assert losses[-1] < losses[0] * 0.85, losses
+    n_nonzero = int(nnz(cfg, state))
+    assert 0 < n_nonzero < 5000  # regularization keeps it sparse
+    assert not np.any(np.isnan(np.asarray(current_weights(cfg, state))))

@@ -1,0 +1,45 @@
+"""Shape/dtype sweep of the enet_prox Pallas kernel vs the jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import enet_prox
+from repro.kernels.ref import enet_prox_ref
+
+SHAPES = [(2048,), (100,), (1,), (8, 256), (3, 7, 11), (260_941,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_enet_prox_vs_ref(shape, dtype, rng):
+    w = jnp.asarray(rng.uniform(-2, 2, size=shape), dtype)
+    a = jnp.asarray(0.93, jnp.float32)
+    s = jnp.asarray(0.05, jnp.float32)
+    out = enet_prox(w, a, s, interpret=True)
+    ref = enet_prox_ref(w, a, s)
+    assert out.shape == shape and out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    a=st.floats(0.0, 1.5),
+    s=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_enet_prox_property(n, a, s, seed):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.uniform(-3, 3, size=(n,)), jnp.float32)
+    out = np.asarray(enet_prox(w, jnp.asarray(a), jnp.asarray(s), interpret=True))
+    ref = np.asarray(enet_prox_ref(w, jnp.asarray(a), jnp.asarray(s)))
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-7)
+    # shrinkage properties: |out| <= a*|w|, sign preserved or zeroed
+    assert np.all(np.abs(out) <= a * np.abs(np.asarray(w)) + 1e-6)
+    assert np.all((out == 0) | (np.sign(out) == np.sign(np.asarray(w))))

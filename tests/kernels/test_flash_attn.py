@@ -1,0 +1,66 @@
+"""Flash-attention Pallas kernel vs the pure-jnp GQA oracle: shape/dtype/
+causality/GQA-ratio sweeps in interpret mode, including the decode case
+(Sq=1 with a position offset)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention
+from repro.models.layers import gqa_attention
+
+
+def _oracle(q, k, v, causal, q_offset=0):
+    # layers.gqa_attention expects [B, S, H, hd]
+    Sq = q.shape[2]
+    Skv = k.shape[2]
+    out = gqa_attention(
+        jnp.moveaxis(q, 1, 2),
+        jnp.moveaxis(k, 1, 2),
+        jnp.moveaxis(v, 1, 2),
+        causal=causal,
+        q_positions=jnp.arange(Sq, dtype=jnp.int32) + q_offset,
+        kv_positions=jnp.arange(Skv, dtype=jnp.int32),
+    )
+    return jnp.moveaxis(out, 1, 2)
+
+
+CASES = [
+    # (B, H, KV, Sq, Skv, hd, causal)
+    (1, 4, 4, 128, 128, 64, True),
+    (2, 4, 2, 128, 256, 64, True),  # GQA 2:1
+    (1, 8, 1, 64, 192, 128, True),  # MQA, ragged Sq
+    (2, 4, 4, 100, 100, 64, False),  # non-causal, ragged both
+    (2, 8, 2, 1, 333, 64, True),  # decode: one token, ragged cache
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_oracle(case, dtype, rng):
+    B, H, KV, Sq, Skv, hd, causal = case
+    q = jnp.asarray(rng.randn(B, H, Sq, hd), dtype)
+    k = jnp.asarray(rng.randn(B, KV, Skv, hd), dtype)
+    v = jnp.asarray(rng.randn(B, KV, Skv, hd), dtype)
+    q_off = Skv - Sq if causal else 0  # decode/prefill-tail semantics
+    got = flash_attention(
+        q, k, v, q_off, causal=causal, block_q=64, block_k=64, interpret=True
+    )
+    want = _oracle(q, k, v, causal, q_off)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
+    )
+    assert got.dtype == dtype and got.shape == (B, H, Sq, hd)
+
+
+def test_block_shape_invariance(rng):
+    q = jnp.asarray(rng.randn(1, 4, 96, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 160, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 160, 64), jnp.float32)
+    ref = None
+    for bq, bk in [(32, 32), (64, 32), (96, 160), (128, 64)]:
+        out = flash_attention(q, k, v, 64, causal=True, block_q=bq, block_k=bk, interpret=True)
+        if ref is None:
+            ref = out
+        else:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests for the paper's system: the full path a user
+takes — synthetic Medline-stats data -> lazy elastic-net training -> sparse
+accurate model -> lazy/dense agreement — plus the LM integration path."""
+import numpy as np
+
+from repro.core import (
+    LinearConfig,
+    ScheduleConfig,
+    current_weights,
+    init_state,
+    make_round_fn,
+    nnz,
+    predict_proba,
+)
+from repro.data import BowConfig, SyntheticBow
+
+
+def test_paper_experiment_end_to_end():
+    """Scaled-down §7: train lazy + dense on identical streams; both learn,
+    agree on predictions (paper: 4 significant figures), and the lazy model
+    is sparse."""
+    import jax.tree_util as jtu
+
+    dim = 20_000
+    ds = SyntheticBow(BowConfig(dim=dim, p_max=64, p_mean=40.0, n_informative=256, informative_pool=2048))
+    cfg = LinearConfig(
+        dim=dim, flavor="fobos", lam1=2e-4, lam2=1e-4,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.5, t0=200.0), round_len=256,
+    )
+    lazy_fn, dense_fn = make_round_fn(cfg, "lazy"), make_round_fn(cfg, "dense")
+    lazy, dense = init_state(cfg), init_state(cfg, mode="dense")
+    for r in range(12):
+        batches = ds.sample_round(r, 256, 2)
+        lazy, ll_ = lazy_fn(lazy, batches)
+        dense, dl_ = dense_fn(dense, batches)
+    last = float(np.mean(np.asarray(ll_)))
+    assert last < 0.65  # well below chance-level BCE
+    # lazy == dense
+    # paper §7 claims 4-significant-figure agreement; after 3072 fp32 steps
+    # a handful of near-clip weights drift ~1e-5 absolute — well inside that
+    np.testing.assert_allclose(
+        np.asarray(current_weights(cfg, lazy)), np.asarray(dense.wpsi[:, 0]), rtol=5e-4, atol=1e-4
+    )
+    # the model is genuinely sparse and genuinely predictive
+    assert int(nnz(cfg, lazy)) < dim
+    test = jtu.tree_map(lambda a: a[0], ds.sample_round(99, 1, 1024))
+    acc = float(np.mean((np.asarray(predict_proba(cfg, lazy, test)) > 0.5) == np.asarray(test.y)))
+    assert acc > 0.75, acc
+
+
+def test_lm_training_end_to_end():
+    """The launch driver end to end on a reduced arch with the lazy
+    embedding regularizer active: loss decreases, no NaNs."""
+    from repro.launch.train import train
+
+    state, losses = train(
+        "internvl2_2b", reduced=True, steps=30, batch_size=2, seq_len=32, log_every=0
+    )
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+    assert state.lazy is not None  # the paper's optimizer was in the loop
+
+
+def test_serving_end_to_end():
+    """Batched prefill + decode through the public serve driver."""
+    from repro.launch.serve import serve
+
+    out = serve("recurrentgemma_9b", reduced=True, batch=2, prompt_len=12, new_tokens=8)
+    assert out.shape == (2, 8)
+    assert (out >= 0).all()

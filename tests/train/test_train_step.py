@@ -1,0 +1,170 @@
+"""Train-step tests, including the LM-level analogue of the paper's theorem:
+the lazy elastic-net embedding optimizer must produce exactly the same
+parameters as a dense-regularization reference that sweeps the entire
+embedding table every step."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import dense_enet
+from repro.core.schedules import ScheduleConfig
+from repro.models import build, init_params
+from repro.optim import adamw
+from repro.train import make_flush_fn, make_init_state, make_train_step
+from repro.train.train_step import _global_norm, _split_emb
+
+
+def _cfg(**kw):
+    base = get_arch("stablelm_3b").reduced()  # untied, dense family
+    defaults = dict(
+        lam1=0.01,
+        lam2=0.01,
+        emb_lr=0.2,
+        reg_round_len=8,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-3, t0=100.0),
+    )
+    defaults.update(kw)
+    return dataclasses.replace(base, **defaults)
+
+
+def _batches(cfg, T, B=2, S=16, seed=0):
+    rng = np.random.RandomState(seed)
+    toks = rng.randint(0, cfg.vocab_size, size=(T, B, S + 1)).astype(np.int32)
+    return [
+        {"tokens": jnp.asarray(t[:, :-1]), "labels": jnp.asarray(t[:, 1:])} for t in toks
+    ]
+
+
+@pytest.mark.parametrize("flavor", ["sgd", "fobos"])
+def test_lm_lazy_equals_dense(flavor):
+    """Lazy-row embedding training == dense per-step elastic net sweep."""
+    cfg = _cfg(reg_flavor=flavor)
+    model = build(cfg)
+    params0 = init_params(model, seed=0)
+    T = 11  # crosses the round boundary at 8
+    batches = _batches(cfg, T)
+
+    # --- lazy path (the framework) ---
+    step = jax.jit(make_train_step(cfg, model))
+    flush = make_flush_fn(cfg)
+    state = make_init_state(cfg, model)(params0)
+    lazy_losses = []
+    for t in range(T):
+        state, m = step(state, batches[t])
+        lazy_losses.append(float(m["loss"]))
+        if int(state.lazy.i) >= cfg.reg_round_len:
+            state = flush(state)
+    state = flush(state)
+
+    # --- dense reference ---
+    emb_sched = dataclasses.replace(cfg.schedule, eta0=cfg.emb_lr).make()
+    sched = cfg.schedule.make()
+    params = jax.tree.map(lambda x: x, params0)
+    trunk, _ = _split_emb(cfg, params)
+    opt = adamw.init(trunk)
+    dense_losses = []
+
+    @jax.jit
+    def dense_step(params, opt, batch, t):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)).astype(jnp.float32)
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+        trunk_p, emb_p = _split_emb(cfg, params)
+        trunk_g, emb_g = _split_emb(cfg, grads)
+        new_trunk, new_opt = adamw.update(trunk_p, trunk_g, opt, sched(t))
+        eta = emb_sched(t)
+        idx = batch["tokens"].reshape(-1)
+        # set-semantics: autodiff grads are already aggregated per row, so
+        # duplicate idx entries must write identical values, not accumulate
+        new_rows = emb_p[idx].astype(jnp.float32) - eta * emb_g[idx].astype(jnp.float32)
+        emb = emb_p.at[idx].set(new_rows.astype(emb_p.dtype))
+        emb = dense_enet.reg_update(emb, eta, cfg.lam1, cfg.lam2, cfg.reg_flavor)
+        return {**new_trunk, "embedding": emb}, new_opt, loss
+
+    for t in range(T):
+        params, opt, loss = dense_step(params, opt, batches[t], jnp.asarray(t, jnp.int32))
+        dense_losses.append(float(loss))
+
+    np.testing.assert_allclose(lazy_losses, dense_losses, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(state.params["embedding"], np.float32),
+        np.asarray(params["embedding"], np.float32),
+        rtol=5e-4,
+        atol=1e-5,
+    )
+    # trunk params must match too (identical grads + identical AdamW)
+    for k in ("final_norm", "unembed"):
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(state.params[k])[0], np.float32),
+            np.asarray(jax.tree.leaves(params[k])[0], np.float32),
+            rtol=5e-4,
+            atol=1e-5,
+        )
+
+
+def test_embedding_rows_sparsify():
+    """Strong l1 + untouched rows -> rows shrink to exact zero (the point of
+    elastic net on the vocab: prunable embeddings)."""
+    cfg = _cfg(lam1=0.3, lam2=0.05, emb_lr=0.5)
+    model = build(cfg)
+    state = make_init_state(cfg, model)(init_params(model, seed=0))
+    step = jax.jit(make_train_step(cfg, model))
+    flush = make_flush_fn(cfg)
+    for t, b in enumerate(_batches(cfg, 23)):
+        state, _ = step(state, b)
+        if int(state.lazy.i) >= cfg.reg_round_len:
+            state = flush(state)
+    state = flush(state)
+    emb = np.asarray(state.params["embedding"], np.float32)
+    zero_frac = float(np.mean(emb == 0.0))
+    row_alive = np.any(np.abs(emb) > 0, axis=-1)
+    assert zero_frac > 0.5, zero_frac  # l1 killed most entries exactly
+    assert row_alive.sum() < cfg.vocab_size  # and entire untouched rows died
+    assert np.isfinite(emb).all()
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = _cfg(lazy_embedding_reg=False)
+    model = build(cfg)
+    params = init_params(model, seed=1)
+    batch = _batches(cfg, 1, B=4)[0]
+    s_full = make_init_state(cfg, model)(params)
+    s_acc = make_init_state(cfg, model)(params)
+    step_full = jax.jit(make_train_step(cfg, model))
+    cfg_acc = dataclasses.replace(cfg, grad_accum=2)
+    step_acc = jax.jit(make_train_step(cfg_acc, model))
+    s_full, m_full = step_full(s_full, batch)
+    s_acc, m_acc = step_acc(s_acc, batch)
+    np.testing.assert_allclose(float(m_full["loss"]), float(m_acc["loss"]), rtol=1e-5)
+    a = np.asarray(jax.tree.leaves(s_full.params)[0], np.float32)
+    b = np.asarray(jax.tree.leaves(s_acc.params)[0], np.float32)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_tied_embeddings_fall_back_to_trunk_optimizer():
+    cfg = dataclasses.replace(get_arch("minicpm_2b").reduced(), lazy_embedding_reg=True)
+    model = build(cfg)
+    state = make_init_state(cfg, model)(init_params(model, seed=0))
+    assert state.lazy is None  # tied -> dense grads -> technique n/a
+    step = jax.jit(make_train_step(cfg, model))
+    state, m = step(state, _batches(cfg, 1)[0])
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_adafactor_trains():
+    cfg = _cfg(optimizer="adafactor", lazy_embedding_reg=False)
+    model = build(cfg)
+    state = make_init_state(cfg, model)(init_params(model, seed=0))
+    step = jax.jit(make_train_step(cfg, model))
+    batch = _batches(cfg, 1)[0]
+    losses = []
+    for _ in range(6):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
