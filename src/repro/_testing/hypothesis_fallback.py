@@ -1,0 +1,105 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test suite's property tests use a small slice of the hypothesis API:
+``@settings(max_examples=N, deadline=None)`` + ``@given(**strategies)`` with
+``st.integers(lo, hi)``, ``st.floats(lo, hi)``, and ``st.sampled_from(seq)``.
+This fallback implements exactly that slice with deterministic pseudo-random
+draws, so the properties still execute with real example coverage on
+machines without the dependency (CI installs the real library via the
+``[test]`` extra in pyproject.toml and this module never activates).
+
+``install()`` registers the shim under ``sys.modules["hypothesis"]``; it is
+called from tests/conftest.py only when the real import fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.RandomState):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    def draw(rng):
+        # hit the boundary values sometimes — they are the interesting cases
+        # (lam = 0.0 switches off whole regularization terms)
+        r = rng.uniform()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return float(rng.uniform(min_value, max_value))
+
+    return _Strategy(draw)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randint(len(elements))])
+
+
+def given(**strategies):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.RandomState((base + i) % (2**31))
+                kwargs = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(**kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i + 1}/{n}): {kwargs!r}"
+                    ) from e
+
+        # pytest must see a zero-arg function, not the wrapped signature
+        # (otherwise it would demand fixtures named like the strategies)
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        wrapper._max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorator(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorator
+
+
+def install():
+    if "hypothesis" in sys.modules:  # the real library won the race
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -123,9 +123,20 @@ def restore(ckpt_dir: str | os.PathLike, step: int, template: Any):
     return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest
 
 
-def restore_distributed(ckpt_dir, step, template, shardings):
-    """Elastic restore: place each leaf straight into the given shardings
-    (any mesh size — the checkpoint stores full logical arrays)."""
+def restore_distributed(ckpt_dir, step, template, shardings=None, *, mesh=None, rules=None, axes=None):
+    """Elastic restore: place each leaf straight into its sharding (any mesh
+    size — the checkpoint stores full logical arrays).
+
+    Callers normally pass ``(mesh, rules, axes)`` and let dist.sharding
+    derive the NamedSharding tree — the same rule table the train step was
+    compiled with, so restores land pre-sharded with no resharding transfer.
+    An explicit ``shardings`` tree overrides (escape hatch for tests)."""
+    if shardings is None:
+        from repro.dist.sharding import shardings_for_axes
+
+        if mesh is None or rules is None or axes is None:
+            raise TypeError("restore_distributed needs shardings or (mesh, rules, axes)")
+        shardings = shardings_for_axes(axes, mesh, rules)
     host_tree, manifest = restore(ckpt_dir, step, template)
 
     def place(arr, sharding, tmpl):

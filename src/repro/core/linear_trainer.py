@@ -8,7 +8,7 @@ boundary all weights are brought current and the DP caches rebase — the
 paper's own space-budget amortization (fn.1), doubling as the fp32 overflow
 guard (DESIGN.md §2).
 
-State layout (EXPERIMENTS.md §Perf iteration 1): ``w`` and ``psi`` are
+State layout (DESIGN.md §8): ``w`` and ``psi`` are
 PACKED into one [d, 2] f32 array (psi is exact in f32 for round_len < 2^24).
 With separate arrays, XLA-CPU fuses the psi/w gathers into downstream
 consumers, keeps both buffers live across the scatters, and inserts two full

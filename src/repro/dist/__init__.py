@@ -1,0 +1,18 @@
+"""repro.dist — the sharding subsystem (DESIGN.md §5).
+
+Three layers, lowest first:
+
+* :mod:`repro.dist.api`      — the activation-sharding context.  Model code
+  calls ``shard(x, *logical_axes)`` freely; it is an identity unless a
+  ``(mesh, rules)`` pair has been activated, so single-device CPU tests and
+  the linear-model path run the exact same code unsharded.
+* :mod:`repro.dist.sharding` — the rule layer: translates the logical-axis
+  vocabulary declared in ``models/params.py`` into mesh axes, with every
+  parameter rule gated on divisibility, and derives NamedSharding trees for
+  params, full train state, batches, and decode caches.
+* :mod:`repro.dist.compress` — int8 shared-scale gradient all-reduce for the
+  cross-pod ("pod") mesh axis.
+"""
+from repro.dist import api, compress, sharding
+
+__all__ = ["api", "compress", "sharding"]

@@ -1,0 +1,216 @@
+"""The rule layer: logical axes -> mesh axes, and NamedSharding trees.
+
+``make_rules(cfg, mesh, global_batch)`` builds the translation table from
+the logical-axis vocabulary declared in ``models/params.py`` onto the mesh
+axes ("data", "model", optional "pod").  Two regimes, deliberately distinct
+(DESIGN.md §5):
+
+* **Parameter / argument rules** ("vocab", "heads", "mlp", …) are gated on
+  exact divisibility of the dimension by the mesh-axis size — jit argument
+  shardings must tile evenly, so e.g. whisper's 51,865-row vocab replicates
+  while stablelm's 50,304 shards 16-way.  "layers" is never sharded (it is
+  the scan dimension).
+* **Activation rules** ("heads_act", "kv_act", "vocab_act", "seq_sp") map
+  unconditionally to the model axis: with_sharding_constraint lets GSPMD pad
+  a non-divisible dim, so 36/40-head archs still get tensor-parallel
+  attention instead of replicated FLOPs.
+
+The derived-tree helpers (``shardings_for_axes``, ``train_state_axes``,
+``batch_axes``, ``cache_axes``) are what launch/dryrun.py, launch/train.py
+and checkpoint restore consume — there are no ad-hoc PartitionSpecs outside
+this module.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ArchConfig
+from repro.dist.api import Rules, resolve
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(dict(mesh.shape).get(name, 1))
+
+
+def make_rules(cfg: ArchConfig, mesh, global_batch: Optional[int] = None) -> Rules:
+    """Rule table for ``cfg`` on ``mesh``.
+
+    ``global_batch`` (when known) gates the data-parallel "batch" rule: the
+    batch shards over ("pod", "data") when divisible by their product, falls
+    back to "data" alone, and replicates otherwise.
+    """
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    dp = tuple(a for a in ("pod", "data") if _axis_size(mesh, a) > 1)
+
+    batch_rule: Any = dp
+    if global_batch is not None:
+        while batch_rule and global_batch % math.prod(
+            _axis_size(mesh, a) for a in batch_rule
+        ):
+            batch_rule = batch_rule[1:]  # drop the outermost ("pod") first
+    if len(batch_rule) == 1:
+        batch_rule = batch_rule[0]
+    elif not batch_rule:
+        batch_rule = None
+
+    def gated(n: int) -> Optional[str]:
+        """Divisibility-gated model-axis rule for a parameter dimension."""
+        return "model" if model > 1 and n > 0 and n % model == 0 else None
+
+    fsdp = "data" if (cfg.fsdp and data > 1 and cfg.d_model % data == 0) else None
+
+    return {
+        # data parallelism
+        "batch": batch_rule,
+        # parameter axes (divisibility-gated; see models/params.py vocabulary)
+        "vocab": gated(cfg.vocab_size),
+        "embed": fsdp,  # ZeRO-3 style parameter sharding over the data axis
+        "heads": gated(cfg.n_heads),
+        "kv_heads": gated(cfg.n_kv_heads),
+        "head_dim": None,
+        "mlp": gated(cfg.d_ff),
+        "experts": gated(cfg.n_experts),
+        "rnn": gated(cfg.d_rnn),
+        "conv": None,
+        "layers": None,  # the scan dimension — never sharded
+        # activation-only axes (constraint-level: GSPMD pads odd sizes)
+        "heads_act": "model" if model > 1 else None,
+        "kv_act": "model" if model > 1 and cfg.n_kv_heads >= model else None,
+        "vocab_act": "model" if model > 1 else None,
+        "seq_sp": "model" if model > 1 else None,
+        # decode-cache sequence dim (used when kv heads cannot shard)
+        "cache_seq": "model" if model > 1 else None,
+    }
+
+
+def _is_axes_leaf(node) -> bool:
+    """A leaf of an axes tree: a plain tuple of logical names / Nones
+    (NamedTuples are containers, not leaves).  ``()`` is a scalar leaf."""
+    return (
+        isinstance(node, tuple)
+        and not hasattr(node, "_fields")
+        and all(e is None or isinstance(e, str) for e in node)
+    )
+
+
+def shardings_for_axes(axes, mesh, rules: Rules):
+    """Axes tree (tuples of logical names per leaf) -> NamedSharding tree of
+    the same structure.  Handles dicts, lists, tuples, and NamedTuples
+    (TrainState / optimizer states / LazyRowState); ``None`` subtrees pass
+    through (e.g. ``TrainState.lazy`` when the technique is off)."""
+
+    def rec(node):
+        if node is None:
+            return None
+        if _is_axes_leaf(node):
+            spec = PartitionSpec(*(resolve(rules, n) for n in node))
+            return NamedSharding(mesh, spec)
+        if hasattr(node, "_fields"):  # NamedTuple
+            return type(node)(*(rec(getattr(node, f)) for f in node._fields))
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(e) for e in node)
+        raise TypeError(f"shardings_for_axes: unsupported node {type(node)}")
+
+    return rec(axes)
+
+
+def _opt_state_axes(optimizer: str, trunk_axes):
+    """Axes tree matching the trunk optimizer's state structure.  Moment
+    buffers mirror their parameter's axes; adafactor's factored second
+    moments drop the contracted dim (vr drops the last, vc the second-to-
+    last); counts are replicated scalars."""
+    import jax
+
+    from repro.optim import adafactor, adamw, sgd
+
+    tmap = lambda f, t: jax.tree.map(f, t, is_leaf=_is_axes_leaf)
+    if optimizer == "adamw":
+        return adamw.AdamWState(m=trunk_axes, v=trunk_axes, count=())
+    if optimizer == "sgdm":
+        return sgd.SGDMState(mom=trunk_axes, count=())
+    if optimizer == "adafactor":
+        vr = tmap(lambda a: a[:-1] if len(a) >= 2 else a, trunk_axes)
+        vc = tmap(lambda a: a[:-2] + a[-1:] if len(a) >= 2 else (None,), trunk_axes)
+        return adafactor.AdafactorState(vr=vr, vc=vc, count=())
+    raise ValueError(f"unknown optimizer {optimizer!r}")
+
+
+def train_state_axes(cfg: ArchConfig, model):
+    """Axes tree shaped like the full TrainState: params (from their
+    ParamDef declarations), optimizer state, and LazyRowState — psi shards
+    with the vocab rows it indexes, the DP caches replicate (they are O(
+    round_len) scalars read by every device)."""
+    from repro.core.dp_caches import RegCaches
+    from repro.models import params as pp
+    from repro.optim import lazy_rows
+    from repro.train import train_step as ts
+
+    p_axes = pp.axes_tree(model.defs)
+    trunk_axes, _ = ts._split_emb(cfg, p_axes)
+    lazy_axes = None
+    if ts.lazy_enabled(cfg):
+        lazy_axes = lazy_rows.LazyRowState(
+            psi=("vocab",),
+            caches=RegCaches(logP=(None,), B=(None,), S=(None,)),
+            i=(),
+        )
+    return ts.TrainState(
+        params=p_axes,
+        opt=_opt_state_axes(cfg.optimizer, trunk_axes),
+        lazy=lazy_axes,
+        step=(),
+    )
+
+
+def batch_axes(cfg: ArchConfig, batch_specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Batch-dict axes: every input ("tokens", "labels", "frames",
+    "patches") shards its leading dim over data parallelism, the rest
+    replicate."""
+    return {
+        k: ("batch",) + (None,) * (len(v.shape) - 1) for k, v in batch_specs.items()
+    }
+
+
+def cache_axes(cfg: ArchConfig, cache_specs, model_axis_size: int):
+    """Decode-cache axes tree matching ``model.cache_spec(...)``.
+
+    KV caches [L, B, C, KV, hd] shard batch over data parallelism and KV
+    heads over the model axis when divisible; otherwise the cache-length dim
+    C takes the model axis (CACHE_EXTRA keeps C divisible by 16 — the
+    sequence-sharded fallback for GQA archs with few KV heads).  Recurrent
+    states shard their width over the model axis via the "rnn" rule; ring
+    positions ("apos") replicate.
+    """
+    kv_ok = model_axis_size > 1 and cfg.n_kv_heads % model_axis_size == 0
+
+    def leaf(key: str, sds):
+        nd = len(sds.shape)
+        if key in ("k", "v", "k_s", "v_s", "cross_k", "cross_v"):
+            seq = None
+            if not kv_ok and model_axis_size > 1 and sds.shape[2] % model_axis_size == 0:
+                seq = "cache_seq"
+            return (None, "batch", seq, "kv_heads" if kv_ok else None, None)
+        if key == "apos":
+            return (None,) * nd
+        if key == "wkv":  # [L, B, H, hd, hd]
+            return (None, "batch", "heads", None, None)
+        if key in ("shift_t", "shift_c"):  # [L, B, d]
+            return (None, "batch", None)
+        if key == "h":  # rglru recurrent state [lead, B, d_rnn]
+            return (None, "batch", "rnn")
+        if key == "conv":  # [lead, B, cw-1, d_rnn]
+            return (None, "batch", None, "rnn")
+        return (None,) * nd  # unknown leaves replicate
+
+    def rec(key, node):
+        if isinstance(node, dict):
+            return {k: rec(k, v) for k, v in node.items()}
+        return leaf(key, node)
+
+    return rec("", cache_specs)

@@ -1,6 +1,6 @@
 """Pallas TPU kernel: forward flash attention (online softmax), GQA-aware.
 
-Motivation (EXPERIMENTS.md §Perf, stablelm iteration): after sharding fixes,
+Motivation (DESIGN.md §8): after sharding fixes,
 the dominant roofline term on dense-attention archs is the materialized
 [B,H,S,S] f32 mask+softmax chain — ~80% of per-layer bytes in the op
 histogram.  Flash attention never materializes it: each program owns one

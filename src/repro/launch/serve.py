@@ -1,9 +1,12 @@
 """Serving driver: batched prefill + decode loop (greedy or sampled),
 reduced configs on CPU; full configs lower onto the production mesh via the
-same decode_fn the dry-run compiles."""
+same decode_fn the dry-run compiles.  With --mesh the params and KV cache
+are placed via the repro.dist rule table (weights tensor-parallel over
+"model", batch over "data")."""
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -11,11 +14,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.dist import api as dist_api
+from repro.dist import sharding as dist_sharding
+from repro.launch.mesh import host_mesh_from_spec
 from repro.models import build, init_params
+from repro.models import params as pp
 from repro.train import make_prefill_step, make_serve_step
 
 
-def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, seed=0):
+def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, seed=0,
+          mesh_shape: str | None = None):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -28,23 +36,36 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, see
     if cfg.n_patches:
         batch_in["patches"] = jnp.asarray(rng.randn(batch, cfg.n_patches, cfg.d_model).astype(np.float32) * 0.02)
 
-    prefill = jax.jit(make_prefill_step(cfg, model))
-    step = jax.jit(make_serve_step(cfg, model), donate_argnums=1)
+    ctx = contextlib.nullcontext()
+    if mesh_shape:
+        mesh = host_mesh_from_spec(mesh_shape)
+        rules = dist_sharding.make_rules(cfg, mesh, batch)
+        params = jax.device_put(
+            params,
+            dist_sharding.shardings_for_axes(pp.axes_tree(model.defs), mesh, rules),
+        )
+        # activation constraints bake in at trace time (dist/api.py), so the
+        # jits below must be traced inside the context
+        ctx = dist_api.activate(mesh, rules)
 
-    t0 = time.time()
-    tok, _, cache = prefill(params, batch_in)
-    jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
+    with ctx:
+        prefill = jax.jit(make_prefill_step(cfg, model))
+        step = jax.jit(make_serve_step(cfg, model), donate_argnums=1)
 
-    P = cfg.n_patches if cfg.n_patches else 0
-    pos0 = prompt_len + P
-    out = [np.asarray(tok)]
-    t0 = time.time()
-    for k in range(new_tokens - 1):
-        tok, _, cache = step(params, cache, tok, jnp.asarray(pos0 + k, jnp.int32))
-        out.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+        t0 = time.time()
+        tok, _, cache = prefill(params, batch_in)
+        jax.block_until_ready(tok)
+        t_prefill = time.time() - t0
+
+        P = cfg.n_patches if cfg.n_patches else 0
+        pos0 = prompt_len + P
+        out = [np.asarray(tok)]
+        t0 = time.time()
+        for k in range(new_tokens - 1):
+            tok, _, cache = step(params, cache, tok, jnp.asarray(pos0 + k, jnp.int32))
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
     toks_per_s = batch * (new_tokens - 1) / max(t_decode, 1e-9)
     print(f"{arch}: prefill({batch}x{prompt_len}) {t_prefill*1e3:.1f}ms; "
           f"decode {new_tokens-1} steps -> {toks_per_s:.1f} tok/s")
@@ -58,9 +79,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument(
+        "--mesh", default=None, metavar="DxM",
+        help='data x model mesh over visible devices (e.g. "1x2")',
+    )
     args = ap.parse_args()
     serve(args.arch, reduced=args.reduced, batch=args.batch,
-          prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+          prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+          mesh_shape=args.mesh)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,8 @@ Fault tolerance model (documented here; exercised in tests/checkpoint):
 
 Usage (CPU-scale):
   python -m repro.launch.train --arch stablelm_3b --reduced --steps 200
+  python -m repro.launch.train --arch stablelm_3b --reduced --mesh 2x2 \
+      # data x model sharding via repro.dist (multi-device processes)
 """
 from __future__ import annotations
 
@@ -32,7 +34,10 @@ import numpy as np
 from repro.checkpoint import checkpointer
 from repro.configs import get_arch
 from repro.data import LMDataConfig, SyntheticLMData
-from repro.models import build, init_params
+from repro.dist import api as dist_api
+from repro.dist import sharding as dist_sharding
+from repro.launch.mesh import host_mesh_from_spec
+from repro.models import build, init_params, make_train_batch_specs
 from repro.train import make_flush_fn, make_init_state, make_train_step
 
 
@@ -71,13 +76,39 @@ def train(
     resume: bool = False,
     seed: int = 0,
     log_every: int = 10,
+    mesh_shape: str | None = None,
 ):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
     model = build(cfg)
-    step_fn = jax.jit(make_train_step(cfg, model), donate_argnums=0)
+
+    # Optional data x model mesh over the visible devices ("2x2", "4x1", …).
+    # All shardings come from the dist.sharding rule table — the same specs
+    # the dry-run compiles at production scale.
+    mesh = rules = state_sh = None
+    if mesh_shape:
+        mesh = host_mesh_from_spec(mesh_shape)
+        rules = dist_sharding.make_rules(cfg, mesh, batch_size)
+        state_sh = dist_sharding.shardings_for_axes(
+            dist_sharding.train_state_axes(cfg, model), mesh, rules
+        )
+        batch_sh = dist_sharding.shardings_for_axes(
+            dist_sharding.batch_axes(cfg, make_train_batch_specs(cfg, batch_size, seq_len)),
+            mesh, rules,
+        )
+        step_fn = jax.jit(
+            make_train_step(cfg, model, mesh=mesh, rules=rules),
+            in_shardings=(state_sh, batch_sh), out_shardings=(state_sh, None),
+            donate_argnums=0,
+        )
+    else:
+        step_fn = jax.jit(make_train_step(cfg, model), donate_argnums=0)
     flush_fn = make_flush_fn(cfg)
+    if state_sh is not None:
+        # the round flush rebuilds psi/caches as fresh (replicated) arrays;
+        # re-place them so the donated step_fn sees its declared shardings
+        raw_flush, flush_fn = flush_fn, lambda s: jax.device_put(raw_flush(s), state_sh)
     init_fn = make_init_state(cfg, model)
     batch_fn = make_batch_fn(cfg, batch_size, seq_len, seed)
 
@@ -87,12 +118,21 @@ def train(
         last = checkpointer.latest_step(ckpt_dir)
         if last is not None:
             template = jax.eval_shape(init_fn, jax.eval_shape(lambda: init_params(model, seed)))
-            state, manifest = checkpointer.restore(ckpt_dir, last, template)
-            state = jax.tree.map(jnp.asarray, state)
+            if mesh is not None:
+                # elastic restore: leaves land directly in the shardings
+                # the step function was compiled with
+                state, manifest = checkpointer.restore_distributed(
+                    ckpt_dir, last, template, state_sh
+                )
+            else:
+                state, manifest = checkpointer.restore(ckpt_dir, last, template)
+                state = jax.tree.map(jnp.asarray, state)
             start = int(manifest["extra"]["next_step"])
             print(f"resumed from step {last} (next data step {start})")
     if state is None:
         state = init_fn(init_params(model, seed))
+        if state_sh is not None:
+            state = jax.device_put(state, state_sh)
 
     losses = []
     t0 = time.time()
@@ -124,6 +164,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--mesh", default=None, metavar="DxM",
+        help='data x model mesh over visible devices (e.g. "2x2"); '
+             "default: single-device, no sharding",
+    )
     args = ap.parse_args()
     _, losses = train(
         args.arch,
@@ -135,6 +180,7 @@ def main():
         ckpt_every=args.ckpt_every,
         resume=args.resume,
         seed=args.seed,
+        mesh_shape=args.mesh,
     )
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 

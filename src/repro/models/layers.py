@@ -113,7 +113,7 @@ def qkv_proj(cfg: ArchConfig, p, x, *, rope_positions=None):
     ("heads_act"): unlike jit argument shardings, a with_sharding_constraint
     may shard a non-divisible dim (GSPMD pads), so archs with 36/40 heads
     still get 16-way tensor-parallel attention instead of 16x-replicated
-    attention FLOPs (EXPERIMENTS.md §Perf, qwen/minicpm iterations)."""
+    attention FLOPs (DESIGN.md §8, qwen/minicpm iterations)."""
     q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
     k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
     v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])

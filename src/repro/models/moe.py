@@ -7,7 +7,7 @@ scale — and instead compute per-token positions with a cumsum ranking over a
 scatter-add into capacity buffers [G, E, C, d].  Tokens over capacity are
 dropped (standard GShard semantics; capacity_factor controls the drop rate).
 
-Sharding (EXPERIMENTS.md §Perf dbrx iterations): everything carries an
+Sharding (DESIGN.md §8, dbrx iterations): everything carries an
 EXPLICIT group dim G (one group per batch row; a single group at decode) and
 the dispatch buffers are constrained to (G -> data, E -> model).  An earlier
 vmap-based formulation let GSPMD replicate the expert GEMMs across the data
@@ -108,7 +108,7 @@ def moe_apply(cfg: ArchConfig, p, x):
     # sort-based dispatch: slot (e, c) is filled by the c-th (stable order)
     # token routed to expert e.  All data movement is BATCHED GATHERS, which
     # GSPMD partitions on G — a batched scatter here loses the G sharding and
-    # all-reduces the full buffer (EXPERIMENTS.md §Perf dbrx iteration 2).
+    # all-reduces the full buffer (DESIGN.md §8, dbrx iteration 2).
     sort_idx = jnp.argsort(flat_e, axis=1)  # [G, N] stable
     counts = onehot.sum(axis=1)  # [G, E]
     offsets = jnp.cumsum(counts, axis=1) - counts  # exclusive per-expert starts

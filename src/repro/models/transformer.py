@@ -264,7 +264,7 @@ def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.
     extra = batch.get("patches")
 
     if cfg.ce_chunks > 1:
-        # chunked CE (EXPERIMENTS.md §Perf): the [tokens, vocab] logits of
+        # chunked CE (DESIGN.md §8): the [tokens, vocab] logits of
         # big-vocab archs (40GB f32 at qwen's 152k vocab) never materialize;
         # each chunk projects + reduces under remat.  Python-unrolled so the
         # scan-calibrated cost accounting stays exact.

@@ -61,7 +61,7 @@ def make_init_state(cfg: ArchConfig, model: ModelFns):
     return init_state
 
 
-def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None):
+def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None, rules=None):
     _, opt_update = get_optimizer(cfg.optimizer)
     sched = cfg.schedule.make()
     emb_sched = dataclasses.replace(cfg.schedule, eta0=cfg.emb_lr).make()
@@ -93,6 +93,10 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None):
         # int8 cross-pod gradient all-reduce (dist/compress.py): only the
         # "pod" axis is manual; data/model stay under GSPMD so the inner
         # grad computation partitions exactly like the uncompressed path.
+        # NOTE: needs an XLA whose SPMD partitioner handles pads inside
+        # partially-manual regions (slice backwards emit pads); the 0.4-era
+        # CPU emulation aborts there, so host-mesh tests pin quantized_psum
+        # directly instead (tests/dist/test_compress.py, DESIGN.md §5).
         from jax.sharding import PartitionSpec as P
 
         from repro.dist.compress import quantized_psum
@@ -128,13 +132,14 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None):
             return (l, m), g
 
         def grads_of_compressed(params, batch):
-            return jax.shard_map(
+            from repro.dist import api as dist_api
+
+            return dist_api.manual_shard_map(
                 pod_local,
-                mesh=mesh,
+                mesh,
                 in_specs=(P(), P("pod")),
                 out_specs=((P(), P()), P()),
-                axis_names={"pod"},
-                check_vma=False,
+                manual_axes=("pod",),
             )(params, batch)
 
         grads_of = grads_of_compressed
@@ -176,6 +181,18 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None):
             "lr": lr,
         }
         return TrainState(new_params, new_opt, new_lazy, state.step + 1), out_metrics
+
+    if mesh is not None and rules is not None:
+        # self-activating variant: tracing this function installs the
+        # sharding context, so the model's shard() constraints resolve no
+        # matter where the caller jits it (dist/api.py — trace-time lookup).
+        from repro.dist import api as dist_api
+
+        def train_step_sharded(state: TrainState, batch):
+            with dist_api.activate(mesh, rules):
+                return train_step(state, batch)
+
+        return train_step_sharded
 
     return train_step
 

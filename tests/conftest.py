@@ -5,6 +5,13 @@
 import numpy as np
 import pytest
 
+try:  # property tests prefer the real library (CI installs it: pyproject
+    import hypothesis  # noqa: F401  [test] extra); this container may lack it
+except ModuleNotFoundError:
+    from repro._testing import hypothesis_fallback
+
+    hypothesis_fallback.install()
+
 
 @pytest.fixture
 def rng():

@@ -1,0 +1,32 @@
+# Multi-device dist tests run in SUBPROCESSES: the parent pytest process
+# must keep the single real CPU device (tests/conftest.py), and jax locks
+# the device count at first backend init — so each test ships a script to a
+# fresh interpreter with --xla_force_host_platform_device_count set.
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[2] / "src")
+
+
+@pytest.fixture
+def subproc():
+    def run(script: str, n_devices: int, timeout: int = 600):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        proc = subprocess.run(
+            [sys.executable, "-c", script],
+            capture_output=True, text=True, timeout=timeout, env=env,
+        )
+        assert proc.returncode == 0, (
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+        return proc.stdout
+
+    return run

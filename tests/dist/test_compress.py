@@ -1,0 +1,83 @@
+"""quantized_psum exactness bounds on a host shard_map mesh.
+
+The shared-scale construction (dist/compress.py) bounds the per-element
+error by n_pods * max_chunk|x| / 254, and is EXACT when every value sits on
+the int8 grid of the shared scale (e.g. all values equal)."""
+
+
+COMMON = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.dist import api as dist_api
+from repro.dist.compress import CHUNK, quantized_psum
+
+N_PODS = 2
+devs = np.asarray(jax.devices()[: N_PODS * 2]).reshape(N_PODS, 2)
+mesh = Mesh(devs, ("pod", "data"))
+
+def reduce_tree(tree):
+    # leaves arrive stacked [N_PODS, ...]; each pod sees its own slice
+    f = dist_api.manual_shard_map(
+        lambda t: quantized_psum(jax.tree.map(lambda a: a[0], t), "pod"), mesh,
+        in_specs=(P("pod"),), out_specs=P(),
+        manual_axes=("pod",),
+    )
+    return jax.jit(f)(tree)
+"""
+
+
+def test_error_bound(subproc):
+    subproc(
+        COMMON
+        + """
+rng = np.random.RandomState(0)
+# per-pod gradient stacks [N_PODS, ...]; leaf shapes hit the chunk padding
+for shape in [(300,), (7,), (CHUNK,), (33, 40)]:
+    x = rng.randn(N_PODS, *shape).astype(np.float32)
+    got = np.asarray(reduce_tree({"g": jnp.asarray(x)})["g"], np.float32)
+    want = x.sum(axis=0)
+    # shared scale = max over pods of per-chunk amax / 127; bound the error
+    # by the loosest chunk: N_PODS * global amax / 254
+    bound = N_PODS * np.abs(x).max() / 254.0 + 1e-6
+    err = np.abs(got - want).max()
+    assert err <= bound, (shape, err, bound)
+print("BOUND_OK")
+""",
+        n_devices=4,
+    )
+
+
+def test_exact_on_grid_and_preserves_structure(subproc):
+    subproc(
+        COMMON
+        + """
+# integer-valued grads whose chunk max is 127 -> shared scale exactly 1.0
+# -> the int8 grid represents every value and the sum is EXACT
+rng = np.random.RandomState(3)
+x = rng.randint(-127, 128, size=(N_PODS, 128)).astype(np.float32)
+x[:, 0] = 127.0
+tree = {"a": jnp.asarray(x), "b": {"c": jnp.zeros((N_PODS, 5), jnp.bfloat16)}}
+out = reduce_tree(tree)
+np.testing.assert_array_equal(np.asarray(out["a"]), x.sum(axis=0))
+assert out["b"]["c"].dtype == jnp.bfloat16 and out["b"]["c"].shape == (5,)
+np.testing.assert_array_equal(np.asarray(out["b"]["c"], np.float32), 0.0)
+print("EXACT_OK")
+""",
+        n_devices=4,
+    )
+
+
+def test_relative_error_small_on_real_grads(subproc):
+    subproc(
+        COMMON
+        + """
+rng = np.random.RandomState(7)
+x = (rng.randn(N_PODS, 4096) * 1e-3).astype(np.float32)
+got = np.asarray(reduce_tree({"g": jnp.asarray(x)})["g"], np.float32)
+want = x.sum(axis=0)
+rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-12)
+assert rel < 0.02, rel  # int8 grid: <2% of the largest component
+print("REL_OK")
+""",
+        n_devices=4,
+    )

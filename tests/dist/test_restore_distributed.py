@@ -1,0 +1,61 @@
+"""Elastic restore through the dist rule table: a checkpoint written from a
+2x2-sharded TrainState must restore bit-exactly through
+``checkpointer.restore_distributed(mesh=..., rules=..., axes=...)`` onto the
+SAME mesh and onto a DIFFERENT mesh shape (4x1) — the elastic re-mesh path
+launch/train.py --resume --mesh uses."""
+
+
+def test_save_then_restore_onto_two_mesh_shapes(subproc):
+    subproc(
+        """
+import tempfile
+import numpy as np, jax, jax.numpy as jnp
+from repro.checkpoint import checkpointer
+from repro.configs import get_arch
+from repro.dist import api as dist_api
+from repro.dist import sharding as dist_sharding
+from repro.launch.mesh import make_host_mesh
+from repro.models import build, init_params, make_train_batch_specs, param_shapes
+from repro.train import make_init_state, make_train_step
+from repro.train.train_step import state_shapes
+
+B, S = 4, 16
+cfg = get_arch("stablelm_3b").reduced()
+model = build(cfg)
+rng = np.random.RandomState(0)
+toks = rng.randint(0, cfg.vocab_size, size=(B, S + 1)).astype(np.int32)
+batch = {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+
+mesh = make_host_mesh(2, 2)
+rules = dist_sharding.make_rules(cfg, mesh, B)
+axes = dist_sharding.train_state_axes(cfg, model)
+state_sh = dist_sharding.shardings_for_axes(axes, mesh, rules)
+batch_sh = dist_sharding.shardings_for_axes(
+    dist_sharding.batch_axes(cfg, make_train_batch_specs(cfg, B, S)), mesh, rules)
+with dist_api.activate(mesh, rules):
+    step = jax.jit(make_train_step(cfg, model, mesh=mesh, rules=rules),
+                   in_shardings=(state_sh, batch_sh), out_shardings=(state_sh, None))
+    state = jax.device_put(make_init_state(cfg, model)(init_params(model, seed=0)), state_sh)
+    state, _ = step(state, batch)
+
+ckpt = tempfile.mkdtemp()
+checkpointer.save(ckpt, 1, state, extra_meta={"next_step": 1})
+template = state_shapes(cfg, model, param_shapes(model))
+want = [np.asarray(l, np.float32) for l in jax.tree.leaves(state)]
+
+# same mesh shape, then a different one (elastic re-mesh: 4-way data only)
+for d, m in [(2, 2), (4, 1)]:
+    mesh2 = make_host_mesh(d, m)
+    rules2 = dist_sharding.make_rules(cfg, mesh2, B)
+    got, manifest = checkpointer.restore_distributed(
+        ckpt, 1, template, mesh=mesh2, rules=rules2, axes=axes)
+    assert manifest["extra"]["next_step"] == 1
+    assert jax.tree.structure(got) == jax.tree.structure(state)
+    for g, w, sh in zip(jax.tree.leaves(got), want,
+                        jax.tree.leaves(dist_sharding.shardings_for_axes(axes, mesh2, rules2))):
+        np.testing.assert_array_equal(np.asarray(g, np.float32), w)
+        assert g.sharding == sh, (g.sharding, sh)
+print("RESTORE_OK")
+""",
+        n_devices=4,
+    )

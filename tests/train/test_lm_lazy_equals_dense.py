@@ -1,0 +1,158 @@
+"""The LM-level analogue of the paper's correctness theorem (promised by
+train_step.py's docstring): the lazy elastic-net row optimizer on the
+embedding table must produce exactly the same parameters and per-step losses
+as a dense reference that sweeps the ENTIRE table with the per-step
+regularization update — across flavors, round lengths, and flush (round)
+boundaries.  Ordering is Algorithm-1-faithful: touched rows are brought
+current BEFORE the forward pass, so the loss parity transitively checks that
+mid-round catch-ups are exact at prediction time."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import dense_enet
+from repro.core.schedules import ScheduleConfig
+from repro.models import build, init_params
+from repro.optim import adamw
+from repro.train import make_flush_fn, make_init_state, make_train_step
+from repro.train.train_step import _global_norm, _split_emb
+
+
+def _cfg(**kw):
+    base = get_arch("stablelm_3b").reduced()  # untied, dense family
+    defaults = dict(
+        lam1=0.01,
+        lam2=0.01,
+        emb_lr=0.2,
+        reg_round_len=8,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=3e-3, t0=100.0),
+    )
+    defaults.update(kw)
+    return dataclasses.replace(base, **defaults)
+
+
+def _batches(cfg, T, B=2, S=16, seed=0):
+    rng = np.random.RandomState(seed)
+    toks = rng.randint(0, cfg.vocab_size, size=(T, B, S + 1)).astype(np.int32)
+    return [
+        {"tokens": jnp.asarray(t[:, :-1]), "labels": jnp.asarray(t[:, 1:])} for t in toks
+    ]
+
+
+def _run_lazy(cfg, model, params0, batches):
+    step = jax.jit(make_train_step(cfg, model))
+    flush = make_flush_fn(cfg)
+    state = make_init_state(cfg, model)(params0)
+    losses = []
+    for b in batches:
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+        if int(state.lazy.i) >= cfg.reg_round_len:
+            state = flush(state)
+    return flush(state), losses
+
+
+def _run_dense(cfg, model, params0, batches):
+    """Dense reference: identical trunk AdamW; the embedding gets a plain
+    SGD row write (set-semantics — autodiff grads are already aggregated per
+    row, so duplicate idx entries must write identical values, not
+    accumulate) followed by an O(vocab) per-step elastic-net sweep."""
+    emb_sched = dataclasses.replace(cfg.schedule, eta0=cfg.emb_lr).make()
+    sched = cfg.schedule.make()
+    params = jax.tree.map(lambda x: x, params0)
+    trunk, _ = _split_emb(cfg, params)
+    opt = adamw.init(trunk)
+    losses = []
+
+    @jax.jit
+    def dense_step(params, opt, batch, t):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)).astype(jnp.float32)
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+        trunk_p, emb_p = _split_emb(cfg, params)
+        trunk_g, emb_g = _split_emb(cfg, grads)
+        new_trunk, new_opt = adamw.update(trunk_p, trunk_g, opt, sched(t))
+        eta = emb_sched(t)
+        idx = batch["tokens"].reshape(-1)
+        new_rows = emb_p[idx].astype(jnp.float32) - eta * emb_g[idx].astype(jnp.float32)
+        emb = emb_p.at[idx].set(new_rows.astype(emb_p.dtype))
+        emb = dense_enet.reg_update(emb, eta, cfg.lam1, cfg.lam2, cfg.reg_flavor)
+        return {**new_trunk, "embedding": emb}, new_opt, loss
+
+    for t, b in enumerate(batches):
+        params, opt, loss = dense_step(params, opt, b, jnp.asarray(t, jnp.int32))
+        losses.append(float(loss))
+    return params, losses
+
+
+@pytest.mark.parametrize("flavor", ["sgd", "fobos"])
+def test_lm_lazy_equals_dense(flavor):
+    """Lazy-row embedding training == dense per-step elastic net sweep."""
+    cfg = _cfg(reg_flavor=flavor)
+    model = build(cfg)
+    params0 = init_params(model, seed=0)
+    batches = _batches(cfg, 11)  # crosses the round boundary at 8
+
+    state, lazy_losses = _run_lazy(cfg, model, params0, batches)
+    params, dense_losses = _run_dense(cfg, model, params0, batches)
+
+    np.testing.assert_allclose(lazy_losses, dense_losses, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(state.params["embedding"], np.float32),
+        np.asarray(params["embedding"], np.float32),
+        rtol=5e-4,
+        atol=1e-5,
+    )
+    # trunk params must match too (identical grads + identical AdamW)
+    for k in ("final_norm", "unembed"):
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(state.params[k])[0], np.float32),
+            np.asarray(jax.tree.leaves(params[k])[0], np.float32),
+            rtol=5e-4,
+            atol=1e-5,
+        )
+
+
+@pytest.mark.parametrize("round_len", [4, 8])
+def test_parity_across_multiple_flush_boundaries(round_len):
+    """Catch-ups must compose exactly across several rebased rounds (17
+    steps over round_len=4 crosses four flushes)."""
+    cfg = _cfg(reg_flavor="fobos", reg_round_len=round_len, lam1=0.05, lam2=0.02)
+    model = build(cfg)
+    params0 = init_params(model, seed=1)
+    batches = _batches(cfg, 17, seed=3)
+
+    state, lazy_losses = _run_lazy(cfg, model, params0, batches)
+    params, dense_losses = _run_dense(cfg, model, params0, batches)
+
+    np.testing.assert_allclose(lazy_losses, dense_losses, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(state.params["embedding"], np.float32),
+        np.asarray(params["embedding"], np.float32),
+        rtol=5e-4,
+        atol=1e-5,
+    )
+
+
+def test_l1_only_and_l2_only_reduce_correctly():
+    """Degenerate lam settings exercise the pure-l1 (Eq 4) and pure-ridge
+    (Lemma 1) cache paths through the full LM step."""
+    for lam1, lam2 in [(0.05, 0.0), (0.0, 0.05)]:
+        cfg = _cfg(reg_flavor="sgd", lam1=lam1, lam2=lam2)
+        model = build(cfg)
+        params0 = init_params(model, seed=2)
+        batches = _batches(cfg, 9, seed=5)
+        state, lazy_losses = _run_lazy(cfg, model, params0, batches)
+        params, dense_losses = _run_dense(cfg, model, params0, batches)
+        np.testing.assert_allclose(lazy_losses, dense_losses, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(state.params["embedding"], np.float32),
+            np.asarray(params["embedding"], np.float32),
+            rtol=5e-4,
+            atol=1e-5,
+        )

@@ -1,21 +1,16 @@
-"""Train-step tests, including the LM-level analogue of the paper's theorem:
-the lazy elastic-net embedding optimizer must produce exactly the same
-parameters as a dense-regularization reference that sweeps the entire
-embedding table every step."""
+"""Train-step tests: lazy-row sparsification, grad accumulation, the
+tied-embedding fallback, and optimizer coverage.  The LM-level analogue of
+the paper's theorem lives in tests/train/test_lm_lazy_equals_dense.py."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
-from repro.core import dense_enet
 from repro.core.schedules import ScheduleConfig
 from repro.models import build, init_params
-from repro.optim import adamw
 from repro.train import make_flush_fn, make_init_state, make_train_step
-from repro.train.train_step import _global_norm, _split_emb
 
 
 def _cfg(**kw):
@@ -37,74 +32,6 @@ def _batches(cfg, T, B=2, S=16, seed=0):
     return [
         {"tokens": jnp.asarray(t[:, :-1]), "labels": jnp.asarray(t[:, 1:])} for t in toks
     ]
-
-
-@pytest.mark.parametrize("flavor", ["sgd", "fobos"])
-def test_lm_lazy_equals_dense(flavor):
-    """Lazy-row embedding training == dense per-step elastic net sweep."""
-    cfg = _cfg(reg_flavor=flavor)
-    model = build(cfg)
-    params0 = init_params(model, seed=0)
-    T = 11  # crosses the round boundary at 8
-    batches = _batches(cfg, T)
-
-    # --- lazy path (the framework) ---
-    step = jax.jit(make_train_step(cfg, model))
-    flush = make_flush_fn(cfg)
-    state = make_init_state(cfg, model)(params0)
-    lazy_losses = []
-    for t in range(T):
-        state, m = step(state, batches[t])
-        lazy_losses.append(float(m["loss"]))
-        if int(state.lazy.i) >= cfg.reg_round_len:
-            state = flush(state)
-    state = flush(state)
-
-    # --- dense reference ---
-    emb_sched = dataclasses.replace(cfg.schedule, eta0=cfg.emb_lr).make()
-    sched = cfg.schedule.make()
-    params = jax.tree.map(lambda x: x, params0)
-    trunk, _ = _split_emb(cfg, params)
-    opt = adamw.init(trunk)
-    dense_losses = []
-
-    @jax.jit
-    def dense_step(params, opt, batch, t):
-        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
-        gnorm = _global_norm(grads)
-        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)).astype(jnp.float32)
-        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
-        trunk_p, emb_p = _split_emb(cfg, params)
-        trunk_g, emb_g = _split_emb(cfg, grads)
-        new_trunk, new_opt = adamw.update(trunk_p, trunk_g, opt, sched(t))
-        eta = emb_sched(t)
-        idx = batch["tokens"].reshape(-1)
-        # set-semantics: autodiff grads are already aggregated per row, so
-        # duplicate idx entries must write identical values, not accumulate
-        new_rows = emb_p[idx].astype(jnp.float32) - eta * emb_g[idx].astype(jnp.float32)
-        emb = emb_p.at[idx].set(new_rows.astype(emb_p.dtype))
-        emb = dense_enet.reg_update(emb, eta, cfg.lam1, cfg.lam2, cfg.reg_flavor)
-        return {**new_trunk, "embedding": emb}, new_opt, loss
-
-    for t in range(T):
-        params, opt, loss = dense_step(params, opt, batches[t], jnp.asarray(t, jnp.int32))
-        dense_losses.append(float(loss))
-
-    np.testing.assert_allclose(lazy_losses, dense_losses, rtol=1e-4, atol=1e-5)
-    np.testing.assert_allclose(
-        np.asarray(state.params["embedding"], np.float32),
-        np.asarray(params["embedding"], np.float32),
-        rtol=5e-4,
-        atol=1e-5,
-    )
-    # trunk params must match too (identical grads + identical AdamW)
-    for k in ("final_norm", "unembed"):
-        np.testing.assert_allclose(
-            np.asarray(jax.tree.leaves(state.params[k])[0], np.float32),
-            np.asarray(jax.tree.leaves(params[k])[0], np.float32),
-            rtol=5e-4,
-            atol=1e-5,
-        )
 
 
 def test_embedding_rows_sparsify():
