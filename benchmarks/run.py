@@ -6,6 +6,8 @@ minibatch extensions).  Prints ``name,us_per_call,derived`` CSV.
   dp_overhead the elastic-net DP caches' constant factor vs l1-only/ridge/none
   kernels     fused lazy_enet row kernel vs unfused reference
   minibatch   lazy minibatch extension throughput
+  serving     continuous-batching engine vs lock-step loop (Poisson traffic)
+              + online linear predict/learn service; writes BENCH_serving.json
 
 Roofline tables (per arch x shape x mesh) come from the dry-run artifacts:
 ``python -m repro.analysis.roofline`` (results/dryrun must exist).
@@ -26,6 +28,7 @@ def main() -> None:
         bench_lazy_vs_dense,
         bench_minibatch,
         bench_scaling,
+        bench_serving,
     )
 
     steps = 128 if args.fast else 512
@@ -35,6 +38,7 @@ def main() -> None:
         "dp_overhead": lambda: bench_dp_overhead.run(steps=steps),
         "kernels": lambda: bench_kernels.run(),
         "minibatch": lambda: bench_minibatch.run(steps=min(steps, 256)),
+        "serving": lambda: bench_serving.run(fast=args.fast),
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -1,30 +1,75 @@
-"""Batched serving example: prefill a batch of prompts, then decode with the
-KV-cache/state machinery (the same decode_fn the decode_32k/long_500k dry-run
-cells lower).  Works for every assigned architecture, including the
-attention-free (rwkv6) and hybrid (recurrentgemma) families.
+"""Serving example: drive the continuous-batching engine with staggered,
+mixed-length requests (the traffic pattern the lock-step loop can't batch),
+or fall back to the static loop for the recurrent families.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6_7b --new-tokens 48
+    PYTHONPATH=src python examples/serve_lm.py --arch stablelm_3b --new-tokens 48
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6_7b     # static fallback
 """
 import argparse
+import time
 
+import numpy as np
+
+from repro.configs import get_arch
 from repro.launch.serve import serve
+from repro.models import build, init_params
+from repro.serving import EngineConfig, ServeEngine
+
+
+def engine_demo(arch: str, new_tokens: int, n_slots: int = 3,
+                max_prompt_len: int = 32, seed: int = 0):
+    cfg = get_arch(arch).reduced()
+    model = build(cfg)
+    params = init_params(model, seed)
+    buckets = tuple(sorted({max(4, max_prompt_len // 4), max_prompt_len // 2, max_prompt_len}))
+    engine = ServeEngine(
+        model, params,
+        EngineConfig(n_slots=n_slots, max_len=max_prompt_len + new_tokens,
+                     prompt_buckets=buckets),
+    )
+    engine.warmup()
+    rng = np.random.RandomState(seed)
+    # mixed lengths, staggered arrivals: slots refill as requests retire
+    t0 = time.monotonic()
+    futs = [
+        engine.submit(rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32),
+                      max_new_tokens=new_tokens, arrival=t0 + 0.01 * i)
+        for i, plen in enumerate(
+            rng.randint(2, max_prompt_len + 1, size=2 * n_slots + 1)
+        )
+    ]
+    engine.run()
+    for f in futs:
+        toks = f.result(timeout=0)
+        print(f"req {f.request.rid}: prompt {f.request.tokens.size:2d} toks -> "
+              f"{toks.size} generated ({f.finish_reason}); first 8: {toks[:8]}")
+    snap = engine.metrics.snapshot()
+    print("tok/s:", round(snap["counters"]["tokens_out"] / snap["elapsed_s"], 1),
+          "| request latency:", snap.get("latency_request", {}),
+          "| compiles:", engine.compile_counts())
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internvl2_2b")
+    ap.add_argument("--arch", default="stablelm_3b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     args = ap.parse_args()
-    out = serve(
-        args.arch,
-        reduced=True,
-        batch=args.batch,
-        prompt_len=args.prompt_len,
-        new_tokens=args.new_tokens,
-    )
-    print("generated token ids (first sequence):", out[0][:16], "...")
+    cfg = get_arch(args.arch).reduced()
+    if not (cfg.attn_free or cfg.rglru or cfg.encdec or cfg.n_patches):
+        engine_demo(args.arch, args.new_tokens, n_slots=args.batch,
+                    max_prompt_len=args.prompt_len)
+    else:  # recurrent / enc-dec / VLM: the static-batch baseline path
+        out = serve(
+            args.arch,
+            reduced=True,
+            batch=args.batch,
+            prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens,
+            static=True,
+        )
+        print("generated token ids (first sequence):", out[0][:16], "...")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from .linear_trainer import (
     make_round_fn,
     nnz,
     predict_proba,
+    predict_proba_sparse,
     psi,
     weights,
 )
@@ -47,6 +48,7 @@ __all__ = [
     "make_round_fn",
     "nnz",
     "predict_proba",
+    "predict_proba_sparse",
     "Schedule",
     "ScheduleConfig",
     "constant",

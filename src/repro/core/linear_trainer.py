@@ -216,6 +216,24 @@ def predict_proba(cfg: LinearConfig, state: LinearState, batch: SparseBatch) -> 
     return jax.nn.sigmoid(z) if cfg.loss == LOGISTIC else z
 
 
+def predict_proba_sparse(cfg: LinearConfig, state: LinearState, batch: SparseBatch) -> jnp.ndarray:
+    """Serving-path predictions in O(p) per example: gather only the touched
+    (w, psi) rows and bring them current against the DP caches — the same
+    catch-up the lazy step performs, minus the write-back (pure).  Agrees
+    with predict_proba's O(d) full catch-up exactly; this is the form the
+    paper's per-request complexity claim describes."""
+    idx_f = batch.idx.reshape(-1)
+    g2 = state.wpsi[idx_f]
+    if state.wpsi.shape[1] == 1:  # dense layout: weights always current
+        w_cur = g2[:, 0]
+    else:
+        w_cur = lazy_enet.catchup(
+            g2[:, 0], g2[:, 1].astype(jnp.int32), state.i, state.caches, cfg.lam1
+        )
+    z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
+    return jax.nn.sigmoid(z) if cfg.loss == LOGISTIC else z
+
+
 def nnz(cfg: LinearConfig, state: LinearState, threshold: float = 0.0) -> jnp.ndarray:
     """Number of (current) weights with |w| > threshold — the model-sparsity
     statistic elastic net is prized for (paper §2.1)."""

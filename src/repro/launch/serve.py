@@ -1,8 +1,15 @@
-"""Serving driver: batched prefill + decode loop (greedy or sampled),
-reduced configs on CPU; full configs lower onto the production mesh via the
-same decode_fn the dry-run compiles.  With --mesh the params and KV cache
-are placed via the repro.dist rule table (weights tensor-parallel over
-"model", batch over "data")."""
+"""Serving driver.  The default path routes through the repro.serving
+continuous-batching engine (slot-based decode, admission queue, metrics);
+``--static`` keeps the original fixed-batch lock-step loop as the parity
+baseline.  Families the engine can't serve exactly (recurrent state consumes
+prompt padding: rwkv6/recurrentgemma; enc-dec; VLM) fall back to the static
+loop automatically.
+
+Reduced configs run on CPU; full configs lower onto the production mesh via
+the same decode fns the dry-run compiles.  With --mesh the params and KV
+cache are placed via the repro.dist rule table (weights tensor-parallel over
+"model", batch/slots over "data"); the engine's jits trace inside the same
+activation-sharding context as the static path's."""
 from __future__ import annotations
 
 import argparse
@@ -19,22 +26,85 @@ from repro.dist import sharding as dist_sharding
 from repro.launch.mesh import host_mesh_from_spec
 from repro.models import build, init_params
 from repro.models import params as pp
-from repro.train import make_prefill_step, make_serve_step
+from repro.serving import EngineConfig, ServeEngine, ServingMetrics
+from repro.train import generate
 
 
-def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, seed=0,
-          mesh_shape: str | None = None):
-    cfg = get_arch(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    model = build(cfg)
-    params = init_params(model, seed)
-    rng = np.random.RandomState(seed)
+def _make_prompts(cfg, rng, batch, prompt_len):
     batch_in = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, size=(batch, prompt_len)).astype(np.int32))}
     if cfg.encdec:
         batch_in["frames"] = jnp.asarray(rng.randn(batch, cfg.enc_seq, cfg.d_model).astype(np.float32) * 0.1)
     if cfg.n_patches:
         batch_in["patches"] = jnp.asarray(rng.randn(batch, cfg.n_patches, cfg.d_model).astype(np.float32) * 0.02)
+    return batch_in
+
+
+def serve_static(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
+                 temperature=0.0):
+    """The original lock-step loop: one prefill, then every sequence decodes
+    one token per step in unison — the engine's parity/throughput baseline.
+    The loop itself lives in serve_step.generate (one copy of the
+    cache-growth + split-per-step sampling logic); this driver adds the
+    synthetic prompts and the timing report."""
+    rng = np.random.RandomState(seed)
+    batch_in = _make_prompts(cfg, rng, batch, prompt_len)
+    timings: dict = {}
+    out = generate(cfg, model, params, batch_in, new_tokens,
+                   temperature=temperature, seed=seed, timings=timings)
+    toks_per_s = batch * (new_tokens - 1) / max(timings["decode_s"], 1e-9)
+    print(f"{cfg.name} [static]: prefill({batch}x{prompt_len}) {timings['prefill_s']*1e3:.1f}ms; "
+          f"decode {new_tokens-1} steps -> {toks_per_s:.1f} tok/s")
+    return np.asarray(out)
+
+
+def serve_engine(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
+                 temperature=0.0, n_slots=None, requests=None):
+    """Continuous-batching path: requests flow through the admission queue
+    into slots; mixed-length traffic sustains full slot occupancy."""
+    rng = np.random.RandomState(seed)
+    n_slots = n_slots or batch
+    requests = requests or batch
+    metrics = ServingMetrics()
+    engine = ServeEngine(
+        model, params,
+        EngineConfig(
+            n_slots=n_slots,
+            max_len=prompt_len + new_tokens,
+            prompt_buckets=(prompt_len,),
+            temperature=temperature,
+            seed=seed,
+        ),
+        metrics=metrics,
+    )
+    engine.warmup()
+    prompts = rng.randint(0, cfg.vocab_size, size=(requests, prompt_len)).astype(np.int32)
+    t0 = time.monotonic()
+    futs = [engine.submit(p, max_new_tokens=new_tokens, arrival=t0) for p in prompts]
+    engine.run()
+    elapsed = time.monotonic() - t0
+    snap = metrics.snapshot()
+    lat = snap.get("latency_request", {})
+    toks = snap["counters"]["tokens_out"]
+    print(f"{cfg.name} [engine]: {requests} reqs x ({prompt_len}+{new_tokens}) over "
+          f"{n_slots} slots -> {toks / max(elapsed, 1e-9):.1f} tok/s; "
+          f"latency p50 {lat.get('p50_ms', 0):.1f}ms p99 {lat.get('p99_ms', 0):.1f}ms; "
+          f"compiles {engine.compile_counts()}")
+    return np.stack([f.result(timeout=0) for f in futs], axis=0)
+
+
+def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, seed=0,
+          mesh_shape: str | None = None, temperature: float = 0.0,
+          static: bool = False, n_slots: int | None = None,
+          requests: int | None = None):
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    params = init_params(model, seed)
+
+    if not static and model.decode_multi_fn is None:
+        print(f"{cfg.name}: no slot-decode path for this family; using the static loop")
+        static = True
 
     ctx = contextlib.nullcontext()
     if mesh_shape:
@@ -44,49 +114,47 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, see
             params,
             dist_sharding.shardings_for_axes(pp.axes_tree(model.defs), mesh, rules),
         )
-        # activation constraints bake in at trace time (dist/api.py), so the
-        # jits below must be traced inside the context
+        # activation constraints bake in at trace time (dist/api.py), so
+        # every jit below — engine or static — must trace inside the context
         ctx = dist_api.activate(mesh, rules)
 
     with ctx:
-        prefill = jax.jit(make_prefill_step(cfg, model))
-        step = jax.jit(make_serve_step(cfg, model), donate_argnums=1)
-
-        t0 = time.time()
-        tok, _, cache = prefill(params, batch_in)
-        jax.block_until_ready(tok)
-        t_prefill = time.time() - t0
-
-        P = cfg.n_patches if cfg.n_patches else 0
-        pos0 = prompt_len + P
-        out = [np.asarray(tok)]
-        t0 = time.time()
-        for k in range(new_tokens - 1):
-            tok, _, cache = step(params, cache, tok, jnp.asarray(pos0 + k, jnp.int32))
-            out.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-    toks_per_s = batch * (new_tokens - 1) / max(t_decode, 1e-9)
-    print(f"{arch}: prefill({batch}x{prompt_len}) {t_prefill*1e3:.1f}ms; "
-          f"decode {new_tokens-1} steps -> {toks_per_s:.1f} tok/s")
-    return np.stack(out, axis=1)
+        if static:
+            return serve_static(cfg, model, params, batch=batch, prompt_len=prompt_len,
+                                new_tokens=new_tokens, seed=seed, temperature=temperature)
+        return serve_engine(cfg, model, params, batch=batch, prompt_len=prompt_len,
+                            new_tokens=new_tokens, seed=seed, temperature=temperature,
+                            n_slots=n_slots, requests=requests)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction: --no-reduced reaches the full-size config (the
+    # old action="store_true" + default=True made it unreachable)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction, default=True,
+                    help="reduced smoke-test config (--no-reduced for full size)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--seed", type=int, default=0, help="params + sampling PRNG seed")
+    ap.add_argument("--static", action="store_true",
+                    help="fixed-batch lock-step loop (parity baseline)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine decode slots (default: --batch)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests to serve through the engine (default: --batch)")
     ap.add_argument(
         "--mesh", default=None, metavar="DxM",
         help='data x model mesh over visible devices (e.g. "1x2")',
     )
     args = ap.parse_args()
     serve(args.arch, reduced=args.reduced, batch=args.batch,
-          prompt_len=args.prompt_len, new_tokens=args.new_tokens,
-          mesh_shape=args.mesh)
+          prompt_len=args.prompt_len, new_tokens=args.new_tokens, seed=args.seed,
+          mesh_shape=args.mesh, temperature=args.temperature, static=args.static,
+          n_slots=args.slots, requests=args.requests)
 
 
 if __name__ == "__main__":

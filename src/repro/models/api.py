@@ -3,7 +3,7 @@ layer (train_step, serve_step, dryrun, examples) consumes, dispatched on the
 architecture family."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +19,11 @@ class ModelFns(NamedTuple):
     prefill_fn: Callable  # (params, batch) -> (last logits, cache)
     decode_fn: Callable  # (params, cache, token [B], pos) -> (logits, cache)
     cache_spec: Callable  # (B, prefill_len) -> SDS tree
+    # continuous-batching entrypoints (repro.serving) — None for families the
+    # engine can't serve exactly (recurrent state consumes prompt padding;
+    # enc-dec/VLM prefill carries extra modalities)
+    prefill_at_fn: Optional[Callable] = None  # (params, batch, last_idx [B]) -> (logits, cache[S])
+    decode_multi_fn: Optional[Callable] = None  # (params, cache, token [B], pos [B]) -> (logits, cache)
 
 
 def build(cfg: ArchConfig) -> ModelFns:
@@ -31,6 +36,7 @@ def build(cfg: ArchConfig) -> ModelFns:
             decode_fn=lambda p, c, t, pos: encdec.decode_step(cfg, p, c, t, pos),
             cache_spec=lambda B, n: encdec.cache_spec(cfg, B, n),
         )
+    slotted = not (cfg.attn_free or cfg.rglru or cfg.n_patches)
     return ModelFns(
         cfg=cfg,
         defs=transformer.lm_defs(cfg),
@@ -38,6 +44,8 @@ def build(cfg: ArchConfig) -> ModelFns:
         prefill_fn=lambda p, b: transformer.prefill(cfg, p, b),
         decode_fn=lambda p, c, t, pos: transformer.decode_step(cfg, p, c, t, pos),
         cache_spec=lambda B, n: transformer.cache_spec(cfg, B, n),
+        prefill_at_fn=(lambda p, b, li: transformer.prefill_at(cfg, p, b, li)) if slotted else None,
+        decode_multi_fn=(lambda p, c, t, pos: transformer.decode_multi(cfg, p, c, t, pos)) if slotted else None,
     )
 
 

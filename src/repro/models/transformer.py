@@ -359,6 +359,34 @@ def cache_spec(cfg: ArchConfig, B: int, prefill_len: int) -> Dict[str, Any]:
     return _kv_cache_defs(cfg, L, B, C)
 
 
+def grow_cache(cache, min_len: int):
+    """Pad a dense-KV decode cache along its length axis to >= min_len
+    positions.  The lock-step decode loops write token t's k/v at position
+    P + t - 1; beyond the prefill capacity P + CACHE_EXTRA the scatter goes
+    out of bounds and XLA silently drops the write, corrupting generation.
+    Callers that decode more than CACHE_EXTRA new tokens must grow first.
+    No-op for recurrent / ring caches (nothing to overflow).  Only the
+    self-attention leaves grow: an enc-dec cache also carries cross_k/cross_v
+    whose axis 2 is the encoder *frame* axis — padding those would add
+    zero-key frames that unmasked cross-attention attends."""
+    if not (isinstance(cache, dict) and "k" in cache):
+        return cache
+    C = cache["k"].shape[2]
+    if C >= min_len:
+        return cache
+
+    def pad(a):
+        spec = [(0, 0)] * a.ndim
+        spec[2] = (0, min_len - C)
+        return jnp.pad(a, spec)
+
+    grown = dict(cache)
+    for name in ("k", "v", "k_s", "v_s"):
+        if name in grown:
+            grown[name] = pad(grown[name])
+    return grown
+
+
 def cache_init(cfg: ArchConfig, B: int, prefill_len: int):
     """Zero-initialized cache (apos = -1 marks empty window slots)."""
 
@@ -385,6 +413,26 @@ def _cache_write(cfg, cl, k_new, v_new, slot):
     return {
         "k": cl["k"].at[:, slot].set(k_new.astype(cl["k"].dtype)),
         "v": cl["v"].at[:, slot].set(v_new.astype(cl["v"].dtype)),
+    }
+
+
+def _cache_write_multi(cfg, cl, k_new, v_new, slots):
+    """Per-sequence cache write for continuous batching: cl holds one layer's
+    slices {k,v[,k_s,v_s]} [B,C,KV,hd]; k_new/v_new: [B,KV,hd]; slots: [B]
+    int32 — sequence b writes at its own position slots[b]."""
+    b = jnp.arange(k_new.shape[0], dtype=jnp.int32)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = ll.kv_quantize(k_new)
+        vq, vs = ll.kv_quantize(v_new)
+        return {
+            "k": cl["k"].at[b, slots].set(kq),
+            "k_s": cl["k_s"].at[b, slots].set(ks),
+            "v": cl["v"].at[b, slots].set(vq),
+            "v_s": cl["v_s"].at[b, slots].set(vs),
+        }
+    return {
+        "k": cl["k"].at[b, slots].set(k_new.astype(cl["k"].dtype)),
+        "v": cl["v"].at[b, slots].set(v_new.astype(cl["v"].dtype)),
     }
 
 
@@ -471,9 +519,75 @@ def prefill(cfg: ArchConfig, params, batch):
     return last, cache
 
 
+def prefill_at(cfg: ArchConfig, params, batch, last_idx):
+    """Bucketed prefill for the serving engine (attention family only):
+    ``batch["tokens"]`` is right-padded to a fixed bucket length S and
+    ``last_idx`` [B] int32 marks each prompt's true last token.  Causal
+    attention makes the logits at ``last_idx`` exact regardless of the
+    padding to its right; the k/v collected for padding positions land in
+    the cache but the engine's per-slot validity mask (kv_pos <= pos) never
+    attends to them.  Returns (last-real-position logits [B,V], cache of
+    capacity exactly S — the engine copies it into its own slot region)."""
+    if cfg.attn_free or cfg.rglru:
+        raise NotImplementedError(
+            "prefill_at: right-padded prefill is only exact for causal "
+            "attention; recurrent families consume the padding into state"
+        )
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    logits, _, states = forward(cfg, params, tokens, collect_states=True)
+    last = logits[jnp.arange(B), last_idx]
+    k, v = states["kv"]  # [L,B,S,KV,hd]
+    return last, _quantize_full(cfg, k, v)
+
+
 # ===========================================================================
 # decode
 # ===========================================================================
+
+
+def decode_multi(cfg: ArchConfig, params, cache, token, pos):
+    """Continuous-batching decode: one token for every *slot*, each at its
+    own position.  token: [B] int32; pos: [B] int32 — slot b's write
+    position (= number of tokens already in its cache region).  Attention
+    validity is per-slot (kv_pos <= pos[b], minus the local window if any),
+    so slots holding requests of different lengths — or stale k/v from a
+    retired request — coexist in one fixed-shape jitted step.  Returns
+    (logits [B,V] f32, new cache)."""
+    if cfg.attn_free or cfg.rglru:
+        raise NotImplementedError("decode_multi: KV-cache attention families only")
+    x = ll.embed_tokens(cfg, params, token[:, None])  # [B,1,d]
+    pos2 = pos[:, None].astype(jnp.int32)  # [B,1] per-slot rope positions
+    C = cache["k"].shape[2]
+    kv_pos = jnp.arange(C, dtype=jnp.int32)
+    valid = kv_pos[None, :] <= pos[:, None]  # [B,C] per-slot causal
+    if cfg.window:
+        valid &= kv_pos[None, :] > pos[:, None] - cfg.window
+
+    def body(carry, inp):
+        xc = carry
+        pl, cl = inp
+        h = ll.apply_norm(cfg, pl["norm1"], xc)
+        q, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=pos2)
+        ncl = _cache_write_multi(cfg, cl, k[:, 0], v[:, 0], pos)
+        kf, vf = _cache_read(cfg, ncl, xc.dtype)
+        # causal/window handled through the per-slot kv_valid mask: the
+        # scalar-position mask path in gqa_attention can't express a
+        # different horizon per batch row
+        o = ll.gqa_attention(q, kf, vf, causal=False, window=0, kv_valid=valid)
+        xc = xc + ll.attn_out(pl["attn"], o)
+        h = ll.apply_norm(cfg, pl["norm2"], xc)
+        if "moe" in pl:
+            mo, _ = moe_mod.moe_apply(cfg, pl["moe"], h)
+            xc = xc + mo
+        else:
+            xc = xc + ll.mlp_apply(cfg, pl["mlp"], h)
+        return xc, ncl
+
+    x, new_cache = layer_scan(cfg, body, x, (params["blocks"], cache))
+    x = ll.apply_norm(cfg, params["final_norm"], x)
+    logits = ll.logits_out(cfg, params, x)[:, 0]
+    return logits.astype(jnp.float32), new_cache
 
 
 def decode_step(cfg: ArchConfig, params, cache, token, pos):

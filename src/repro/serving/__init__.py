@@ -1,0 +1,24 @@
+"""repro.serving — the request-serving subsystem (DESIGN.md §9).
+
+``ServeEngine`` is slot-based continuous batching for LM decode (fixed
+shapes, zero recompiles after warmup); ``LinearService`` is the online
+predict/learn frontend over the paper's lazy elastic-net trainer; both sit
+behind ``AdmissionQueue`` micro-batching and report through
+``ServingMetrics``.
+"""
+from .engine import EngineConfig, ServeEngine, VirtualClock, WallClock
+from .linear_service import LinearService
+from .metrics import ServingMetrics
+from .queue import AdmissionQueue, Request, RequestFuture
+
+__all__ = [
+    "AdmissionQueue",
+    "EngineConfig",
+    "LinearService",
+    "Request",
+    "RequestFuture",
+    "ServeEngine",
+    "ServingMetrics",
+    "VirtualClock",
+    "WallClock",
+]

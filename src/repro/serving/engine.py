@@ -1,0 +1,331 @@
+"""Slot-based continuous batching for LM decode.
+
+The engine owns ``n_slots`` cache regions of fixed capacity and drives one
+jitted decode step over all of them — per-slot positions, per-slot validity
+masks (models/transformer.decode_multi) — so requests of different lengths
+start, run, and retire independently while every XLA call sees the same
+shapes.  After warmup (one trace of the decode step + one prefill/insert
+trace per prompt bucket) serving arbitrary staggered traffic triggers zero
+recompiles; ``compile_counts()`` exposes the jit cache sizes so tests and
+benchmarks can assert exactly that.
+
+Request lifecycle:
+  submit() -> AdmissionQueue -> [free slot] prefill_at (prompt right-padded
+  to a bucket, logits read at the true last token) -> insert_fn copies the
+  bucket cache into the slot region -> decode_multi steps until EOS /
+  max_new_tokens -> slot freed, future resolved.
+
+Mesh-awareness comes for free: all jits trace whatever
+``repro.dist.api.activate`` context is live at construction/warmup time, the
+same way launch/serve.py's static path does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelFns
+from repro.serving.metrics import ServingMetrics
+from repro.serving.queue import AdmissionQueue, Request, RequestFuture
+
+
+class WallClock:
+    def now(self) -> float:
+        return time.monotonic()
+
+    def wait_until(self, t: float) -> None:
+        time.sleep(max(0.0, t - time.monotonic()))
+
+
+class VirtualClock:
+    """Deterministic clock for tests: time only moves when the engine waits
+    (jumping straight to the next arrival) or the test advances it."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def now(self) -> float:
+        return self.t
+
+    def wait_until(self, t: float) -> None:
+        self.t = max(self.t, float(t))
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4
+    max_len: int = 96  # per-slot capacity: prompt + generated tokens
+    prompt_buckets: Tuple[int, ...] = (16, 32)
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+    eos_id: Optional[int] = None
+    queue_delay: float = 0.0  # admission-queue deadline (seconds)
+
+    def __post_init__(self):
+        assert self.n_slots >= 1
+        assert self.prompt_buckets == tuple(sorted(self.prompt_buckets))
+        assert self.prompt_buckets[-1] <= self.max_len
+
+
+class ServeEngine:
+    def __init__(self, model: ModelFns, params, ecfg: EngineConfig,
+                 metrics: Optional[ServingMetrics] = None):
+        if model.decode_multi_fn is None or model.prefill_at_fn is None:
+            raise NotImplementedError(
+                f"ServeEngine: arch {model.cfg.name!r} has no slot decode path "
+                "(recurrent/enc-dec/VLM families need the static-batch loop)"
+            )
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.metrics = metrics or ServingMetrics()
+        self.queue = AdmissionQueue(max_batch=ecfg.n_slots, max_delay=ecfg.queue_delay)
+        self.clock = WallClock()  # run() swaps this; latency stamps read it
+
+        n = ecfg.n_slots
+        # engine cache: n_slots regions of fixed capacity >= max_len
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), model.cache_spec(n, ecfg.max_len)
+        )
+        # host-side slot table
+        self._slots: List[Optional[RequestFuture]] = [None] * n
+        self._active = np.zeros(n, dtype=bool)
+        self._pos = np.zeros(n, dtype=np.int32)  # next cache write position
+        self._last_tok = np.zeros(n, dtype=np.int32)
+        self._gen = np.zeros(n, dtype=np.int32)
+        self._key = jax.random.PRNGKey(ecfg.seed)
+
+        sampled = ecfg.temperature > 0.0
+        temp = ecfg.temperature
+
+        def pick(logits, key):
+            if sampled:
+                return jax.random.categorical(key, logits / temp, axis=-1).astype(jnp.int32)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        if sampled:
+
+            def prefill_fn(params, tokens, last_idx, key):
+                logits, pcache = model.prefill_at_fn(params, {"tokens": tokens}, last_idx)
+                return pick(logits, key), pcache
+
+            def step_fn(params, cache, tok, pos, key):
+                logits, cache = model.decode_multi_fn(params, cache, tok, pos)
+                return pick(logits, key), cache
+
+        else:
+
+            def prefill_fn(params, tokens, last_idx):
+                logits, pcache = model.prefill_at_fn(params, {"tokens": tokens}, last_idx)
+                return pick(logits, None), pcache
+
+            def step_fn(params, cache, tok, pos):
+                logits, cache = model.decode_multi_fn(params, cache, tok, pos)
+                return pick(logits, None), cache
+
+        def insert_fn(cache, pcache, slot):
+            def wr(c, p):
+                return c.at[:, slot, : p.shape[2]].set(p[:, 0])
+
+            return jax.tree.map(wr, cache, pcache)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._insert = jax.jit(insert_fn, donate_argnums=0)
+        self._step = jax.jit(step_fn, donate_argnums=1)
+
+    # -- introspection ------------------------------------------------------
+
+    def compile_counts(self) -> Dict[str, int]:
+        """jit-cache entry counts: after warmup these must not grow no
+        matter what traffic is served (the zero-recompile property)."""
+        return {
+            "prefill": self._prefill._cache_size(),
+            "insert": self._insert._cache_size(),
+            "step": self._step._cache_size(),
+        }
+
+    def active_count(self) -> int:
+        return int(self._active.sum())
+
+    def free_slots(self) -> int:
+        return self.ecfg.n_slots - self.active_count()
+
+    # -- request admission --------------------------------------------------
+
+    def _bucket_for(self, prompt_len: int) -> int:
+        for b in self.ecfg.prompt_buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(
+            f"prompt of {prompt_len} tokens exceeds the largest bucket "
+            f"{self.ecfg.prompt_buckets[-1]}"
+        )
+
+    def submit(self, tokens, max_new_tokens: int = 32,
+               arrival: Optional[float] = None) -> RequestFuture:
+        """Enqueue a request.  ``arrival`` must be in the timebase of the
+        clock ``run()`` is driven with — wall monotonic seconds by default,
+        virtual seconds under VirtualClock.  Omitted, the request counts as
+        already arrived and is stamped with the loop clock at admission."""
+        req = Request(tokens=tokens, max_new_tokens=max_new_tokens, arrival=arrival)
+        self._bucket_for(req.tokens.size)  # validate early
+        if req.tokens.size + max_new_tokens > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt {req.tokens.size} + max_new {max_new_tokens} exceeds "
+                f"slot capacity {self.ecfg.max_len}"
+            )
+        fut = RequestFuture(req)
+        self.queue.put(fut, arrival=arrival)
+        self.metrics.count("requests_submitted")
+        return fut
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _insert_request(self, fut: RequestFuture, now: float) -> None:
+        slot = int(np.flatnonzero(~self._active)[0])
+        req = fut.request
+        if req.arrival is None:  # submitted without a stamp: arrives now
+            req.arrival = now
+        P = req.tokens.size
+        S = self._bucket_for(P)
+        tokens = np.zeros((1, S), dtype=np.int32)
+        tokens[0, :P] = req.tokens
+        last_idx = jnp.asarray([P - 1], jnp.int32)
+        args = (self.params, jnp.asarray(tokens), last_idx)
+        if self.ecfg.temperature > 0.0:
+            args += (self._next_key(),)
+        tok0, pcache = self._prefill(*args)
+        self.cache = self._insert(self.cache, pcache, jnp.asarray(slot, jnp.int32))
+        tok0 = int(np.asarray(tok0)[0])  # blocks on the prefill
+        done = self.clock.now()  # ttft must include the prefill it just paid
+        self._slots[slot] = fut
+        self._active[slot] = True
+        self._pos[slot] = P  # prompt occupies [0, P); next write at P
+        self._last_tok[slot] = tok0
+        self._gen[slot] = 1
+        fut.tokens.append(tok0)
+        fut.first_token_time = done
+        self.metrics.count("prompt_tokens", P)
+        self.metrics.count("tokens_out")
+        self.metrics.record_latency("ttft", done - req.arrival)
+        self._maybe_retire(slot, tok0, done)
+
+    def _maybe_retire(self, slot: int, tok: int, now: float) -> None:
+        fut = self._slots[slot]
+        assert fut is not None
+        if tok == self.ecfg.eos_id:
+            reason = "eos"
+        elif self._gen[slot] >= fut.request.max_new_tokens:
+            reason = "length"
+        else:
+            return
+        fut._finish(reason, now)
+        self.metrics.count("requests_done")
+        self.metrics.record_latency("request", now - fut.request.arrival)
+        self._slots[slot] = None
+        self._active[slot] = False
+        self._pos[slot] = 0  # idle-slot writes park at 0; re-prefill overwrites
+        self._gen[slot] = 0
+
+    # -- decode -------------------------------------------------------------
+
+    def _decode_step(self, now: float) -> None:
+        args = (
+            self.params,
+            self.cache,
+            jnp.asarray(self._last_tok),
+            jnp.asarray(self._pos),
+        )
+        if self.ecfg.temperature > 0.0:
+            args += (self._next_key(),)
+        next_tok, self.cache = self._step(*args)
+        next_tok = np.asarray(next_tok)  # blocks on the step
+        now = self.clock.now()  # retirement latency includes this step
+        self.metrics.count("decode_steps")
+        self.metrics.count("decode_slots_active", self.active_count())
+        for slot in np.flatnonzero(self._active):
+            tok = int(next_tok[slot])
+            fut = self._slots[slot]
+            fut.tokens.append(tok)
+            self._last_tok[slot] = tok
+            self._pos[slot] += 1
+            self._gen[slot] += 1
+            self.metrics.count("tokens_out")
+            self._maybe_retire(int(slot), tok, now)
+
+    # -- driving ------------------------------------------------------------
+
+    def step_once(self, now: float) -> bool:
+        """One engine tick: admit into free slots, then one decode step over
+        the slot batch.  Returns False when there was nothing to do."""
+        self.metrics.sample_queue_depth(self.queue.depth(now))
+        free = self.free_slots()
+        if free:
+            # idle engine: waiting buys nothing — force the flush.  While
+            # decode is running, the queue's size/deadline policy decides
+            # (queue_delay > 0 micro-batches admissions between steps)
+            force = free == self.ecfg.n_slots
+            for fut in self.queue.pop_ready(now, limit=free, force=force):
+                self._insert_request(fut, now)
+        if self._active.any():
+            self._decode_step(now)
+            return True
+        return False
+
+    def run(self, clock=None) -> None:
+        """Serve until the queue and all slots drain.  ``clock`` defaults to
+        wall time; pass VirtualClock for deterministic tests."""
+        clock = clock or self.clock
+        self.clock = clock  # latency stamps re-read it after blocking compute
+        while True:
+            now = clock.now()
+            if not self.step_once(now):
+                nxt = self.queue.next_arrival(now)
+                if nxt is None:
+                    if len(self.queue) == 0 and not self._active.any():
+                        return
+                    continue  # arrived-but-unflushed items: loop re-polls
+                clock.wait_until(nxt)
+
+    def warmup(self) -> None:
+        """Trace every jit entry the configured buckets can produce so live
+        traffic never compiles: one prefill+insert per bucket, one decode
+        step.  Cache contents written here are garbage but land either in
+        slot 0's dead region or at parked position 0 — both are overwritten
+        and masked until a real request claims them."""
+        slot0 = jnp.asarray(0, jnp.int32)
+        for S in self.ecfg.prompt_buckets:
+            tokens = jnp.zeros((1, S), jnp.int32)
+            args = (self.params, tokens, jnp.asarray([S - 1], jnp.int32))
+            if self.ecfg.temperature > 0.0:
+                args += (self._next_key(),)
+            _, pcache = self._prefill(*args)
+            self.cache = self._insert(self.cache, pcache, slot0)
+        args = (
+            self.params,
+            self.cache,
+            jnp.asarray(self._last_tok),
+            jnp.asarray(self._pos),
+        )
+        if self.ecfg.temperature > 0.0:
+            args += (self._next_key(),)
+        _, self.cache = self._step(*args)
+        # compiles shouldn't pollute the serving-throughput window
+        self.metrics.reset_clock()
+
+    # -- convenience --------------------------------------------------------
+
+    def generate(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
+                 clock=None) -> List[np.ndarray]:
+        """Submit a batch at t=0, run to drain, return each request's tokens
+        (prefill token first — the same contract as serve_step.generate)."""
+        futs = [self.submit(p, max_new_tokens=max_new_tokens, arrival=0.0) for p in prompts]
+        self.run(clock=clock or VirtualClock())
+        return [f.result(timeout=0) for f in futs]

@@ -1,0 +1,170 @@
+"""Online predict/learn service over the paper's lazy elastic-net trainer.
+
+This is the paper's deployment story made concrete: examples arrive one at a
+time, ``learn`` steps the O(p) lazy trainer (touching only the features the
+request carries), ``predict`` serves probabilities through the O(p)
+touched-rows catch-up (core.predict_proba_sparse) — no request ever pays the
+O(d) dense sweep; the only O(d) work is the amortized round-boundary flush
+the paper itself prescribes (fn.1).
+
+Fixed shapes, no steady-state recompiles: features pad to ``p_max`` (the
+trainer's padding convention makes that exact) and the micro-batch frontend
+flushes the admission queue in power-of-two example counts, so the jitted
+step sees at most log2(micro_batch)+1 distinct batch shapes.  Example-count
+padding is NOT used for learn — a padded example would corrupt the bias
+gradient and the loss mean — which is why the flush decomposes the waiting
+count in binary instead.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linear_trainer as lt
+from repro.core.linear_trainer import LinearConfig, SparseBatch
+from repro.serving.metrics import ServingMetrics
+from repro.serving.queue import AdmissionQueue
+
+
+def _binary_buckets(micro_batch: int) -> Tuple[int, ...]:
+    assert micro_batch >= 1 and micro_batch & (micro_batch - 1) == 0, \
+        f"micro_batch must be a power of two, got {micro_batch}"
+    out, b = [], 1
+    while b <= micro_batch:
+        out.append(b)
+        b *= 2
+    return tuple(out)
+
+
+class LinearService:
+    def __init__(self, cfg: LinearConfig, *, p_max: int = 128, micro_batch: int = 8,
+                 max_delay: float = 0.0, w0: Optional[np.ndarray] = None,
+                 metrics: Optional[ServingMetrics] = None):
+        self.cfg = cfg
+        self.p_max = p_max
+        self.micro_batch = micro_batch
+        self.buckets = _binary_buckets(micro_batch)
+        self.state = lt.init_state(cfg, w0)
+        self.metrics = metrics or ServingMetrics()
+        self.queue = AdmissionQueue(max_batch=micro_batch, max_delay=max_delay)
+        self._step = jax.jit(lt.make_lazy_step(cfg), donate_argnums=0)
+        self._flush = jax.jit(functools.partial(lt.flush, cfg), donate_argnums=0)
+        self._predict = jax.jit(functools.partial(lt.predict_proba_sparse, cfg))
+
+    # -- introspection ------------------------------------------------------
+
+    def compile_counts(self) -> dict:
+        return {
+            "step": self._step._cache_size(),
+            "flush": self._flush._cache_size(),
+            "predict": self._predict._cache_size(),
+        }
+
+    def current_weights(self) -> np.ndarray:
+        return np.asarray(lt.current_weights(self.cfg, self.state))
+
+    # -- padding ------------------------------------------------------------
+
+    def _pad_features(self, idx, val) -> Tuple[np.ndarray, np.ndarray]:
+        idx = np.asarray(idx, dtype=np.int32)
+        val = np.asarray(val, dtype=np.float32)
+        B, p = idx.shape
+        assert p <= self.p_max, f"request carries {p} features > p_max {self.p_max}"
+        if p < self.p_max:  # convention: idx=0/val=0 slots are inert
+            idx = np.pad(idx, [(0, 0), (0, self.p_max - p)])
+            val = np.pad(val, [(0, 0), (0, self.p_max - p)])
+        return idx, val
+
+    def _pad_batch(self, batch: SparseBatch) -> SparseBatch:
+        idx, val = self._pad_features(np.asarray(batch.idx), np.asarray(batch.val))
+        return SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val),
+                           y=jnp.asarray(np.asarray(batch.y, dtype=np.float32)))
+
+    # -- direct API ---------------------------------------------------------
+
+    def predict(self, batch: SparseBatch) -> np.ndarray:
+        """Probabilities (logistic) / values (squared) for a request batch.
+        O(p) per example: only touched rows are gathered and caught up.
+        Example-count padding to the bucket is safe here — padded rows are
+        sliced off, and prediction mutates nothing.  Batches larger than
+        micro_batch are chunked so the bucket set stays the complete compile
+        set (same bound as learn)."""
+        B = int(np.asarray(batch.idx).shape[0])
+        idx, val = self._pad_features(np.asarray(batch.idx), np.asarray(batch.val))
+        t0 = time.monotonic()
+        outs = []
+        for lo in range(0, B, self.micro_batch):
+            outs.append(self._predict_chunk(idx[lo : lo + self.micro_batch],
+                                            val[lo : lo + self.micro_batch]))
+        self.metrics.record_latency("predict", time.monotonic() - t0)
+        self.metrics.count("predict_examples", B)
+        return np.concatenate(outs)
+
+    def _predict_chunk(self, idx: np.ndarray, val: np.ndarray) -> np.ndarray:
+        B = idx.shape[0]
+        Bb = next(b for b in self.buckets if b >= B)
+        if Bb > B:
+            idx = np.pad(idx, [(0, Bb - B), (0, 0)])
+            val = np.pad(val, [(0, Bb - B), (0, 0)])
+        padded = SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val),
+                             y=jnp.asarray(np.zeros(Bb, np.float32)))  # y unused
+        return np.asarray(self._predict(self.state, padded))[:B]
+
+    def learn(self, batch: SparseBatch) -> float:
+        """One lazy step on the (feature-padded) batch; flushes + rebases at
+        the round boundary exactly like core.make_round_fn."""
+        t0 = time.monotonic()
+        self.state, loss = self._step(self.state, self._pad_batch(batch))
+        if int(self.state.i) >= self.cfg.round_len:
+            self.state = self._flush(self.state)
+            self.metrics.count("round_flushes")
+        self.metrics.record_latency("learn", time.monotonic() - t0)
+        self.metrics.count("learn_steps")
+        self.metrics.count("learn_examples", int(np.asarray(batch.idx).shape[0]))
+        return float(loss)
+
+    # -- micro-batched frontend ---------------------------------------------
+
+    def submit_learn(self, idx: Sequence[int], val: Sequence[float], y: float,
+                     arrival: float = 0.0) -> None:
+        """Enqueue one online example; it trains at the next flush."""
+        self.queue.put((np.asarray(idx, np.int32).reshape(-1),
+                        np.asarray(val, np.float32).reshape(-1),
+                        np.float32(y)), arrival=arrival)
+
+    def poll(self, now: float, force: bool = False) -> int:
+        """Flush the admission queue: pop arrived examples in power-of-two
+        group sizes (binary decomposition of the waiting count — exact batch
+        shapes, no padded examples) and run one lazy step per group.
+        Returns the number of examples trained."""
+        total = 0
+        while True:
+            n = self.queue.depth(now)
+            if n == 0:
+                break
+            want = max(b for b in self.buckets if b <= n)
+            items = self.queue.pop_ready(now, limit=want, force=force)
+            if not items:
+                break  # flush policy says keep batching
+            total += len(items)
+            self.learn(self._collate(items))
+        if total:
+            self.metrics.sample_queue_depth(self.queue.depth(now))
+        return total
+
+    def _collate(self, items: List[Tuple[np.ndarray, np.ndarray, np.float32]]) -> SparseBatch:
+        p = max(it[0].size for it in items)
+        B = len(items)
+        idx = np.zeros((B, p), dtype=np.int32)
+        val = np.zeros((B, p), dtype=np.float32)
+        y = np.zeros((B,), dtype=np.float32)
+        for b, (i, v, yy) in enumerate(items):
+            idx[b, : i.size] = i
+            val[b, : v.size] = v
+            y[b] = yy
+        return SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y))

@@ -1,0 +1,73 @@
+"""Serving counters shared by every endpoint: throughput, queue depth, and
+request-latency percentiles.  Plain in-process accumulators — the snapshot
+dict is what benchmarks serialize (BENCH_serving.json) and what the CLI
+prints after a run; nothing here touches jax.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class ServingMetrics:
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self.t_start = clock()
+        self.counters: Dict[str, int] = defaultdict(int)
+        self._latencies: Dict[str, List[float]] = defaultdict(list)
+        self._depth_samples: List[int] = []
+
+    def reset_clock(self, now: Optional[float] = None) -> None:
+        """Restart the throughput window (e.g. after warmup compiles, which
+        would otherwise dominate elapsed_s and every *_per_s rate)."""
+        self.t_start = now if now is not None else self._clock()
+
+    # -- recording ----------------------------------------------------------
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] += n
+
+    def record_latency(self, kind: str, seconds: float) -> None:
+        self._latencies[kind].append(float(seconds))
+
+    def sample_queue_depth(self, depth: int) -> None:
+        self._depth_samples.append(int(depth))
+
+    # -- reading ------------------------------------------------------------
+
+    def elapsed(self, now: Optional[float] = None) -> float:
+        return (now if now is not None else self._clock()) - self.t_start
+
+    def percentiles(self, kind: str) -> Dict[str, float]:
+        xs = self._latencies.get(kind)
+        if not xs:
+            return {}
+        arr = np.asarray(xs)
+        return {
+            "count": int(arr.size),
+            "mean_ms": float(arr.mean() * 1e3),
+            "p50_ms": float(np.percentile(arr, 50) * 1e3),
+            "p99_ms": float(np.percentile(arr, 99) * 1e3),
+            "max_ms": float(arr.max() * 1e3),
+        }
+
+    def snapshot(self, now: Optional[float] = None) -> Dict[str, object]:
+        elapsed = max(self.elapsed(now), 1e-9)
+        out: Dict[str, object] = {
+            "elapsed_s": elapsed,
+            "counters": dict(self.counters),
+        }
+        for name, total in self.counters.items():
+            out[f"{name}_per_s"] = total / elapsed
+        for kind in self._latencies:
+            out[f"latency_{kind}"] = self.percentiles(kind)
+        if self._depth_samples:
+            arr = np.asarray(self._depth_samples)
+            out["queue_depth"] = {
+                "mean": float(arr.mean()),
+                "max": int(arr.max()),
+            }
+        return out

@@ -1,0 +1,128 @@
+"""Request objects and the admission queue shared by every serving frontend.
+
+The queue implements *micro-batching*: items accumulate until a flush
+triggers — by size (``max_batch`` waiting), by deadline (the oldest waiter
+has aged past ``max_delay``), or by force (the engine has nothing else to
+overlap with, so waiting buys no batching).  Arrival timestamps are plain
+floats against a caller-supplied clock, so benchmarks can drive Poisson
+traffic through a virtual clock and tests stay deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Any, List, Optional
+
+import numpy as np
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a prompt plus decode limits.  ``arrival`` is
+    in the timebase of whatever clock drives the serving loop; None means
+    "already arrived" (stamped with the loop clock at admission)."""
+
+    tokens: np.ndarray  # [P] int32 prompt token ids
+    max_new_tokens: int = 32
+    arrival: Optional[float] = None
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, dtype=np.int32).reshape(-1)
+        assert self.tokens.size > 0, "empty prompt"
+        assert self.max_new_tokens >= 1
+
+
+class RequestFuture:
+    """Per-request completion handle: fills with generated tokens as the
+    engine emits them; ``result()`` blocks (thread-safe) until retirement."""
+
+    def __init__(self, request: Request):
+        self.request = request
+        self.tokens: List[int] = []
+        self.finish_reason: Optional[str] = None  # "eos" | "length"
+        self.first_token_time: Optional[float] = None
+        self.finish_time: Optional[float] = None
+        self._done = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def _finish(self, reason: str, now: float) -> None:
+        self.finish_reason = reason
+        self.finish_time = now
+        self._done.set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.request.rid} not finished")
+        return np.asarray(self.tokens, dtype=np.int32)
+
+    def latency(self) -> float:
+        assert self.finish_time is not None
+        return self.finish_time - self.request.arrival
+
+
+class AdmissionQueue:
+    """FIFO micro-batching queue over arbitrary items (LM request futures,
+    linear-service examples).  ``pop_ready`` only ever returns items whose
+    arrival stamp is <= now — the Poisson benchmark submits the whole trace
+    up front and lets the clock admit it."""
+
+    def __init__(self, max_batch: int = 8, max_delay: float = 0.0):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.max_delay = max_delay
+        self._items: List[Any] = []
+        self._lock = threading.Lock()
+
+    def put(self, item: Any, arrival: Optional[float] = None) -> None:
+        """``arrival=None`` means already arrived, whatever the timebase."""
+        with self._lock:
+            self._items.append((None if arrival is None else float(arrival), item))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    @staticmethod
+    def _arrived(a: Optional[float], now: float) -> bool:
+        return a is None or a <= now
+
+    def depth(self, now: float) -> int:
+        """Waiting items that have actually arrived by ``now``."""
+        with self._lock:
+            return sum(1 for a, _ in self._items if self._arrived(a, now))
+
+    def next_arrival(self, now: float) -> Optional[float]:
+        """Earliest future arrival (> now), for virtual-clock advancement."""
+        with self._lock:
+            future = [a for a, _ in self._items if a is not None and a > now]
+        return min(future) if future else None
+
+    def _flush_triggered(self, arrived, now: float, force: bool) -> bool:
+        if not arrived:
+            return False
+        if force or len(arrived) >= self.max_batch:
+            return True
+        oldest = min(a if a is not None else float("-inf") for a, _ in arrived)
+        return now - oldest >= self.max_delay
+
+    def pop_ready(self, now: float, limit: Optional[int] = None, force: bool = False) -> List[Any]:
+        """Pop up to ``limit`` arrived items in FIFO order, or [] when the
+        flush policy says to keep batching."""
+        if limit is not None and limit <= 0:
+            return []
+        with self._lock:
+            arrived = [(a, it) for a, it in self._items if self._arrived(a, now)]
+            if not self._flush_triggered(arrived, now, force):
+                return []
+            n = len(arrived) if limit is None else min(limit, len(arrived))
+            take = arrived[:n]
+            taken_ids = {id(it) for _, it in take}
+            self._items = [(a, it) for a, it in self._items if id(it) not in taken_ids]
+        return [it for _, it in take]

@@ -3,12 +3,14 @@ temperature sampling.  The decode path is what the decode_* / long_* shape
 cells lower (one new token against a seq_len-deep cache)."""
 from __future__ import annotations
 
-from typing import Any, Optional
+import time
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ArchConfig
+from repro.models import transformer
 from repro.models.api import ModelFns
 
 
@@ -33,16 +35,39 @@ def make_serve_step(cfg: ArchConfig, model: ModelFns, *, temperature: float = 0.
     return serve_step
 
 
-def generate(cfg: ArchConfig, model: ModelFns, params, batch, n_new: int):
-    """Convenience loop (examples / tests): prefill then greedy-decode
-    n_new tokens.  Python loop — fine at example scale."""
+def generate(cfg: ArchConfig, model: ModelFns, params, batch, n_new: int,
+             *, temperature: float = 0.0, seed: int = 0,
+             timings: Optional[Dict[str, float]] = None):
+    """Convenience loop (examples / tests / the engine's parity baseline):
+    prefill then decode n_new tokens — greedy, or sampled with a
+    split-per-step key when temperature > 0.  Python loop — fine at example
+    scale.  Pass a dict as ``timings`` to receive block_until_ready-accurate
+    "prefill_s" / "decode_s" (launch/serve.py's static driver reads them)."""
     prefill = jax.jit(make_prefill_step(cfg, model))
-    step = jax.jit(make_serve_step(cfg, model))
-    tok, _, cache = prefill(params, batch)
+    step = jax.jit(make_serve_step(cfg, model, temperature=temperature), donate_argnums=1)
+    t0 = time.monotonic()
+    tok, last_logits, cache = prefill(params, batch)
+    if timings is not None:
+        jax.block_until_ready(tok)
+        timings["prefill_s"] = time.monotonic() - t0
     P = cfg.n_patches if cfg.n_patches else 0
     pos = batch["tokens"].shape[1] + P
+    # decode writes k/v at pos..pos+n_new-2: grow past the prefill headroom
+    # or the scatter silently drops out-of-bounds writes (dense-KV families)
+    cache = transformer.grow_cache(cache, pos + n_new)
+    key = jax.random.PRNGKey(seed) if temperature > 0.0 else None
+    if key is not None:  # resample the prefill token (argmax by default)
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, last_logits / temperature, axis=-1).astype(jnp.int32)
     out = [tok]
+    t0 = time.monotonic()
     for k in range(n_new - 1):
-        tok, _, cache = step(params, cache, tok, jnp.asarray(pos + k, jnp.int32))
+        sub = None
+        if key is not None:
+            key, sub = jax.random.split(key)
+        tok, _, cache = step(params, cache, tok, jnp.asarray(pos + k, jnp.int32), sub)
         out.append(tok)
+    if timings is not None:
+        jax.block_until_ready(tok)
+        timings["decode_s"] = time.monotonic() - t0
     return jnp.stack(out, axis=1)  # [B, n_new]

@@ -1,0 +1,180 @@
+"""Online linear service: parity with the raw lazy trainer, O(p) predict
+parity, interleaved traffic, and the micro-batch frontend's exact-shape
+flush decomposition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LinearConfig,
+    ScheduleConfig,
+    SparseBatch,
+    current_weights,
+    flush,
+    init_state,
+    make_lazy_step,
+    predict_proba,
+    predict_proba_sparse,
+)
+from repro.serving import LinearService
+
+DIM = 97
+
+
+def _cfg(round_len=16):
+    return LinearConfig(
+        dim=DIM, round_len=round_len, lam1=0.01, lam2=0.005,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3),
+    )
+
+
+def _mk(rng, B, p):
+    idx = rng.randint(0, DIM, size=(B, p)).astype(np.int32)
+    val = (rng.uniform(-1, 1, size=(B, p)) * (rng.uniform(size=(B, p)) > 0.3)).astype(np.float32)
+    y = (rng.uniform(size=B) > 0.5).astype(np.float32)
+    return SparseBatch(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(y))
+
+
+def test_learn_parity_with_lazy_step():
+    """service.learn == driving make_lazy_step directly (same batches, same
+    round-boundary flushes): same losses, same caught-up weights, same bias —
+    feature padding to p_max is exact by the trainer's padding convention."""
+    cfg = _cfg()
+    rng = np.random.RandomState(0)
+    batches = [_mk(rng, 2, 5) for _ in range(40)]  # 40 steps over round_len=16
+
+    step = jax.jit(make_lazy_step(cfg))
+    ref = init_state(cfg)
+    ref_losses = []
+    for b in batches:
+        ref, loss = step(ref, b)
+        ref_losses.append(float(loss))
+        if int(ref.i) >= cfg.round_len:
+            ref = flush(cfg, ref)
+
+    svc = LinearService(cfg, p_max=8, micro_batch=4)
+    svc_losses = [svc.learn(b) for b in batches]
+
+    np.testing.assert_allclose(svc_losses, ref_losses, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(
+        svc.current_weights(), np.asarray(current_weights(cfg, ref)), rtol=1e-5, atol=1e-7
+    )
+    np.testing.assert_allclose(float(svc.state.b), float(ref.b), rtol=1e-6)
+    assert svc.metrics.counters["round_flushes"] == 2  # 40 steps / 16
+
+
+def test_interleaved_predict_does_not_perturb_learning():
+    cfg = _cfg()
+    rng = np.random.RandomState(1)
+    batches = [_mk(rng, 2, 5) for _ in range(20)]
+
+    plain = LinearService(cfg, p_max=8, micro_batch=4)
+    mixed = LinearService(cfg, p_max=8, micro_batch=4)
+    for b in batches:
+        plain.learn(b)
+        mixed.predict(_mk(rng, 3, 6))  # rng advance is irrelevant to state
+        mixed.learn(b)
+        mixed.predict(b)
+    np.testing.assert_array_equal(plain.current_weights(), mixed.current_weights())
+
+
+def test_predict_sparse_matches_dense_catchup():
+    """The O(p) touched-rows predict equals predict_proba's O(d) full
+    catch-up mid-round (stale weights present)."""
+    cfg = _cfg(round_len=32)
+    rng = np.random.RandomState(2)
+    step = jax.jit(make_lazy_step(cfg))
+    state = init_state(cfg)
+    for _ in range(11):  # mid-round: many weights stale
+        state, _ = step(state, _mk(rng, 2, 5))
+    for p in (1, 4, 7):
+        b = _mk(rng, 3, p)
+        np.testing.assert_allclose(
+            np.asarray(predict_proba_sparse(cfg, state, b)),
+            np.asarray(predict_proba(cfg, state, b)),
+            rtol=1e-6, atol=1e-7,
+        )
+
+
+def test_predict_sparse_dense_layout():
+    """predict_proba_sparse also serves the dense-baseline state layout
+    (wpsi [d,1]: always current, no catch-up)."""
+    from repro.core import make_dense_step
+
+    cfg = _cfg()
+    rng = np.random.RandomState(3)
+    state = init_state(cfg, mode="dense")
+    step = jax.jit(make_dense_step(cfg))
+    for _ in range(5):
+        state, _ = step(state, _mk(rng, 2, 5))
+    b = _mk(rng, 4, 6)
+    np.testing.assert_allclose(
+        np.asarray(predict_proba_sparse(cfg, state, b)),
+        np.asarray(predict_proba(cfg, state, b)),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_frontend_binary_flush_decomposition():
+    """7 queued singles flush as exact batches of 4, 2, 1 — no padded
+    examples (those would corrupt the bias gradient) — and the trained state
+    matches driving the lazy step with those exact groups."""
+    cfg = _cfg()
+    rng = np.random.RandomState(4)
+    examples = []
+    for _ in range(7):
+        p = int(rng.randint(2, 5))
+        examples.append((
+            rng.randint(0, DIM, size=p).astype(np.int32),
+            rng.uniform(-1, 1, size=p).astype(np.float32),
+            float(rng.randint(0, 2)),
+        ))
+
+    svc = LinearService(cfg, p_max=8, micro_batch=4)
+    for i, v, y in examples:
+        svc.submit_learn(i, v, y, arrival=0.0)
+    trained = svc.poll(now=0.0, force=True)
+    assert trained == 7
+    assert svc.metrics.counters["learn_steps"] == 3  # groups of 4, 2, 1
+    assert len(svc.queue) == 0
+
+    # reference: the same binary grouping driven through the raw step
+    ref = init_state(cfg)
+    step = jax.jit(make_lazy_step(cfg))
+    groups = [examples[:4], examples[4:6], examples[6:]]
+    for g in groups:
+        P = 8
+        idx = np.zeros((len(g), P), np.int32)
+        val = np.zeros((len(g), P), np.float32)
+        y = np.zeros((len(g),), np.float32)
+        for b, (i, v, yy) in enumerate(g):
+            idx[b, : i.size] = i
+            val[b, : v.size] = v
+            y[b] = yy
+        ref, _ = step(ref, SparseBatch(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(y)))
+    np.testing.assert_allclose(
+        svc.current_weights(), np.asarray(current_weights(cfg, ref)), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_frontend_respects_flush_policy():
+    svc = LinearService(_cfg(), p_max=8, micro_batch=4, max_delay=10.0)
+    svc.submit_learn([1, 2], [0.5, 0.5], 1.0, arrival=0.0)
+    assert svc.poll(now=1.0) == 0  # 1 < micro_batch, deadline not reached
+    assert svc.poll(now=11.0) == 1  # deadline flush
+    assert svc.metrics.counters["learn_steps"] == 1
+
+
+def test_compile_counts_bounded_by_buckets():
+    """Steady traffic compiles at most one step per binary bucket size and
+    one predict per bucket — fixed shapes thereafter."""
+    cfg = _cfg()
+    rng = np.random.RandomState(5)
+    svc = LinearService(cfg, p_max=8, micro_batch=4)
+    for B in (1, 2, 4, 2, 1, 4, 4, 1):
+        svc.learn(_mk(rng, B, 5))
+        svc.predict(_mk(rng, B, 3))
+    counts = svc.compile_counts()
+    assert counts["step"] <= 3  # buckets 1, 2, 4
+    assert counts["predict"] <= 3

@@ -1,0 +1,56 @@
+"""Admission-queue flush policies and the metrics accumulators."""
+import numpy as np
+
+from repro.serving import AdmissionQueue, ServingMetrics
+
+
+def test_flush_by_size():
+    q = AdmissionQueue(max_batch=3, max_delay=100.0)
+    q.put("a", arrival=0.0)
+    q.put("b", arrival=0.0)
+    assert q.pop_ready(now=1.0) == []  # 2 < max_batch, deadline far away
+    q.put("c", arrival=1.0)
+    assert q.pop_ready(now=1.0) == ["a", "b", "c"]
+    assert len(q) == 0
+
+
+def test_flush_by_deadline():
+    q = AdmissionQueue(max_batch=8, max_delay=0.5)
+    q.put("a", arrival=0.0)
+    assert q.pop_ready(now=0.4) == []
+    assert q.pop_ready(now=0.6) == ["a"]
+
+
+def test_flush_by_force_and_limit():
+    q = AdmissionQueue(max_batch=8, max_delay=100.0)
+    for i in range(5):
+        q.put(i, arrival=0.0)
+    assert q.pop_ready(now=0.0, limit=2, force=True) == [0, 1]  # FIFO
+    assert q.pop_ready(now=0.0, limit=0, force=True) == []
+    assert q.pop_ready(now=0.0, force=True) == [2, 3, 4]
+
+
+def test_future_arrivals_are_invisible():
+    q = AdmissionQueue(max_batch=1)
+    q.put("later", arrival=5.0)
+    assert q.depth(now=1.0) == 0
+    assert q.pop_ready(now=1.0, force=True) == []
+    assert q.next_arrival(now=1.0) == 5.0
+    assert q.pop_ready(now=5.0) == ["later"]
+
+
+def test_metrics_snapshot():
+    m = ServingMetrics(clock=lambda: 0.0)
+    m.count("tokens_out", 10)
+    for ms in [1.0, 2.0, 3.0, 4.0]:
+        m.record_latency("request", ms / 1e3)
+    m.sample_queue_depth(2)
+    m.sample_queue_depth(4)
+    snap = m.snapshot(now=2.0)
+    assert snap["counters"]["tokens_out"] == 10
+    assert snap["tokens_out_per_s"] == 5.0
+    lat = snap["latency_request"]
+    assert lat["count"] == 4
+    np.testing.assert_allclose(lat["p50_ms"], 2.5)
+    assert lat["max_ms"] == 4.0
+    assert snap["queue_depth"] == {"mean": 3.0, "max": 4}
