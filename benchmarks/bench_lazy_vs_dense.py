@@ -9,7 +9,6 @@ loop) — the algorithmic O(d/p) ratio is reported alongside.
 import time
 
 import jax
-import numpy as np
 
 from repro.core import LinearConfig, ScheduleConfig, init_state, make_round_fn
 from repro.data import MEDLINE_DIM, BowConfig, SyntheticBow

@@ -18,14 +18,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-_PASSES = 3  # best-of: shared-CI CPUs jitter ±20% at the ~10ms/step scale
-
 from repro.configs import get_arch
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
-from repro.models import build, init_params
+from repro.models import build, init_params, transformer
 from repro.serving import EngineConfig, LinearService, ServeEngine, ServingMetrics
 from repro.train import make_prefill_step, make_serve_step
-from repro.models import transformer
+
+_PASSES = 3  # best-of: shared-CI CPUs jitter ±20% at the ~10ms/step scale
 
 
 def _workload(rng, n_requests, buckets, max_len):

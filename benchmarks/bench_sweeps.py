@@ -1,0 +1,128 @@
+"""Sweep benchmark: one vmapped program training a 16-point (lam1, lam2)
+grid vs 16 sequential per-config fits on the same data.
+
+The sequential baseline is what the core API offers a sweep today: each grid
+point builds `core.make_round_fn` with its lams baked into the trace as
+constants, so every point pays its own trace + XLA compile and its own
+per-round dispatch.  The batched sweep compiles ONE program whose config
+axis is vmapped ([n_cfg, d, 2] state, per-config DP caches) and amortizes
+everything — which is the F10-SGD observation that sweep/CV throughput, not
+single-fit speed, dominates production training cost.  End-to-end wall time
+(compiles included: that is literally the cost of running a sweep) is the
+headline; steady-state per-round time rides along.
+
+Writes BENCH_sweeps.json (CI artifact, regression-gated by
+benchmarks/check_regression.py against benchmarks/baselines/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core import LinearConfig, ScheduleConfig
+from repro.data import BowConfig, SyntheticBow
+from repro.sweeps import log_ladder, make_batched_round_fn, make_grid, run_sequential
+from repro.sweeps.batched_trainer import init_batched_state
+
+
+def run(fast: bool = False, json_path: str = "BENCH_sweeps.json"):
+    dim = 8_192 if fast else 50_000
+    round_len = 128 if fast else 512
+    n_rounds = 2
+    batch = 4
+    base = LinearConfig(
+        dim=dim,
+        flavor="fobos",
+        round_len=round_len,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+    )
+    grid = make_grid(base, log_ladder(1e-3, 1e-6, 4), log_ladder(1e-4, 1e-7, 4))
+    bow = SyntheticBow(
+        BowConfig(dim=dim, p_max=32, p_mean=16.0, informative_pool=1024, n_informative=128)
+    )
+    rounds = [bow.sample_round(r, round_len, batch) for r in range(n_rounds)]
+    n_steps = n_rounds * round_len
+    cfg_steps = grid.n_cfg * n_steps
+
+    # --- batched: one compile, one vmapped program over the config axis ---
+    t0 = time.monotonic()
+    round_fn = make_batched_round_fn(grid.base)
+    bstate = init_batched_state(grid.base, grid.n_cfg)
+    hp = grid.hypers()
+    for rb in rounds:
+        bstate, _ = round_fn(bstate, hp, rb)
+    jax.block_until_ready(bstate.wpsi)
+    t_batched = time.monotonic() - t0
+
+    # steady state: same program, compile already paid
+    t0 = time.monotonic()
+    for rb in rounds:
+        bstate, _ = round_fn(bstate, hp, rb)
+    jax.block_until_ready(bstate.wpsi)
+    t_batched_steady = time.monotonic() - t0
+
+    # --- sequential: one trace + compile + fit per grid point ---
+    t0 = time.monotonic()
+    run_sequential(grid, rounds)
+    t_seq = time.monotonic() - t0
+
+    speedup = t_seq / t_batched
+    rows = [
+        (
+            "sweeps/batched_16pt",
+            1e6 * t_batched / cfg_steps,
+            f"cfg_steps_s={cfg_steps / t_batched:.0f}",
+        ),
+        (
+            "sweeps/batched_steady",
+            1e6 * t_batched_steady / cfg_steps,
+            f"cfg_steps_s={cfg_steps / t_batched_steady:.0f}",
+        ),
+        (
+            "sweeps/sequential_16pt",
+            1e6 * t_seq / cfg_steps,
+            f"cfg_steps_s={cfg_steps / t_seq:.0f}",
+        ),
+        ("sweeps/batched_vs_sequential", 0.0, f"speedup={speedup:.2f}x"),
+    ]
+    payload = {
+        "batched": {
+            "elapsed_s": t_batched,
+            "steady_elapsed_s": t_batched_steady,
+            "us_per_cfg_step": 1e6 * t_batched / cfg_steps,
+        },
+        "sequential": {
+            "elapsed_s": t_seq,
+            "us_per_cfg_step": 1e6 * t_seq / cfg_steps,
+        },
+        "speedup": speedup,
+        "grid": {
+            "n_cfg": grid.n_cfg,
+            "shape": list(grid.shape),
+            "dim": dim,
+            "round_len": round_len,
+            "n_rounds": n_rounds,
+            "batch": batch,
+        },
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="BENCH_sweeps.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(fast=args.fast, json_path=args.json):
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,8 @@ minibatch extensions).  Prints ``name,us_per_call,derived`` CSV.
   minibatch   lazy minibatch extension throughput
   serving     continuous-batching engine vs lock-step loop (Poisson traffic)
               + online linear predict/learn service; writes BENCH_serving.json
+  sweeps      vmap-batched 16-point (lam1, lam2) grid vs sequential fits;
+              writes BENCH_sweeps.json
 
 Roofline tables (per arch x shape x mesh) come from the dry-run artifacts:
 ``python -m repro.analysis.roofline`` (results/dryrun must exist).
@@ -29,6 +31,7 @@ def main() -> None:
         bench_minibatch,
         bench_scaling,
         bench_serving,
+        bench_sweeps,
     )
 
     steps = 128 if args.fast else 512
@@ -39,6 +42,7 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(),
         "minibatch": lambda: bench_minibatch.run(steps=min(steps, 256)),
         "serving": lambda: bench_serving.run(fast=args.fast),
+        "sweeps": lambda: bench_sweeps.run(fast=args.fast),
     }
     only = set(args.only.split(",")) if args.only else None
 

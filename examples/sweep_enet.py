@@ -1,0 +1,44 @@
+"""Hyperparameter-sweep quickstart: cross-validate a (lam1, lam2) grid in
+one vmapped program, then hot-swap the winner into the online service.
+
+Run:  PYTHONPATH=src python examples/sweep_enet.py
+"""
+
+import numpy as np
+
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.data import BowConfig, SyntheticBow
+from repro.serving import LinearService
+from repro.sweeps import kfold_cv, log_ladder, make_grid
+
+
+def main() -> None:
+    base = LinearConfig(
+        dim=5_000,
+        flavor="fobos",
+        round_len=64,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+    )
+    grid = make_grid(base, log_ladder(1e-3, 1e-6, 4), log_ladder(1e-4, 1e-7, 2))
+    bow = SyntheticBow(
+        BowConfig(dim=base.dim, p_max=32, p_mean=16.0, informative_pool=1024, n_informative=128)
+    )
+
+    # every lam1 stage of the warm-started path trains its (lam2,) configs
+    # as one compiled program; CV scores each config on held-out folds
+    result = kfold_cv(grid, bow, folds=3, batch=8, warm_start=True)
+    for c in range(grid.n_cfg):
+        cfg = grid.config_at(c)
+        mark = "  <- winner" if c == result.best_index else ""
+        print(f"lam1={cfg.lam1:.2e} lam2={cfg.lam2:.2e} cv_loss={result.cv_loss[c]:.4f}{mark}")
+
+    # the winning model goes live without a restart
+    service = LinearService(result.best_config, p_max=32, micro_batch=8)
+    service.swap_weights(result.best_weights, result.best_b, cfg=result.best_config)
+    chunk = bow.sample_round(12_345, 1, 4)
+    probs = service.predict(SparseBatch(idx=chunk.idx[0], val=chunk.val[0], y=chunk.y[0]))
+    print("served:", np.round(probs, 3))
+
+
+if __name__ == "__main__":
+    main()

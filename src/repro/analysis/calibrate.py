@@ -33,11 +33,10 @@ dry-run reports it directly.
 from __future__ import annotations
 
 import dataclasses
-import json
 from pathlib import Path
-from typing import Dict, Tuple
+from typing import Dict
 
-from repro.configs import SHAPES, ArchConfig, ShapeCell, cell_applicable, get_arch
+from repro.configs import SHAPES, cell_applicable, get_arch
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 

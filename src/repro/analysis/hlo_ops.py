@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, Tuple
+from typing import Dict
 
 _SHAPE = r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?"
 

@@ -58,6 +58,18 @@ FOBOS = "fobos"
 FLAVORS = (SGD, FOBOS)
 
 
+def concrete_zero(lam) -> bool:
+    """True iff ``lam`` is a *static* Python number equal to 0.
+
+    The lam1/lam2 fast paths ("no l1 term", "no l2 term") may only be taken
+    when the strength is a trace-time constant: repro.sweeps vmaps one
+    program over a config axis, passing lams as traced scalars, and a Python
+    ``lam == 0.0`` on a tracer would raise (and would wrongly specialize the
+    whole batch even if it didn't).  Traced lams always take the general
+    expressions, which reduce to the same values at 0."""
+    return isinstance(lam, (int, float)) and float(lam) == 0.0
+
+
 class RegCaches(NamedTuple):
     """Round-local DP caches. Arrays have length ``capacity + 1``; slot i is
     the prefix over round-local steps tau < i."""
@@ -76,10 +88,11 @@ def init_caches(capacity: int) -> RegCaches:
     )
 
 
-def log_a(eta: jnp.ndarray, lam2: float, flavor: str) -> jnp.ndarray:
-    """log of the per-step multiplicative decay factor."""
+def log_a(eta: jnp.ndarray, lam2, flavor: str) -> jnp.ndarray:
+    """log of the per-step multiplicative decay factor.  ``lam2`` may be a
+    traced scalar (per-config, under vmap); only a concrete 0 short-cuts."""
     eta = jnp.asarray(eta, dtype=jnp.float32)
-    if lam2 == 0.0:
+    if concrete_zero(lam2):
         return jnp.zeros_like(eta)
     if flavor == SGD:
         # a = 1 - eta*lam2  (requires eta*lam2 < 1; validated at config time)
@@ -90,7 +103,7 @@ def log_a(eta: jnp.ndarray, lam2: float, flavor: str) -> jnp.ndarray:
     raise ValueError(f"unknown flavor {flavor!r}")
 
 
-def extend(caches: RegCaches, i: jnp.ndarray, eta_i: jnp.ndarray, lam2: float, flavor: str) -> RegCaches:
+def extend(caches: RegCaches, i: jnp.ndarray, eta_i: jnp.ndarray, lam2, flavor: str) -> RegCaches:
     """Fill slot ``i+1`` given slots ``<= i`` are valid.  O(1) per step
     (the paper's DP recurrences, Lemma 1 + Thm 1/2).  ``i`` is the
     round-local step index about to be executed."""

@@ -22,20 +22,23 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .dp_caches import RegCaches
+from .dp_caches import RegCaches, concrete_zero
 
 
-def catchup_factors(psi: jnp.ndarray, k: jnp.ndarray, caches: RegCaches, lam1: float):
+def catchup_factors(psi: jnp.ndarray, k: jnp.ndarray, caches: RegCaches, lam1):
     """Per-entry multiplicative ``ratio`` and subtractive ``shift`` such that
     the lazy update is ``sgn(w) * relu(|w| * ratio - shift)``.
 
       ratio = exp(logP[k] - logP[psi])                (window product of a's)
       shift = lam1 * exp(logP[k]) * (B[k] - B[psi])   (collapsed lam1 shifts)
+
+    ``lam1`` may be a traced scalar (per-config, under vmap); only a
+    concrete 0 takes the no-l1 shortcut.
     """
     logP_k = caches.logP[k]
     logP_psi = caches.logP[psi]
     ratio = jnp.exp(logP_k - logP_psi)
-    if lam1 == 0.0:
+    if concrete_zero(lam1):
         shift = jnp.zeros_like(ratio)
     else:
         # Computed as exp(logP[k]) * (B[k]-B[psi]): with round-rebased caches
@@ -49,7 +52,7 @@ def catchup(
     psi: jnp.ndarray,
     k: jnp.ndarray,
     caches: RegCaches,
-    lam1: float,
+    lam1,
 ) -> jnp.ndarray:
     """Bring ``w`` current from per-entry round-local step ``psi`` to ``k``.
 

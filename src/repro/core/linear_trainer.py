@@ -37,6 +37,18 @@ LOGISTIC = "logistic"
 SQUARED = "squared"
 
 
+class Hypers(NamedTuple):
+    """The per-config hyperparameters a sweep varies.  Each field is a
+    scalar: a Python float in the single-config path (baked into the trace
+    as a constant) or a traced f32 (one lane of a vmapped config axis) in
+    the batched-sweep path.  Structure that changes the *program* — loss,
+    flavor, schedule kind, round_len — stays in LinearConfig."""
+
+    lam1: "float | jnp.ndarray"
+    lam2: "float | jnp.ndarray"
+    eta_scale: "float | jnp.ndarray"  # eta_t = eta_scale * unit_schedule(t)
+
+
 class SparseBatch(NamedTuple):
     """Padded sparse minibatch.  Padding convention: idx=0, val=0.0 — a
     zero-valued feature contributes nothing to predictions or gradients, and
@@ -121,21 +133,30 @@ def _predict_current(cfg, w, b, batch: SparseBatch):
     return z
 
 
-def make_lazy_step(cfg: LinearConfig):
-    sched = cfg.schedule.make()
-    validate_schedule(sched, cfg.lam2, cfg.flavor, horizon=10_000_000)
+def make_lazy_step_hp(cfg: LinearConfig):
+    """``step(state, batch, hp)`` with the regularization strengths and the
+    learning-rate scale as *call arguments* (possibly traced scalars) rather
+    than trace-time constants — the form :mod:`repro.sweeps` vmaps over a
+    config axis to train a whole (lam1, lam2, eta0) grid in one program.
 
-    def step(state: LinearState, batch: SparseBatch):
-        eta = sched(state.t)
+    Static structure (loss, flavor, round_len, schedule *shape*) still comes
+    from ``cfg``; ``eta_t = hp.eta_scale * unit_schedule(t)`` (exact: every
+    schedule kind is linear in eta0).  No schedule validation happens here —
+    callers with concrete hypers (make_lazy_step, sweeps.grid) validate
+    eagerly at construction time."""
+    unit_sched = cfg.schedule.unit().make()
+
+    def step(state: LinearState, batch: SparseBatch, hp: Hypers):
+        eta = jnp.asarray(hp.eta_scale, jnp.float32) * unit_sched(state.t)
         # O(1): fill DP cache slot i+1 with this step's eta (Lemma 1 / Thm 1-2)
-        caches = dp_caches.extend(state.caches, state.i, eta, cfg.lam2, cfg.flavor)
+        caches = dp_caches.extend(state.caches, state.i, eta, hp.lam2, cfg.flavor)
         idx_f = batch.idx.reshape(-1)
         # --- single gather: (w, psi) rows for the touched features ---
         g2 = state.wpsi[idx_f]  # [B*p, 2]
         w_g = g2[:, 0]
         psi_g = g2[:, 1].astype(jnp.int32)
         # --- lazy catch-up of touched weights: reg for tau in [psi, i) ---
-        w_cur = lazy_enet.catchup(w_g, psi_g, state.i, caches, cfg.lam1)
+        w_cur = lazy_enet.catchup(w_g, psi_g, state.i, caches, hp.lam1)
         # --- predict with current weights, loss gradient ---
         z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
         loss, gz = _grad_z(cfg, z, batch.y)
@@ -153,12 +174,33 @@ def make_lazy_step(cfg: LinearConfig):
     return step
 
 
-def make_dense_step(cfg: LinearConfig):
+def make_lazy_step(cfg: LinearConfig):
+    """Single-config lazy step: the hyper-parameterized step closed over
+    cfg's concrete (lam1, lam2, eta0) as trace constants.  eta is computed
+    as ``eta0 * unit_schedule(t)`` — same expression in the dense step and
+    in batched sweeps, so lazy/dense/swept paths share eta arithmetic
+    exactly (vs the pre-sweeps single-expression schedule it can differ in
+    the last ulp)."""
     sched = cfg.schedule.make()
     validate_schedule(sched, cfg.lam2, cfg.flavor, horizon=10_000_000)
+    step_hp = make_lazy_step_hp(cfg)
+    hp = Hypers(lam1=cfg.lam1, lam2=cfg.lam2, eta_scale=cfg.schedule.eta0)
 
     def step(state: LinearState, batch: SparseBatch):
-        eta = sched(state.t)
+        return step_hp(state, batch, hp)
+
+    return step
+
+
+def make_dense_step(cfg: LinearConfig):
+    validate_schedule(cfg.schedule.make(), cfg.lam2, cfg.flavor, horizon=10_000_000)
+    # eta via the unit schedule, the same expression the lazy step uses, so
+    # the lazy-vs-dense comparison stays arithmetic-identical
+    unit_sched = cfg.schedule.unit().make()
+    eta_scale = cfg.schedule.eta0
+
+    def step(state: LinearState, batch: SparseBatch):
+        eta = jnp.asarray(eta_scale, jnp.float32) * unit_sched(state.t)
         idx_f = batch.idx.reshape(-1)
         w_g = state.wpsi[idx_f, 0]  # already current
         z = _predict_current(cfg, w_g.reshape(batch.idx.shape), state.b, batch)
@@ -174,9 +216,14 @@ def make_dense_step(cfg: LinearConfig):
     return step
 
 
-def flush(cfg: LinearConfig, state: LinearState) -> LinearState:
-    """Bring every weight current and rebase the round (O(d), amortized)."""
-    w = lazy_enet.catchup(weights(state), psi(state), state.i, state.caches, cfg.lam1)
+def flush(cfg: LinearConfig, state: LinearState, lam1=None) -> LinearState:
+    """Bring every weight current and rebase the round (O(d), amortized).
+
+    ``lam1`` overrides cfg.lam1 (may be a traced per-config scalar — the
+    batched-sweep path, where the shared round counter makes this flush
+    batch-uniform: every config rebases at the same step)."""
+    lam1 = cfg.lam1 if lam1 is None else lam1
+    w = lazy_enet.catchup(weights(state), psi(state), state.i, state.caches, lam1)
     wpsi = jnp.stack([w, jnp.zeros_like(w)], axis=1)
     return LinearState(
         wpsi=wpsi,
@@ -187,9 +234,10 @@ def flush(cfg: LinearConfig, state: LinearState) -> LinearState:
     )
 
 
-def current_weights(cfg: LinearConfig, state: LinearState) -> jnp.ndarray:
+def current_weights(cfg: LinearConfig, state: LinearState, lam1=None) -> jnp.ndarray:
     """All weights brought current (pure; does not advance the round)."""
-    return lazy_enet.catchup(weights(state), psi(state), state.i, state.caches, cfg.lam1)
+    lam1 = cfg.lam1 if lam1 is None else lam1
+    return lazy_enet.catchup(weights(state), psi(state), state.i, state.caches, lam1)
 
 
 def make_round_fn(cfg: LinearConfig, mode: str):
@@ -232,6 +280,16 @@ def predict_proba_sparse(cfg: LinearConfig, state: LinearState, batch: SparseBat
         )
     z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
     return jax.nn.sigmoid(z) if cfg.loss == LOGISTIC else z
+
+
+def mean_loss(cfg: LinearConfig, state: LinearState, batch: SparseBatch, lam1=None) -> jnp.ndarray:
+    """Mean held-out loss on ``batch`` with lazily-current weights (pure).
+    ``lam1`` as in :func:`current_weights` — the sweeps CV path evaluates a
+    whole config axis through one vmap of this function."""
+    w = current_weights(cfg, state, lam1=lam1)
+    z = _predict_current(cfg, w[batch.idx], state.b, batch)
+    loss, _ = _grad_z(cfg, z, batch.y)
+    return jnp.mean(loss)
 
 
 def nnz(cfg: LinearConfig, state: LinearState, threshold: float = 0.0) -> jnp.ndarray:

@@ -83,6 +83,13 @@ class ScheduleConfig:
     decay_steps: int = 1
     min_ratio: float = 0.1
 
+    def unit(self) -> "ScheduleConfig":
+        """The same schedule with eta0=1.  Every kind here is *linear* in
+        eta0, so ``eta(t) == eta0 * unit(t)`` exactly — which is what lets
+        repro.sweeps treat the learning-rate scale as a per-config traced
+        scalar while the schedule's shape stays a trace-time constant."""
+        return dataclasses.replace(self, eta0=1.0)
+
     def make(self) -> Schedule:
         if self.kind == "constant":
             return constant(self.eta0)

@@ -129,7 +129,9 @@ def _opt_state_axes(optimizer: str, trunk_axes):
 
     from repro.optim import adafactor, adamw, sgd
 
-    tmap = lambda f, t: jax.tree.map(f, t, is_leaf=_is_axes_leaf)
+    def tmap(f, t):
+        return jax.tree.map(f, t, is_leaf=_is_axes_leaf)
+
     if optimizer == "adamw":
         return adamw.AdamWState(m=trunk_axes, v=trunk_axes, count=())
     if optimizer == "sgdm":

@@ -51,7 +51,7 @@ def _kernel(
     q_pos = qoff_ref[0, 0] + nq * BQ + jax.lax.iota(jnp.int32, BQ)  # absolute q positions
 
     def body(i, carry):
-        acc, m, l = carry
+        acc, m, den = carry
         k = k_ref[0, pl.dslice(i * bk, bk)].astype(jnp.float32)  # [BK, hd]
         v = v_ref[0, pl.dslice(i * bk, bk)].astype(jnp.float32)
         s = jax.lax.dot_general(
@@ -65,17 +65,17 @@ def _kernel(
         m_new = jnp.maximum(m, jnp.max(s, axis=1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[:, None])
-        l_new = l * alpha + jnp.sum(p, axis=1)
+        den_new = den * alpha + jnp.sum(p, axis=1)
         acc_new = acc * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
         )
-        return acc_new, m_new, l_new
+        return acc_new, m_new, den_new
 
     acc0 = jnp.zeros((BQ, q.shape[1]), jnp.float32)
     m0 = jnp.full((BQ,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((BQ,), jnp.float32)
-    acc, m, l = jax.lax.fori_loop(0, Skv // bk, body, (acc0, m0, l0))
-    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    den0 = jnp.zeros((BQ,), jnp.float32)
+    acc, m, den = jax.lax.fori_loop(0, Skv // bk, body, (acc0, m0, den0))
+    out = acc / jnp.maximum(den, 1e-30)[:, None]
     out_ref[0] = out.astype(out_ref.dtype)
 
 

@@ -14,28 +14,27 @@ Usage:
   python -m repro.launch.dryrun --all --mesh both --skip-done
 """
 
-import argparse
-import json
-import re
-import time
-import traceback
-from pathlib import Path
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
 
-import jax
+import jax  # noqa: E402
 
-from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_arch
-from repro.dist import api as dist_api
-from repro.dist.sharding import (
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_arch  # noqa: E402
+from repro.dist import api as dist_api  # noqa: E402
+from repro.dist.sharding import (  # noqa: E402
     batch_axes,
     cache_axes,
     make_rules,
     shardings_for_axes,
     train_state_axes,
 )
-from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import input_specs
-from repro.models import params as pp
-from repro.train import make_train_step
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import params as pp  # noqa: E402
+from repro.train import make_train_step  # noqa: E402
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 

@@ -9,12 +9,12 @@ command.
   python -m repro.launch.hillclimb --arch qwen15_32b --shape train_4k \
       --patch remat=False --hlo
 """
-import argparse
-import dataclasses
-import json
-from pathlib import Path
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+from pathlib import Path  # noqa: E402
 
-from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "hillclimb"
 

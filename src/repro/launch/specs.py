@@ -3,7 +3,7 @@ input — weak-type-correct, shardable, zero allocation.  The dry-run lowers
 against exactly these."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

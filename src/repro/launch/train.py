@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,6 @@ import numpy as np
 from repro.checkpoint import checkpointer
 from repro.configs import get_arch
 from repro.data import LMDataConfig, SyntheticLMData
-from repro.dist import api as dist_api
 from repro.dist import sharding as dist_sharding
 from repro.launch.mesh import host_mesh_from_spec
 from repro.models import build, init_params, make_train_batch_specs

@@ -25,7 +25,7 @@ RWKV internals — noted in DESIGN.md §6.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,7 @@ decode:  token [B] int32, pos scalar int32, cache (see cache_spec)
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -59,5 +59,7 @@ def update(params, grads, state: AdafactorState, lr, *, decay=0.8, eps=1e-30, cl
         return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr_new, vc_new
 
     out = jax.tree.map(upd, params, grads, state.vr, state.vc)
-    pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    def pick(i):
+        return jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+
     return pick(0), AdafactorState(vr=pick(1), vc=pick(2), count=count)

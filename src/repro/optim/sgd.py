@@ -26,5 +26,7 @@ def update(params, grads, state: SGDMState, lr, *, beta=0.9, wd=0.0):
         return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m_new
 
     out = jax.tree.map(upd, params, grads, state.mom)
-    pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    def pick(i):
+        return jax.tree.map(lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+
     return pick(0), SGDMState(mom=pick(1), count=state.count + 1)

@@ -52,9 +52,14 @@ class LinearService:
         self.state = lt.init_state(cfg, w0)
         self.metrics = metrics or ServingMetrics()
         self.queue = AdmissionQueue(max_batch=micro_batch, max_delay=max_delay)
-        self._step = jax.jit(lt.make_lazy_step(cfg), donate_argnums=0)
-        self._flush = jax.jit(functools.partial(lt.flush, cfg), donate_argnums=0)
-        self._predict = jax.jit(functools.partial(lt.predict_proba_sparse, cfg))
+        self._build_jits()
+
+    def _build_jits(self) -> None:
+        """(Re)build the jitted step/flush/predict closed over self.cfg —
+        from __init__ and from a cfg-changing swap_weights."""
+        self._step = jax.jit(lt.make_lazy_step(self.cfg), donate_argnums=0)
+        self._flush = jax.jit(functools.partial(lt.flush, self.cfg), donate_argnums=0)
+        self._predict = jax.jit(functools.partial(lt.predict_proba_sparse, self.cfg))
 
     # -- introspection ------------------------------------------------------
 
@@ -67,6 +72,28 @@ class LinearService:
 
     def current_weights(self) -> np.ndarray:
         return np.asarray(lt.current_weights(self.cfg, self.state))
+
+    # -- sweep integration ---------------------------------------------------
+
+    def swap_weights(self, w, b: float = 0.0, cfg: Optional[LinearConfig] = None) -> None:
+        """Hot-swap a finished sweep's winning model into the live service.
+
+        The new state opens a fresh round (psi=0, empty caches — the swapped
+        weights are already current) with the global step ``t`` preserved so
+        attenuating schedules do not restart hot.  Passing ``cfg`` also
+        swaps the winning hyperparameters; the jitted step/flush/predict
+        close over the lams as constants, so that costs one rebuild per
+        swap — never a per-request recompile.  The feature space is fixed:
+        online requests in flight keep indexing the same rows."""
+        if cfg is not None and cfg != self.cfg:
+            assert cfg.dim == self.cfg.dim, "swap cannot change the feature space"
+            self.cfg = cfg
+            self._build_jits()
+        t = self.state.t
+        self.state = lt.init_state(self.cfg, np.asarray(w, np.float32))._replace(
+            b=jnp.asarray(b, jnp.float32), t=t
+        )
+        self.metrics.count("weight_swaps")
 
     # -- padding ------------------------------------------------------------
 

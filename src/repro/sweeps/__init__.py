@@ -1,0 +1,34 @@
+"""repro.sweeps — vmap-batched, warm-started (lam1, lam2) regularization
+paths with k-fold CV over the lazy elastic-net trainer (DESIGN.md §10)."""
+
+from .batched_trainer import (
+    HYPER_AXES,
+    STATE_AXES,
+    batched_current_weights,
+    init_batched_state,
+    make_batched_eval,
+    make_batched_round_fn,
+    run_grid,
+    run_sequential,
+)
+from .cv import CVResult, kfold_cv
+from .grid import Grid, log_ladder, make_grid
+from .warm_start import PathResult, run_path
+
+__all__ = [
+    "HYPER_AXES",
+    "STATE_AXES",
+    "batched_current_weights",
+    "init_batched_state",
+    "make_batched_eval",
+    "make_batched_round_fn",
+    "run_grid",
+    "run_sequential",
+    "CVResult",
+    "kfold_cv",
+    "Grid",
+    "log_ladder",
+    "make_grid",
+    "PathResult",
+    "run_path",
+]

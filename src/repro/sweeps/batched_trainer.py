@@ -1,0 +1,140 @@
+"""vmap-batched lazy elastic-net training: a whole (lam1, lam2, eta0) grid
+in one compiled program.
+
+State layout: the ordinary :class:`~repro.core.LinearState` grows a leading
+config axis on ``wpsi`` ([n_cfg, d, 2]), ``b`` ([n_cfg]) and the DP caches
+([n_cfg, round_len+1] each) — while the round-local step ``i`` and global
+step ``t`` stay UNBATCHED scalars (:data:`STATE_AXES`).  Every config
+consumes the same data stream in lock-step, so the round boundary — and with
+it the flush + DP-cache rebase — is *batch-uniform*: one vmapped O(n_cfg*d)
+flush at the end of each scanned round, never a per-config Python branch
+(DESIGN.md §10).  A 16-point sweep is one gather -> scatter chain over a
+[n_cfg, d, 2] buffer per step, not 16 sequential fits each paying its own
+trace, compile, and dispatch.
+
+The per-config hyperparameters enter as stacked
+:class:`~repro.core.Hypers` lanes (``grid.hypers()``), vmapped alongside the
+state; ``core.make_lazy_step_hp`` is the shared single-config step they feed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linear_trainer as lt
+from repro.core.dp_caches import RegCaches, init_caches
+from repro.core.linear_trainer import Hypers, LinearConfig, LinearState, SparseBatch
+
+from .grid import Grid
+
+# vmap in/out axes for a config-batched LinearState: per-config weights,
+# bias and DP caches; shared (unbatched) round-local and global step.
+STATE_AXES = LinearState(wpsi=0, b=0, caches=RegCaches(logP=0, B=0, S=0), i=None, t=None)
+HYPER_AXES = Hypers(lam1=0, lam2=0, eta_scale=0)
+
+
+def init_batched_state(
+    base: LinearConfig,
+    n_cfg: int,
+    w0: Optional[np.ndarray] = None,
+    b0: Optional[np.ndarray] = None,
+) -> LinearState:
+    """Config-batched initial state.  ``w0`` ([n_cfg, d]) and ``b0``
+    ([n_cfg]) seed per-config weights/bias — the warm-start hook."""
+    wpsi = jnp.zeros((n_cfg, base.dim, 2), jnp.float32)
+    if w0 is not None:
+        w0 = jnp.asarray(w0, jnp.float32)
+        assert w0.shape == (n_cfg, base.dim), w0.shape
+        wpsi = wpsi.at[:, :, 0].set(w0)
+    b = jnp.zeros((n_cfg,), jnp.float32)
+    if b0 is not None:
+        b = jnp.asarray(b0, jnp.float32).reshape(n_cfg)
+    caches = init_caches(base.round_len)
+    return LinearState(
+        wpsi=wpsi,
+        b=b,
+        caches=jax.tree.map(lambda a: jnp.broadcast_to(a, (n_cfg,) + a.shape), caches),
+        i=jnp.zeros((), jnp.int32),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_batched_round_fn(base: LinearConfig):
+    """jit'd ``round_fn(bstate, hp, round_batches) -> (bstate, losses)``
+    scanning a whole round for every config lane at once, then applying the
+    batch-uniform flush + DP-cache rebase at the boundary.  ``round_batches``
+    is an UNBATCHED [R, B, p] SparseBatch — every config sees the same data;
+    ``losses`` comes back [n_cfg, R]."""
+    step_hp = lt.make_lazy_step_hp(base)
+
+    def cfg_round(state: LinearState, hp: Hypers, round_batches: SparseBatch):
+        state, losses = jax.lax.scan(lambda s, rb: step_hp(s, rb, hp), state, round_batches)
+        # round boundary is shared across the config axis (i is unbatched),
+        # so the O(d) flush is batch-uniform — hoisted out of the scan, one
+        # vmapped sweep per round (DESIGN.md §10).
+        return lt.flush(base, state, lam1=hp.lam1), losses
+
+    vround = jax.vmap(cfg_round, in_axes=(STATE_AXES, HYPER_AXES, None), out_axes=(STATE_AXES, 0))
+    return jax.jit(vround, donate_argnums=0)
+
+
+def make_batched_eval(base: LinearConfig):
+    """jit'd ``eval_fn(bstate, lam1, batch) -> [n_cfg]`` mean held-out loss
+    per config lane (pure; one shared eval batch)."""
+
+    def eval_one(state: LinearState, lam1, batch: SparseBatch):
+        return lt.mean_loss(base, state, batch, lam1=lam1)
+
+    return jax.jit(jax.vmap(eval_one, in_axes=(STATE_AXES, 0, None)))
+
+
+def batched_current_weights(base: LinearConfig, bstate: LinearState, lam1) -> jnp.ndarray:
+    """All config lanes' weights brought current -> [n_cfg, d]."""
+    fn = jax.vmap(
+        lambda s, l1: lt.current_weights(base, s, lam1=l1),
+        in_axes=(STATE_AXES, 0),
+    )
+    return fn(bstate, jnp.asarray(lam1))
+
+
+def run_grid(
+    grid: Grid,
+    rounds: Sequence[SparseBatch],
+    w0: Optional[np.ndarray] = None,
+    b0: Optional[np.ndarray] = None,
+) -> Tuple[LinearState, np.ndarray]:
+    """Train every grid point on ``rounds`` (a list of [R, B, p] round
+    batches, identical shapes) in one vmapped program.  Returns the final
+    batched state (flushed: weights current) and losses [n_cfg, n_rounds*R].
+    """
+    round_fn = make_batched_round_fn(grid.base)
+    bstate = init_batched_state(grid.base, grid.n_cfg, w0=w0, b0=b0)
+    hp = grid.hypers()
+    losses = []
+    for rb in rounds:
+        bstate, ls = round_fn(bstate, hp, rb)
+        losses.append(np.asarray(ls))
+    return bstate, np.concatenate(losses, axis=1)
+
+
+def run_sequential(grid: Grid, rounds: Sequence[SparseBatch]) -> Tuple[np.ndarray, np.ndarray]:
+    """The baseline a sweep replaces: one `core.make_round_fn` fit per grid
+    point, each paying its own trace + compile (lams are baked constants)
+    and its own per-round dispatch.  Returns (weights [n_cfg, d],
+    losses [n_cfg, n_rounds*R])."""
+    all_w, all_l = [], []
+    for c in range(grid.n_cfg):
+        cfg = grid.config_at(c)
+        round_fn = lt.make_round_fn(cfg, "lazy")
+        state = lt.init_state(cfg)
+        losses = []
+        for rb in rounds:
+            state, ls = round_fn(state, rb)
+            losses.append(np.asarray(ls))
+        all_w.append(np.asarray(state.wpsi[:, 0]))  # flushed: current
+        all_l.append(np.concatenate(losses))
+    return np.stack(all_w), np.stack(all_l)

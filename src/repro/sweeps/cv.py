@@ -1,0 +1,102 @@
+"""k-fold cross-validation over synthetic bag-of-words streams.
+
+The counter-seeded :class:`~repro.data.SyntheticBow` generator makes folds
+trivial and exactly reproducible: fold ``f`` IS round-chunk ``f`` of the
+stream.  For each fold the whole grid trains on the other ``k-1`` chunks
+(warm-started along the lam1 path by default, one compiled program per
+stage shape) and is scored on the held-out chunk's examples with the
+batched evaluator — per-config mean held-out loss in one vmap.  The winner
+is the argmin of the fold-averaged loss and is then REFIT on all folds (the
+fold fits each held a chunk out); ``launch/sweep.py`` hands its
+LinearConfig plus the refit weights to ``LinearService.swap_weights``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear_trainer import LinearConfig, SparseBatch
+from repro.data.synthetic_bow import SyntheticBow
+
+from .batched_trainer import init_batched_state, make_batched_eval, make_batched_round_fn
+from .grid import Grid
+from .warm_start import run_path
+
+
+@dataclasses.dataclass(frozen=True)
+class CVResult:
+    fold_loss: np.ndarray  # [folds, n_cfg] held-out loss per fold
+    cv_loss: np.ndarray  # [n_cfg] fold-averaged held-out loss
+    best_index: int  # flat (lam1-major) index of the winner
+    best_config: LinearConfig
+    best_weights: np.ndarray  # [d] winner's weights refit on ALL folds
+    best_b: float
+
+
+def _flatten_eval(chunk: SparseBatch) -> SparseBatch:
+    """[R, B, p] round chunk -> one [R*B, p] held-out eval batch."""
+    r, b, p = chunk.idx.shape
+    return SparseBatch(
+        idx=chunk.idx.reshape(r * b, p),
+        val=chunk.val.reshape(r * b, p),
+        y=chunk.y.reshape(r * b),
+    )
+
+
+def kfold_cv(
+    grid: Grid,
+    bow: SyntheticBow,
+    folds: int = 5,
+    rounds_per_fold: int = 1,
+    batch: int = 8,
+    warm_start: bool = True,
+) -> CVResult:
+    """Train/evaluate the grid over ``folds`` chunks of the bow stream.
+    Each chunk is ``rounds_per_fold`` rounds of [round_len, batch, p_max]."""
+    assert folds >= 2, "k-fold CV needs k >= 2"
+    base = grid.base
+    chunks: List[List[SparseBatch]] = [
+        [
+            bow.sample_round(f * rounds_per_fold + r, base.round_len, batch)
+            for r in range(rounds_per_fold)
+        ]
+        for f in range(folds)
+    ]
+    eval_fn = make_batched_eval(base)
+    round_fn = make_batched_round_fn(base)  # ONE compile: all folds + refit
+    lam1 = grid.hypers().lam1
+    fold_loss = np.zeros((folds, grid.n_cfg), np.float64)
+    for f in range(folds):
+        train_rounds = [rb for g in range(folds) if g != f for rb in chunks[g]]
+        fit = run_path(grid, train_rounds, warm_start=warm_start, round_fn=round_fn)
+        # flushed solutions -> fresh (current) batched state for the evaluator
+        bstate = init_batched_state(base, grid.n_cfg, w0=fit.weights, b0=fit.b)
+        held_out = _concat_eval([_flatten_eval(rb) for rb in chunks[f]])
+        fold_loss[f] = np.asarray(eval_fn(bstate, lam1, held_out))
+    cv_loss = fold_loss.mean(axis=0)
+    best = int(np.argmin(cv_loss))
+    # the deployable model must see every chunk: refit the (whole) path on
+    # all folds' data and keep the winning lane
+    refit = run_path(
+        grid, [rb for c in chunks for rb in c], warm_start=warm_start, round_fn=round_fn
+    )
+    return CVResult(
+        fold_loss=fold_loss,
+        cv_loss=cv_loss,
+        best_index=best,
+        best_config=grid.config_at(best),
+        best_weights=refit.weights[best],
+        best_b=float(refit.b[best]),
+    )
+
+
+def _concat_eval(batches: List[SparseBatch]) -> SparseBatch:
+    return SparseBatch(
+        idx=jnp.concatenate([b.idx for b in batches]),
+        val=jnp.concatenate([b.val for b in batches]),
+        y=jnp.concatenate([b.y for b in batches]),
+    )

@@ -1,0 +1,123 @@
+"""Grid / path specifications for (lam1, lam2, eta0) hyperparameter sweeps.
+
+A :class:`Grid` is the cartesian product of a lam1 ladder, a lam2 ladder,
+and an eta0 ladder over one shared :class:`~repro.core.LinearConfig` (which
+fixes everything that changes the *program*: dim, loss, flavor, schedule
+kind, round_len).  The product is flattened **lam1-major**, so the configs
+sharing one lam1 value — the unit the warm-started path walks — form a
+contiguous ``[stage_size]`` slice, and ``stage_hypers(s)`` is a cheap view.
+
+The lam1 ladder is kept in **descending** order: continuation along a
+regularization path runs strong-to-weak (the heavily-regularized solution is
+sparse and close to zero, and each relaxation moves the optimum a short
+distance — the Elastic-GD path trick; see Allerbo & Jonasson 2022 and
+DESIGN.md §10).
+
+Validation is eager and concrete: the SGD flavor's ``eta*lam2 < 1``
+requirement is checked per (lam2, eta0) pair at construction, because inside
+the batched trainer the lams are traced and can no longer be inspected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear_trainer import Hypers, LinearConfig
+from repro.core.schedules import validate_schedule
+
+
+def log_ladder(hi: float, lo: float, n: int) -> tuple:
+    """``n`` log-spaced values from ``hi`` down to ``lo`` (inclusive) — the
+    strong-to-weak order warm-start continuation walks."""
+    assert hi >= lo > 0.0, f"need hi >= lo > 0, got {hi}, {lo}"
+    assert n >= 1
+    if n == 1:
+        return (float(hi),)
+    return tuple(float(v) for v in np.geomspace(hi, lo, n))
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """Flattened (lam1-major) cartesian sweep grid.  Build via make_grid."""
+
+    base: LinearConfig
+    lam1: tuple  # descending ladder, length n1
+    lam2: tuple  # length n2
+    eta0: tuple  # length ne
+
+    @property
+    def shape(self) -> tuple:
+        return (len(self.lam1), len(self.lam2), len(self.eta0))
+
+    @property
+    def n_cfg(self) -> int:
+        n1, n2, ne = self.shape
+        return n1 * n2 * ne
+
+    @property
+    def stage_size(self) -> int:
+        """Configs per lam1 stage (= n2 * ne)."""
+        return len(self.lam2) * len(self.eta0)
+
+    def flat(self) -> tuple:
+        """(lam1, lam2, eta0) as three float32 [n_cfg] arrays, lam1-major:
+        ``flat_index = i1 * stage_size + i2 * ne + ie``."""
+        g1, g2, ge = np.meshgrid(self.lam1, self.lam2, self.eta0, indexing="ij")
+        return (
+            g1.reshape(-1).astype(np.float32),
+            g2.reshape(-1).astype(np.float32),
+            ge.reshape(-1).astype(np.float32),
+        )
+
+    def hypers(self) -> Hypers:
+        """The whole grid as stacked [n_cfg] Hypers — the vmapped axis."""
+        f1, f2, fe = self.flat()
+        return Hypers(lam1=jnp.asarray(f1), lam2=jnp.asarray(f2), eta_scale=jnp.asarray(fe))
+
+    def stage_hypers(self, s: int) -> Hypers:
+        """Stage ``s`` of the lam1 path as stacked [stage_size] Hypers."""
+        hp = self.hypers()
+        lo, hi = s * self.stage_size, (s + 1) * self.stage_size
+        return Hypers(lam1=hp.lam1[lo:hi], lam2=hp.lam2[lo:hi], eta_scale=hp.eta_scale[lo:hi])
+
+    def unflatten(self, i: int) -> tuple:
+        """flat index -> (i1, i2, ie)."""
+        _, n2, ne = self.shape
+        return (i // (n2 * ne), (i // ne) % n2, i % ne)
+
+    def config_at(self, i: int) -> LinearConfig:
+        """The flat-index-``i`` point as a plain single-config LinearConfig
+        (sequential baselines, and the winner a CV sweep hands to serving)."""
+        i1, i2, ie = self.unflatten(i)
+        return dataclasses.replace(
+            self.base,
+            lam1=self.lam1[i1],
+            lam2=self.lam2[i2],
+            schedule=dataclasses.replace(self.base.schedule, eta0=self.eta0[ie]),
+        )
+
+
+def make_grid(
+    base: LinearConfig,
+    lam1_ladder,
+    lam2_ladder,
+    eta0_ladder=None,
+) -> Grid:
+    """Build (and validate) a sweep grid.  ``lam1_ladder`` is sorted
+    descending; ``eta0_ladder`` defaults to the base schedule's eta0."""
+    lam1 = tuple(sorted((float(v) for v in lam1_ladder), reverse=True))
+    lam2 = tuple(float(v) for v in lam2_ladder)
+    eta0 = tuple(float(v) for v in (eta0_ladder or (base.schedule.eta0,)))
+    assert lam1 and lam2 and eta0, "ladders must be non-empty"
+    assert all(v >= 0.0 for v in lam1 + lam2), "regularization strengths must be >= 0"
+    assert all(v > 0.0 for v in eta0), "eta0 must be > 0"
+    # eager SGD-flavor eta*lam2 < 1 check over every (lam2, eta0) pair: the
+    # batched trainer traces lams and cannot validate inside the program.
+    for e0 in eta0:
+        sched = dataclasses.replace(base.schedule, eta0=e0).make()
+        for l2 in lam2:
+            validate_schedule(sched, l2, base.flavor, horizon=10_000_000)
+    return Grid(base=base, lam1=lam1, lam2=lam2, eta0=eta0)

@@ -1,0 +1,75 @@
+"""Continuation along the lam1 path: warm-started regularization sweeps.
+
+Pathwise training runs the lam1 ladder strong-to-weak and seeds each stage's
+weights (and bias) from the previous stage's *flushed* solution — the
+Elastic-GD / glmnet path trick.  Under heavy l1 the optimum is sparse and
+near zero, and each relaxation of lam1 moves it a short distance, so the
+warm-started stage starts inside the basin the cold start has to cross the
+whole space to find.  Each stage is itself a vmapped batch over the
+``stage_size`` (lam2, eta0) configs sharing that lam1, and every stage
+reuses ONE jitted batched round function (stage shapes are identical, so
+the program compiles once for the whole path).
+
+``warm_start=False`` runs the same stage loop from zero initializations —
+then the path is exactly ``stage_size``-wide slices of an independent cold
+grid fit, which is the oracle tests/sweeps checks it against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.linear_trainer import SparseBatch
+
+from .batched_trainer import init_batched_state, make_batched_round_fn
+from .grid import Grid
+
+
+@dataclasses.dataclass(frozen=True)
+class PathResult:
+    """Flushed (current) per-config solutions, flat lam1-major like Grid."""
+
+    weights: np.ndarray  # [n_cfg, d]
+    b: np.ndarray  # [n_cfg]
+    losses: np.ndarray  # [n_cfg, total_steps] per-step training loss
+
+
+def run_path(
+    grid: Grid,
+    rounds: Sequence[SparseBatch],
+    warm_start: bool = True,
+    round_fn=None,
+) -> PathResult:
+    """Walk the lam1 ladder (descending), training each stage's config batch
+    on the same ``rounds``; warm starts chain stage s's flushed solution
+    into stage s+1's init.  ``round_fn`` lets a caller reuse one jitted
+    batched round program across repeated paths (kfold_cv: one compile for
+    all folds); by default one is built here and shared across stages."""
+    if round_fn is None:
+        round_fn = make_batched_round_fn(grid.base)
+    n1 = len(grid.lam1)
+    w_prev = b_prev = None
+    weights, biases, losses = [], [], []
+    for s in range(n1):
+        hp = grid.stage_hypers(s)
+        seed_w = w_prev if warm_start else None
+        seed_b = b_prev if warm_start else None
+        bstate = init_batched_state(grid.base, grid.stage_size, w0=seed_w, b0=seed_b)
+        stage_losses = []
+        for rb in rounds:
+            bstate, ls = round_fn(bstate, hp, rb)
+            stage_losses.append(np.asarray(ls))
+        # post-flush state: psi == 0, caches rebased => wpsi[:, :, 0] current
+        w_prev = np.asarray(bstate.wpsi[:, :, 0])
+        b_prev = np.asarray(bstate.b)
+        weights.append(w_prev)
+        biases.append(b_prev)
+        losses.append(np.concatenate(stage_losses, axis=1))
+    return PathResult(
+        weights=np.concatenate(weights, axis=0),
+        b=np.concatenate(biases, axis=0),
+        losses=np.concatenate(losses, axis=0),
+    )

@@ -4,7 +4,7 @@ cells lower (one new token against a seq_len-deep cache)."""
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ reference exactly (tests/train/test_lm_lazy_equals_dense.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -77,14 +76,14 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None, rules=None):
 
             def acc(carry, mb):
                 (l_acc, a_acc), g_acc = carry
-                (l, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(params, mb)
+                (l_mb, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(params, mb)
                 g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return ((l_acc + l, a_acc + m["aux"]), g_acc), None
+                return ((l_acc + l_mb, a_acc + m["aux"]), g_acc), None
 
             zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            ((l, aux), g), _ = jax.lax.scan(acc, ((0.0, 0.0), zero_g), micro)
+            ((l_sum, aux), g), _ = jax.lax.scan(acc, ((0.0, 0.0), zero_g), micro)
             scale = 1.0 / A
-            return (l * scale, {"ce": l * scale, "aux": aux * scale}), jax.tree.map(
+            return (l_sum * scale, {"ce": l_sum * scale, "aux": aux * scale}), jax.tree.map(
                 lambda x: x * scale, g
             )
         return jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
@@ -122,14 +121,14 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None, rules=None):
                 m_, rules_ = ctx
                 rules2 = {k: _strip_pod(v) for k, v in rules_.items()}
                 with dist_api.activate(m_, rules2):
-                    (l, m), g = inner(params, batch)
+                    (loss, m), g = inner(params, batch)
             else:
-                (l, m), g = inner(params, batch)
+                (loss, m), g = inner(params, batch)
             g = quantized_psum(g, "pod")
             g = jax.tree.map(lambda x: (x.astype(jnp.float32) / n_pods).astype(x.dtype), g)
-            l = jax.lax.pmean(l, "pod")
+            loss = jax.lax.pmean(loss, "pod")
             m = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), m)
-            return (l, m), g
+            return (loss, m), g
 
         def grads_of_compressed(params, batch):
             from repro.dist import api as dist_api

@@ -25,7 +25,6 @@ from repro.core import (
     init_caches,
     init_state,
     make_dense_step,
-    make_lazy_step,
     make_round_fn,
     reg_update,
 )

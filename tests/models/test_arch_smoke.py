@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.models import build, init_params, make_train_batch_specs
+from repro.models import build, init_params
 from repro.models.rwkv6 import CHUNK
 
 B, S = 2, 32
@@ -109,14 +109,14 @@ def test_train_step_decreases_loss(arch, rng):
 
     @jax.jit
     def step(p):
-        (l, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(p, batch)
+        (loss, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(p, batch)
         p = jax.tree.map(lambda w, gw: w - 0.3 * gw.astype(w.dtype), p, g)
-        return p, l
+        return p, loss
 
     losses = []
     for _ in range(5):
-        params, l = step(params)
-        losses.append(float(l))
+        params, loss = step(params)
+        losses.append(float(loss))
     assert np.isfinite(losses).all(), (arch, losses)
     assert losses[-1] < losses[0], (arch, losses)
 
@@ -147,4 +147,4 @@ def test_full_config_shapes_no_alloc():
         assert lo <= n <= hi, f"{arch}: {n:.2f}B params outside [{lo},{hi}]B"
         sds = param_shapes(model)
         leaves = jax.tree.leaves(sds)
-        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        assert all(isinstance(leaf, jax.ShapeDtypeStruct) for leaf in leaves)

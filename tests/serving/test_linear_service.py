@@ -166,6 +166,45 @@ def test_frontend_respects_flush_policy():
     assert svc.metrics.counters["learn_steps"] == 1
 
 
+def test_swap_weights_installs_sweep_winner():
+    """swap_weights hot-swaps a finished sweep's model: predictions come
+    from the new weights immediately, the global step survives (schedules
+    do not restart), online learning continues, and passing a new cfg swaps
+    the hyperparameters the jitted step closes over."""
+    rng = np.random.RandomState(6)
+    svc = LinearService(_cfg(), p_max=8, micro_batch=4)
+    for _ in range(5):
+        svc.learn(_mk(rng, 2, 5))
+    t_before = int(svc.state.t)
+
+    w_new = rng.randn(DIM).astype(np.float32) * 0.1
+    new_cfg = _cfg(round_len=32)
+    svc.swap_weights(w_new, b=0.25, cfg=new_cfg)
+
+    assert int(svc.state.t) == t_before  # schedule position preserved
+    assert int(svc.state.i) == 0  # fresh round, caches rebased
+    assert svc.cfg == new_cfg
+    np.testing.assert_array_equal(svc.current_weights(), w_new)
+    assert svc.metrics.counters["weight_swaps"] == 1
+
+    # predictions reflect the swapped model exactly (weights are current)
+    b = _mk(rng, 4, 6)
+    z = np.einsum("bp,bp->b", np.asarray(b.val), w_new[np.asarray(b.idx)]) + 0.25
+    np.testing.assert_allclose(svc.predict(b), 1.0 / (1.0 + np.exp(-z)), rtol=1e-5, atol=1e-6)
+
+    # the service keeps learning on the swapped state
+    loss = svc.learn(b)
+    assert np.isfinite(loss)
+    assert int(svc.state.t) == t_before + 1
+
+
+def test_swap_weights_rejects_dim_change():
+    svc = LinearService(_cfg(), p_max=8, micro_batch=4)
+    bigger = LinearConfig(dim=DIM + 1, round_len=16, lam1=0.01, lam2=0.005)
+    with pytest.raises(AssertionError, match="feature space"):
+        svc.swap_weights(np.zeros(DIM + 1, np.float32), cfg=bigger)
+
+
 def test_compile_counts_bounded_by_buckets():
     """Steady traffic compiles at most one step per binary bucket size and
     one predict per bucket — fixed shapes thereafter."""

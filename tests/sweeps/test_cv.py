@@ -1,0 +1,77 @@
+"""k-fold CV over the counter-seeded bow stream: shapes, argmin selection,
+determinism, and winner sanity on a problem with a known-better region."""
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import LinearConfig, ScheduleConfig
+from repro.data import BowConfig, SyntheticBow
+from repro.sweeps import kfold_cv, make_grid
+
+DIM = 300
+
+
+def _setup(folds=3):
+    base = LinearConfig(
+        dim=DIM,
+        flavor="fobos",
+        round_len=16,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=50.0),
+    )
+    bow = SyntheticBow(
+        BowConfig(
+            dim=DIM,
+            p_max=16,
+            p_mean=8.0,
+            informative_pool=80,
+            n_informative=24,
+            seed=9,
+        )
+    )
+    # lam1 spanning crushing (0.3: everything clips to zero) to mild
+    grid = make_grid(base, (0.3, 1e-5), (1e-4, 1e-6))
+    return base, bow, grid
+
+
+def test_cv_shapes_and_argmin():
+    _, bow, grid = _setup()
+    res = kfold_cv(grid, bow, folds=3, batch=4)
+    assert res.fold_loss.shape == (3, grid.n_cfg)
+    assert res.cv_loss.shape == (grid.n_cfg,)
+    assert np.all(np.isfinite(res.fold_loss))
+    assert res.best_index == int(np.argmin(res.cv_loss))
+    assert res.best_weights.shape == (DIM,)
+    np.testing.assert_allclose(res.cv_loss, res.fold_loss.mean(axis=0), rtol=1e-12)
+
+
+def test_cv_prefers_non_crushing_lam1():
+    """lam1=0.3 under eta~0.3 truncates every weight to zero each step; its
+    held-out loss is chance level, so CV must pick a mild-lam1 config."""
+    _, bow, grid = _setup()
+    res = kfold_cv(grid, bow, folds=3, batch=4)
+    assert res.best_config.lam1 < 0.3
+    crushed = [c for c in range(grid.n_cfg) if grid.config_at(c).lam1 == 0.3]
+    assert all(res.cv_loss[res.best_index] < res.cv_loss[c] for c in crushed)
+
+
+def test_cv_deterministic():
+    _, bow, grid = _setup()
+    a = kfold_cv(grid, bow, folds=2, batch=4)
+    b = kfold_cv(grid, bow, folds=2, batch=4)
+    np.testing.assert_array_equal(a.fold_loss, b.fold_loss)
+    assert a.best_index == b.best_index
+    np.testing.assert_array_equal(a.best_weights, b.best_weights)
+
+
+def test_cv_best_config_is_grid_point():
+    base, bow, grid = _setup()
+    res = kfold_cv(grid, bow, folds=2, batch=4)
+    assert res.best_config.lam1 in grid.lam1
+    assert res.best_config.lam2 in grid.lam2
+    assert res.best_config == dataclasses.replace(
+        base,
+        lam1=res.best_config.lam1,
+        lam2=res.best_config.lam2,
+        schedule=res.best_config.schedule,
+    )

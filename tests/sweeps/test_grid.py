@@ -1,0 +1,71 @@
+"""Grid/path specs: ladder shape, lam1-major flattening, config round-trip,
+and eager SGD-flavor validation (the batched trainer traces lams and cannot
+validate inside the program)."""
+
+import numpy as np
+import pytest
+
+from repro.core import LinearConfig, ScheduleConfig
+from repro.sweeps import log_ladder, make_grid
+
+
+def _base(**kw):
+    defaults = dict(
+        dim=50,
+        round_len=8,
+        schedule=ScheduleConfig(kind="constant", eta0=0.2),
+    )
+    defaults.update(kw)
+    return LinearConfig(**defaults)
+
+
+def test_log_ladder_descending_inclusive():
+    lad = log_ladder(1e-2, 1e-5, 4)
+    assert len(lad) == 4
+    np.testing.assert_allclose(lad[0], 1e-2, rtol=1e-12)
+    np.testing.assert_allclose(lad[-1], 1e-5, rtol=1e-12)
+    assert all(a > b for a, b in zip(lad, lad[1:]))
+    # log-spaced: constant ratio between rungs
+    ratios = [lad[i] / lad[i + 1] for i in range(3)]
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-6)
+    assert log_ladder(0.5, 0.1, 1) == (0.5,)
+
+
+def test_flatten_is_lam1_major():
+    grid = make_grid(_base(), (0.1, 0.01), (0.05, 0.005), (0.2, 0.4))
+    assert grid.shape == (2, 2, 2)
+    f1, f2, fe = grid.flat()
+    # lam1 constant over each contiguous stage_size slice
+    assert grid.stage_size == 4
+    np.testing.assert_allclose(f1[:4], 0.1)
+    np.testing.assert_allclose(f1[4:], 0.01)
+    # stage_hypers(s) equals the flat slice
+    hp = grid.stage_hypers(1)
+    np.testing.assert_allclose(np.asarray(hp.lam1), f1[4:])
+    np.testing.assert_allclose(np.asarray(hp.lam2), f2[4:])
+    np.testing.assert_allclose(np.asarray(hp.eta_scale), fe[4:])
+
+
+def test_config_at_round_trips_flat_arrays():
+    grid = make_grid(_base(), (0.1, 0.01, 0.001), (0.05,), (0.2, 0.3))
+    f1, f2, fe = grid.flat()
+    for i in range(grid.n_cfg):
+        cfg = grid.config_at(i)
+        np.testing.assert_allclose(cfg.lam1, f1[i], rtol=1e-6)
+        np.testing.assert_allclose(cfg.lam2, f2[i], rtol=1e-6)
+        np.testing.assert_allclose(cfg.schedule.eta0, fe[i], rtol=1e-6)
+        assert cfg.dim == grid.base.dim
+
+
+def test_lam1_ladder_sorted_descending():
+    grid = make_grid(_base(), (1e-5, 1e-2, 1e-3), (0.01,))
+    assert grid.lam1 == (1e-2, 1e-3, 1e-5)
+
+
+def test_sgd_eta_lam2_validation_raises():
+    base = _base(flavor="sgd", schedule=ScheduleConfig(kind="constant", eta0=0.5))
+    with pytest.raises(ValueError, match="eta\\*lam2"):
+        make_grid(base, (0.01,), (0.1, 3.0))  # 0.5 * 3.0 >= 1
+    # fobos has no such constraint
+    fobos = _base(flavor="fobos", schedule=ScheduleConfig(kind="constant", eta0=0.5))
+    make_grid(fobos, (0.01,), (0.1, 3.0))
