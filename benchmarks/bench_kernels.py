@@ -1,51 +1,139 @@
-"""Kernel-layer benchmark: the fused lazy_enet row update (ops.py jnp/pallas
-paths) vs the unfused two-pass reference, on embedding-row-update shapes.
-On this CPU container the Pallas kernel runs in interpret mode (correctness
-only); the jnp path is what the timing below measures, and the fused-vs-
-unfused byte traffic ratio is the derived column (the TPU win)."""
+"""Kernel-layer benchmark: the fused lazy catch-up + SGD row update vs the
+unfused two-pass baseline it replaces, through the `repro.backend` op
+surface, on embedding-row-update shapes.
+
+*unfused* = two separately-jitted passes (catch-up materialized to HBM, then
+the gradient step) — 3 reads + 2 writes per element.  *fused* = one pass via
+``backend.fused_catchup_sgd`` — 2 reads + 1 write.  On this CPU container
+the reference backend is what the timings measure and the byte-traffic ratio
+is the derived column (the TPU win); the Pallas backend runs in interpret
+mode, so it is parity-checked on every shape but only *timed* on a real TPU
+(interpret timings are python-loop noise, not kernel performance).
+
+Writes BENCH_kernels.json (CI artifact, regression-gated by
+benchmarks/check_regression.py against benchmarks/baselines/).  Gated key:
+``fused_speedup`` — the MEDIAN of paired per-repeat unfused/fused ratios,
+the only estimator that held still under shared-runner throughput bursts
+(raw ``*_us`` medians ride along ungated; TPU-compiled pallas timings
+appear only when a TPU is attached).  A lost fusion drives the ratio to
+~1.0 and fails the +-30% gate.
+"""
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backend as kernel_backend
 from repro.core import FOBOS, extend, init_caches
-from repro.kernels import lazy_enet_update
-from repro.kernels.ref import lazy_enet_update_ref
 
 SHAPES = [(1024, 512), (8192, 1024)]
 
 
-def run():
+def _time_once(fn, args, iters):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _bench_pair(fn_a, fn_b, args, iters=20, repeats=9):
+    """Paired A/B micro-benchmark: interleave the two paths within every
+    repeat and gate on the MEDIAN of per-repeat ratios — shared-runner
+    throughput bursts hit both sides of a pair and cancel, where absolute
+    best-of-N times still swing far beyond any reasonable gate tolerance.
+    Returns (median_us_a, median_us_b, median_ratio_a_over_b)."""
+    _time_once(fn_a, args, 2), _time_once(fn_b, args, 2)  # warm both
+    ta, tb, ratios = [], [], []
+    for _ in range(repeats):
+        a = _time_once(fn_a, args, iters)
+        b = _time_once(fn_b, args, iters)
+        ta.append(a)
+        tb.append(b)
+        ratios.append(a / max(b, 1e-9))
+    med = lambda xs: float(np.median(xs))  # noqa: E731
+    return med(ta), med(tb), med(ratios)
+
+
+def run(fast: bool = False, json_path: str = "BENCH_kernels.json"):
     rng = np.random.RandomState(0)
     rows = []
-    n = 64
-    for R, D in SHAPES:
+    shapes = SHAPES[:1] if fast else SHAPES
+    n, lam1, lam2, eta_v = 64, 1e-5, 1e-4, 0.1
+    on_tpu = jax.default_backend() == "tpu"
+    ref = kernel_backend.get_backend("reference")
+    pal = kernel_backend.get_backend("pallas")
+    report = {
+        "workload": {"shapes": [f"{R}x{D}" for R, D in shapes], "iters": 20,
+                     "repeats": 9, "flavor": FOBOS, "lam1": lam1, "lam2": lam2},
+        "pallas_timed": on_tpu,
+        "shapes": {},
+    }
+    for R, D in shapes:
         caches = init_caches(n)
         for i in range(n):
-            caches = extend(caches, jnp.asarray(i, jnp.int32), jnp.asarray(0.1, jnp.float32), 1e-4, FOBOS)
+            caches = extend(
+                caches, jnp.asarray(i, jnp.int32), jnp.asarray(eta_v, jnp.float32), lam2, FOBOS
+            )
         w = jnp.asarray(rng.randn(R, D).astype(np.float32))
         g = jnp.asarray(rng.randn(R, D).astype(np.float32) * 0.01)
         psi = jnp.asarray(rng.randint(0, n, size=(R,)).astype(np.int32))
         k = jnp.asarray(n, jnp.int32)
-        eta = jnp.asarray(0.1, jnp.float32)
+        eta = jnp.asarray(eta_v, jnp.float32)
 
-        ref = jax.jit(lambda w, g, psi, k: lazy_enet_update_ref(w, g, psi, k, caches, 1e-5, eta))
-        out_r = ref(w, g, psi, k)
-        jax.block_until_ready(out_r)
-        t0 = time.perf_counter()
-        for _ in range(20):
-            out_r = ref(w, g, psi, k)
-        jax.block_until_ready(out_r)
-        us = (time.perf_counter() - t0) / 20 * 1e6
+        # --- unfused: catch-up lands in HBM, a second pass adds the grad
+        # (two separately-jitted programs: the intermediate materializes, as
+        # in the pre-fusion trainer; dispatch stays async for stable timing)
+        catchup = jax.jit(lambda w, psi, k: ref.catchup_rows(w, psi[:, None], k, caches, lam1))
+        sgd = jax.jit(lambda w, g: w - eta * g)
 
-        # pallas interpret correctness on the same inputs
-        out_k = lazy_enet_update(w, g, psi, k, caches, eta, lam1=1e-5, interpret=True)
-        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-6)
+        def unfused(w, g, psi, k):
+            return sgd(catchup(w, psi, k), g)
+
+        # --- fused: one pass over the row bytes ---
+        fused = jax.jit(lambda w, g, psi, k: ref.fused_catchup_sgd(w, g, psi, k, caches, lam1, eta))
+
+        us_unfused, us_fused, speedup = _bench_pair(unfused, fused, (w, g, psi, k))
+
+        # --- pallas parity on the same inputs (timed only where compiled) ---
+        out_pal = pal.fused_catchup_sgd(w, g, psi, k, caches, lam1, eta)
+        out_ref = fused(w, g, psi, k)
+        err = float(jnp.max(jnp.abs(out_pal - out_ref)))
+        np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref), rtol=1e-5, atol=1e-6)
+
+        name = f"lazy_enet_rows_{R}x{D}"
+        entry = {
+            # "_us" (not "_us_per"): informational, NOT regression-gated —
+            # absolute microseconds track shared-runner load, the ratio below
+            # is the stable claim
+            "unfused_us": us_unfused,
+            "fused_us": us_fused,
+            "fused_speedup": speedup,  # gated (median of paired ratios)
+            "pallas_max_abs_err": err,  # parity, never gated
+        }
+        if on_tpu:
+            entry["pallas_fused_us"] = _time_once(
+                jax.jit(lambda w, g, psi, k: pal.fused_catchup_sgd(w, g, psi, k, caches, lam1, eta)),
+                (w, g, psi, k), 20,
+            )
+        report["shapes"][name] = entry
         bytes_fused = R * D * 4 * 3  # w read + g read + w write
         bytes_unfused = R * D * 4 * 5  # catchup r/w + update r/r/w
         rows.append(
-            (f"lazy_enet_rows_{R}x{D}", us,
-             f"fused kernel moves {bytes_fused/1e6:.0f}MB vs {bytes_unfused/1e6:.0f}MB unfused (1.67x)")
+            (name, us_fused,
+             f"fused {us_fused:.0f}us vs unfused {us_unfused:.0f}us; kernel moves "
+             f"{bytes_fused / 1e6:.0f}MB vs {bytes_unfused / 1e6:.0f}MB (1.67x); "
+             f"pallas err {err:.1e}")
         )
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
     return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(c) for c in row))

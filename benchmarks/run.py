@@ -4,7 +4,8 @@ minibatch extensions).  Prints ``name,us_per_call,derived`` CSV.
   table1      paper §7 Table 1 (lazy vs dense FoBoS elastic net, Medline stats)
   scaling     O(p) vs O(d): per-step cost against nominal dimensionality
   dp_overhead the elastic-net DP caches' constant factor vs l1-only/ridge/none
-  kernels     fused lazy_enet row kernel vs unfused reference
+  kernels     fused vs unfused lazy row update through repro.backend;
+              writes BENCH_kernels.json
   minibatch   lazy minibatch extension throughput
   serving     continuous-batching engine vs lock-step loop (Poisson traffic)
               + online linear predict/learn service; writes BENCH_serving.json
@@ -39,7 +40,7 @@ def main() -> None:
         "table1": lambda: bench_lazy_vs_dense.run(steps=steps),
         "scaling": lambda: bench_scaling.run(),
         "dp_overhead": lambda: bench_dp_overhead.run(steps=steps),
-        "kernels": lambda: bench_kernels.run(),
+        "kernels": lambda: bench_kernels.run(fast=args.fast),
         "minibatch": lambda: bench_minibatch.run(steps=min(steps, 256)),
         "serving": lambda: bench_serving.run(fast=args.fast),
         "sweeps": lambda: bench_sweeps.run(fast=args.fast),

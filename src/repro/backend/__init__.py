@@ -1,0 +1,110 @@
+"""repro.backend — pluggable kernel backends for the paper's hot paths
+(DESIGN.md §11).
+
+One op surface (:class:`~repro.backend.api.KernelBackend`: ``catchup_rows``,
+``fused_catchup_sgd``, ``flush_rows``, ``prox_sweep``, ``attention``), two
+implementations:
+
+* ``reference`` — the bitwise pre-backend jnp code (CPU/GPU default)
+* ``pallas``    — the :mod:`repro.kernels` TPU tiles (TPU default; interpret
+  mode elsewhere)
+
+Selection precedence, resolved at TRACE time (``resolve``):
+
+  1. explicit argument (``LinearConfig.backend``, a fn's ``backend=`` kwarg)
+  2. :func:`use_backend` context manager
+  3. ``REPRO_BACKEND`` environment variable
+  4. platform default (``pallas`` on TPU, ``reference`` elsewhere)
+
+Because backends are plain trace-time Python objects, the choice is
+trace-static: it never becomes a jit argument, so serving keeps its
+zero-recompile invariant under either backend — and programs traced before a
+switch keep their original backend until rebuilt.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Dict, Iterator, List, Optional
+
+import jax
+
+from .api import KernelBackend
+from .pallas import PallasBackend
+from .reference import ReferenceBackend
+
+ENV_VAR = "REPRO_BACKEND"
+
+_REGISTRY: Dict[str, KernelBackend] = {}
+_CONTEXT: List[str] = []  # use_backend() override stack (innermost last)
+
+
+def register_backend(backend: KernelBackend) -> None:
+    """Register a backend instance under ``backend.name`` (replaces any
+    previous registration — how an out-of-tree accelerator plugs in)."""
+    _REGISTRY[backend.name] = backend
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> KernelBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def default_backend_name() -> str:
+    """Platform-aware default: compiled Pallas where it compiles (TPU),
+    the reference jnp path everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def resolve(name: Optional[str] = None) -> KernelBackend:
+    """Resolve the active backend: arg > context > env > platform default.
+    An empty/None ``name`` falls through; called at trace time by every
+    dispatching call site."""
+    if name:
+        return get_backend(name)
+    if _CONTEXT:
+        return get_backend(_CONTEXT[-1])
+    env = os.environ.get(ENV_VAR, "").strip()
+    if env:
+        return get_backend(env)
+    return get_backend(default_backend_name())
+
+
+@contextlib.contextmanager
+def use_backend(name: Optional[str]) -> Iterator[None]:
+    """Scope a backend choice over everything *traced* inside the block
+    (``None`` is a no-op, so CLI flags can pass straight through)."""
+    if name is None:
+        yield
+        return
+    get_backend(name)  # fail fast on unknown names
+    _CONTEXT.append(name)
+    try:
+        yield
+    finally:
+        _CONTEXT.pop()
+
+
+register_backend(ReferenceBackend())
+register_backend(PallasBackend())
+
+__all__ = [
+    "ENV_VAR",
+    "KernelBackend",
+    "PallasBackend",
+    "ReferenceBackend",
+    "available_backends",
+    "default_backend_name",
+    "get_backend",
+    "register_backend",
+    "resolve",
+    "use_backend",
+]

@@ -1,0 +1,90 @@
+"""The kernel-backend op surface (DESIGN.md §11).
+
+A backend is one implementation of the paper's hot-path compute: the lazy
+elastic-net catch-up / fused update / dense shrink sweep, and the serving
+engine's attention.  Two ship in-tree:
+
+* ``reference`` — the pure-jnp expressions the algorithm was validated with,
+  bitwise-identical to the pre-backend code (they ARE that code, moved).
+* ``pallas``    — the TPU kernels in :mod:`repro.kernels` (interpret mode on
+  CPU, compiled on TPU).
+
+Backends are plain Python objects resolved at TRACE TIME: a jitted program
+closes over whichever backend was active when it traced, so switching
+backends never grows a jit cache (serving's zero-recompile invariant) — and
+conversely, switching after a program has traced does not retroactively
+change it; rebuild the jit (e.g. ``LinearService._build_jits``) to re-route.
+
+Shape conventions shared by every op:
+
+* ``w`` is either a flat ``[n]`` weight vector with per-element ``psi`` /
+  factors (the linear trainer's gathered slab and full weight vector) or a
+  ``[R, D]`` row slab with per-row ``psi`` / factors (embedding tables —
+  one catch-up window per row).  Scalars broadcast over either.
+* The gather/scatter that moves rows in and out of the parameter buffer
+  stays in XLA at every call site; only the row-slab *math* between them is
+  backend-dispatched (DESIGN.md §11 explains why).
+"""
+from __future__ import annotations
+
+
+class KernelBackend:
+    """Abstract op surface.  Implementations override every method; the
+    base class only documents semantics."""
+
+    name: str = "abstract"
+
+    # -- regularization ------------------------------------------------------
+
+    def catchup_rows(self, w, psi, k, caches, lam1):
+        """Bring ``w`` current from per-entry round-local step ``psi`` to
+        ``k`` against the DP ``caches``: all missed elastic-net updates in
+        closed form, O(1) per entry.  ``lam1`` may be a traced scalar."""
+        raise NotImplementedError
+
+    def fused_catchup_sgd(self, w, grad, psi, k, caches, lam1, eta):
+        """Catch-up + SGD gradient step in one pass over the row bytes
+        (``catchup_rows(w) - eta * grad``); ``w``/``grad`` are a ``[R, D]``
+        row slab.  With ``psi == k`` the catch-up is the identity and this
+        is a plain fused SGD step (``optim.lazy_rows.finish``)."""
+        raise NotImplementedError
+
+    def flush_rows(self, w, ratio, shift):
+        """Apply pre-computed catch-up factors with no gradient term:
+        ``sgn(w) * max(|w| * ratio - shift, 0)`` — the round-boundary flush,
+        where the caller derived (ratio, shift) once for the whole buffer via
+        :func:`repro.core.lazy_enet.catchup_factors`."""
+        raise NotImplementedError
+
+    def prox_sweep(self, w, eta, lam1, lam2, flavor):
+        """One dense per-step elastic-net shrink over every coordinate of
+        ``w`` (paper Eq 9 / §6.2) — the dense baseline's O(d) inner loop.
+        ``eta``/``lam1``/``lam2`` may be traced scalars; ``flavor`` is
+        trace-static ('sgd' | 'fobos')."""
+        raise NotImplementedError
+
+    # -- attention -----------------------------------------------------------
+
+    def attention(
+        self,
+        q,
+        k,
+        v,
+        *,
+        causal=True,
+        window=0,
+        q_positions=None,
+        kv_positions=None,
+        kv_valid=None,
+        q_offset=None,
+    ):
+        """GQA attention over ``q [B, Sq, H, hd]`` / ``k,v [B, Skv, KV, hd]``.
+
+        ``q_offset`` is the offset-form position spec the flash kernel can
+        stream: absolute position of q[0] — a scalar (training = 0, lock-step
+        decode = pos) or a per-slot ``[B]`` vector with Sq == 1 (continuous-
+        batching decode: slot b attends kv positions <= q_offset[b]).
+        Explicit ``q_positions``/``kv_positions``/``kv_valid``/``window``
+        express masks flash cannot; backends fall back to the reference
+        einsum path for those."""
+        raise NotImplementedError

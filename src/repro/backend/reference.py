@@ -1,0 +1,94 @@
+"""The ``reference`` backend: the pure-jnp hot-path expressions the paper
+reproduction was validated against — bitwise-identical to the pre-backend
+code (the regularization ops delegate to :mod:`repro.core`, the attention
+einsum is that code moved here verbatim).  This is the CPU/GPU default and
+the oracle every other backend is tested against."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dense_enet, lazy_enet
+
+from .api import KernelBackend
+
+NEG_INF = -1e30
+
+
+class ReferenceBackend(KernelBackend):
+    name = "reference"
+
+    # -- regularization ------------------------------------------------------
+
+    def catchup_rows(self, w, psi, k, caches, lam1):
+        return lazy_enet.catchup(w, psi, k, caches, lam1)
+
+    def fused_catchup_sgd(self, w, grad, psi, k, caches, lam1, eta):
+        ratio, shift = lazy_enet.catchup_factors(psi, k, caches, lam1)
+        if jnp.ndim(ratio) == 1:  # per-row factors broadcast down the slab
+            ratio, shift = ratio[:, None], shift[:, None]
+        return self.flush_rows(w, ratio, shift) - eta * grad
+
+    def flush_rows(self, w, ratio, shift):
+        # the apply half of lazy_enet.catchup, with factors pre-computed
+        mag = jnp.abs(w) * ratio - shift
+        return jnp.sign(w) * jnp.maximum(mag, 0.0)
+
+    def prox_sweep(self, w, eta, lam1, lam2, flavor):
+        return dense_enet.reg_update(w, eta, lam1, lam2, flavor)
+
+    # -- attention -----------------------------------------------------------
+
+    def attention(
+        self,
+        q,
+        k,
+        v,
+        *,
+        causal=True,
+        window=0,
+        q_positions=None,
+        kv_positions=None,
+        kv_valid=None,
+        q_offset=None,
+    ):
+        B, Sq, H, hd = q.shape
+        KV = k.shape[2]
+        G = H // KV
+        Skv = k.shape[1]
+        if q_offset is not None:
+            assert q_positions is None and kv_positions is None
+            off = jnp.asarray(q_offset, jnp.int32)
+            if off.ndim == 1:
+                # per-slot horizon (continuous-batching decode): slot b
+                # attends kv <= off[b].  Expressed through the validity-mask
+                # path, exactly as models.transformer.decode_multi always did.
+                assert causal and window == 0 and Sq == 1, (causal, window, Sq)
+                kvm = jnp.arange(Skv, dtype=jnp.int32)[None, :] <= off[:, None]
+                kv_valid = kvm if kv_valid is None else (kvm & kv_valid)
+                causal = False
+            else:
+                # contiguous block at an absolute offset (training: 0,
+                # lock-step decode: pos) — plain position vectors.
+                q_positions = off + jnp.arange(Sq, dtype=jnp.int32)
+        qg = q.reshape(B, Sq, KV, G, hd)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32)
+        logits = logits / math.sqrt(hd)
+        if q_positions is None:
+            q_positions = jnp.arange(Sq, dtype=jnp.int32)
+        if kv_positions is None:
+            kv_positions = jnp.arange(Skv, dtype=jnp.int32)
+        mask = jnp.ones((Sq, Skv), dtype=bool)
+        if causal:
+            mask &= kv_positions[None, :] <= q_positions[:, None]
+        if window:
+            mask &= kv_positions[None, :] > q_positions[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        if kv_valid is not None:
+            kvm = kv_valid if kv_valid.ndim == 2 else kv_valid[None]
+            logits = jnp.where(kvm[:, None, None, None, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+        return out.reshape(B, Sq, H, hd)

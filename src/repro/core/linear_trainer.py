@@ -29,9 +29,19 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import dense_enet, dp_caches, lazy_enet
+from . import dp_caches, lazy_enet
 from .dp_caches import FLAVORS, RegCaches
 from .schedules import ScheduleConfig, validate_schedule
+
+
+def _backend(name):
+    """Resolve the kernel backend at call (trace) time.  Deferred import:
+    this module sits inside repro.backend's own import chain (backend ->
+    pallas -> kernels -> core -> linear_trainer), so a module-level import
+    here would make `import repro.kernels` order-dependent."""
+    from repro import backend as kb
+
+    return kb.resolve(name)
 
 LOGISTIC = "logistic"
 SQUARED = "squared"
@@ -70,12 +80,17 @@ class LinearConfig:
     schedule: ScheduleConfig = dataclasses.field(default_factory=ScheduleConfig)
     use_bias: bool = True
     round_len: int = 4096  # flush/rebase period (paper's space budget)
+    # kernel backend for the regularization hot paths (repro.backend):
+    # None defers to use_backend()/$REPRO_BACKEND/platform default
+    backend: Optional[str] = None
 
     def __post_init__(self):
         assert self.flavor in FLAVORS, self.flavor
         assert self.loss in (LOGISTIC, SQUARED), self.loss
         assert self.lam1 >= 0.0 and self.lam2 >= 0.0
         assert self.round_len < 2**24  # psi lives exactly in f32
+        if self.backend is not None:
+            _backend(self.backend)  # fail fast on unknown names
 
 
 class LinearState(NamedTuple):
@@ -143,10 +158,17 @@ def make_lazy_step_hp(cfg: LinearConfig):
     from ``cfg``; ``eta_t = hp.eta_scale * unit_schedule(t)`` (exact: every
     schedule kind is linear in eta0).  No schedule validation happens here —
     callers with concrete hypers (make_lazy_step, sweeps.grid) validate
-    eagerly at construction time."""
+    eagerly at construction time.
+
+    The kernel backend (repro.backend) resolves when the step is TRACED —
+    the uniform rule for every fn in this module, so one program never mixes
+    backends.  Pin ``cfg.backend`` (as LinearService does at construction)
+    to make the choice independent of trace-time context; the gather/scatter
+    chain stays in XLA either way (DESIGN.md §11)."""
     unit_sched = cfg.schedule.unit().make()
 
     def step(state: LinearState, batch: SparseBatch, hp: Hypers):
+        bk = _backend(cfg.backend)
         eta = jnp.asarray(hp.eta_scale, jnp.float32) * unit_sched(state.t)
         # O(1): fill DP cache slot i+1 with this step's eta (Lemma 1 / Thm 1-2)
         caches = dp_caches.extend(state.caches, state.i, eta, hp.lam2, cfg.flavor)
@@ -156,7 +178,7 @@ def make_lazy_step_hp(cfg: LinearConfig):
         w_g = g2[:, 0]
         psi_g = g2[:, 1].astype(jnp.int32)
         # --- lazy catch-up of touched weights: reg for tau in [psi, i) ---
-        w_cur = lazy_enet.catchup(w_g, psi_g, state.i, caches, hp.lam1)
+        w_cur = bk.catchup_rows(w_g, psi_g, state.i, caches, hp.lam1)
         # --- predict with current weights, loss gradient ---
         z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
         loss, gz = _grad_z(cfg, z, batch.y)
@@ -200,6 +222,7 @@ def make_dense_step(cfg: LinearConfig):
     eta_scale = cfg.schedule.eta0
 
     def step(state: LinearState, batch: SparseBatch):
+        bk = _backend(cfg.backend)  # trace-time, like every fn here
         eta = jnp.asarray(eta_scale, jnp.float32) * unit_sched(state.t)
         idx_f = batch.idx.reshape(-1)
         w_g = state.wpsi[idx_f, 0]  # already current
@@ -208,7 +231,7 @@ def make_dense_step(cfg: LinearConfig):
         g_w = (gz[:, None] * batch.val).reshape(-1)
         wpsi = state.wpsi.at[idx_f, 0].add(-eta * g_w)
         # O(d): dense regularization sweep over EVERY coordinate (Eq 9 / §6.2)
-        wpsi = dense_enet.reg_update(wpsi, eta, cfg.lam1, cfg.lam2, cfg.flavor)
+        wpsi = bk.prox_sweep(wpsi, eta, cfg.lam1, cfg.lam2, cfg.flavor)
         b = state.b - eta * jnp.sum(gz) if cfg.use_bias else state.b
         new = LinearState(wpsi=wpsi, b=b, caches=state.caches, i=state.i, t=state.t + 1)
         return new, jnp.mean(loss)
@@ -223,7 +246,8 @@ def flush(cfg: LinearConfig, state: LinearState, lam1=None) -> LinearState:
     batched-sweep path, where the shared round counter makes this flush
     batch-uniform: every config rebases at the same step)."""
     lam1 = cfg.lam1 if lam1 is None else lam1
-    w = lazy_enet.catchup(weights(state), psi(state), state.i, state.caches, lam1)
+    ratio, shift = lazy_enet.catchup_factors(psi(state), state.i, state.caches, lam1)
+    w = _backend(cfg.backend).flush_rows(weights(state), ratio, shift)
     wpsi = jnp.stack([w, jnp.zeros_like(w)], axis=1)
     return LinearState(
         wpsi=wpsi,
@@ -237,7 +261,8 @@ def flush(cfg: LinearConfig, state: LinearState, lam1=None) -> LinearState:
 def current_weights(cfg: LinearConfig, state: LinearState, lam1=None) -> jnp.ndarray:
     """All weights brought current (pure; does not advance the round)."""
     lam1 = cfg.lam1 if lam1 is None else lam1
-    return lazy_enet.catchup(weights(state), psi(state), state.i, state.caches, lam1)
+    ratio, shift = lazy_enet.catchup_factors(psi(state), state.i, state.caches, lam1)
+    return _backend(cfg.backend).flush_rows(weights(state), ratio, shift)
 
 
 def make_round_fn(cfg: LinearConfig, mode: str):
@@ -275,7 +300,7 @@ def predict_proba_sparse(cfg: LinearConfig, state: LinearState, batch: SparseBat
     if state.wpsi.shape[1] == 1:  # dense layout: weights always current
         w_cur = g2[:, 0]
     else:
-        w_cur = lazy_enet.catchup(
+        w_cur = _backend(cfg.backend).catchup_rows(
             g2[:, 0], g2[:, 1].astype(jnp.int32), state.i, state.caches, cfg.lam1
         )
     z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)

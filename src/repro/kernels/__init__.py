@@ -1,15 +1,31 @@
-"""Pallas TPU kernels:
+"""Pallas TPU kernels — the `pallas` implementation of the system's compute
+substrate (`repro.backend`), not standalone scaffolding: every regularization
+and attention hot path dispatches here when the pallas backend is selected
+(interpret mode on CPU, compiled on TPU).
 
 * lazy_enet — fused lazy catch-up + gradient update on gathered rows
-  (the paper's hot spot)
-* enet_prox — dense elastic-net shrink sweep (dense baseline / flush)
-* flash_attn — forward flash attention for the serving cells (the §Perf-
-  identified memory-term eliminator on dense-attention archs)
+  (the paper's hot spot: 2 reads + 1 write per element vs the 3 + 2 of a
+  split catchup-then-update), plus the gradient-free apply used by flushes
+* enet_prox — dense elastic-net shrink sweep (dense baseline / flush shrink)
+* flash_attn — forward flash attention, the serving engine's attention path
+  (training / chunked prefill / per-slot continuous-batching decode via
+  absolute q offsets)
 
-ops.py holds the padded/jit'd public wrappers; ref.py the pure-jnp oracles.
+ops.py holds the padded/jit'd public wrappers (all hyperparameters are
+dynamic operands — sweeping lam1 must not recompile); ref.py the pure-jnp
+oracles.  Product code selects between these kernels and the bitwise
+reference implementations through :mod:`repro.backend`, never by importing
+this package directly.
 """
 from .flash_attn import flash_attention
-from .ops import enet_prox, lazy_enet_update
+from .ops import catchup_update, enet_apply, enet_prox, lazy_enet_update
 from . import ref
 
-__all__ = ["enet_prox", "flash_attention", "lazy_enet_update", "ref"]
+__all__ = [
+    "catchup_update",
+    "enet_apply",
+    "enet_prox",
+    "flash_attention",
+    "lazy_enet_update",
+    "ref",
+]

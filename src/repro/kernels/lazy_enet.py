@@ -39,7 +39,7 @@ from jax.experimental import pallas as pl
 
 def _kernel(w_ref, g_ref, ratio_ref, shift_ref, eta_ref, out_ref):
     w = w_ref[...].astype(jnp.float32)
-    ratio = ratio_ref[...].astype(jnp.float32)  # [RB, 1] -> broadcast over lanes
+    ratio = ratio_ref[...].astype(jnp.float32)  # [RB, 1] or [RB, CB]; broadcasts
     shift = shift_ref[...].astype(jnp.float32)
     mag = jnp.abs(w) * ratio - shift
     cur = jnp.sign(w) * jnp.maximum(mag, 0.0)
@@ -47,12 +47,32 @@ def _kernel(w_ref, g_ref, ratio_ref, shift_ref, eta_ref, out_ref):
     out_ref[...] = out.astype(out_ref.dtype)
 
 
+def _apply_kernel(w_ref, ratio_ref, shift_ref, out_ref):
+    """Catch-up apply without a gradient term (flush / pure catch-up)."""
+    w = w_ref[...].astype(jnp.float32)
+    mag = jnp.abs(w) * ratio_ref[...].astype(jnp.float32) - shift_ref[...].astype(jnp.float32)
+    out_ref[...] = (jnp.sign(w) * jnp.maximum(mag, 0.0)).astype(out_ref.dtype)
+
+
+def _factor_operand(f: jnp.ndarray, R: int, D: int, block_rows: int, block_cols: int):
+    """Normalize a catch-up factor to a kernel operand + BlockSpec.
+
+    Per-row factors ([R] or [R, 1]) ride along as (block_rows, 1) tiles — one
+    scalar per sublane, broadcast across lanes by the VPU.  Per-element
+    factors ([R, D], the linear trainer's gathered flat slab reshaped to
+    tiles) get full (block_rows, block_cols) tiles."""
+    if f.shape == (R, D) and D != 1:
+        return f.astype(jnp.float32), pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))
+    assert f.shape in ((R,), (R, 1)), (f.shape, (R, D))
+    return f.reshape(R, 1).astype(jnp.float32), pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0))
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
 def lazy_enet_rows_kernel(
     w: jnp.ndarray,  # [R, D]
     grad: jnp.ndarray,  # [R, D]
-    ratio: jnp.ndarray,  # [R] f32
-    shift: jnp.ndarray,  # [R] f32
+    ratio: jnp.ndarray,  # [R] (per-row) or [R, D] (per-element) f32
+    shift: jnp.ndarray,  # same shape as ratio
     eta: jnp.ndarray,  # scalar f32
     *,
     block_rows: int = 8,
@@ -65,17 +85,51 @@ def lazy_enet_rows_kernel(
     R, D = w.shape
     assert R % block_rows == 0 and D % block_cols == 0, (w.shape, block_rows, block_cols)
     grid = (R // block_rows, D // block_cols)
+    ratio, ratio_spec = _factor_operand(ratio, R, D, block_rows, block_cols)
+    shift, shift_spec = _factor_operand(shift, R, D, block_rows, block_cols)
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),  # w
             pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),  # grad
-            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),  # ratio
-            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),  # shift
+            ratio_spec,
+            shift_spec,
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # eta
         ],
         out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,
-    )(w, grad, ratio.reshape(R, 1).astype(jnp.float32), shift.reshape(R, 1).astype(jnp.float32), eta.reshape(1, 1).astype(jnp.float32))
+    )(w, grad, ratio, shift, eta.reshape(1, 1).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def enet_apply_rows_kernel(
+    w: jnp.ndarray,  # [R, D]
+    ratio: jnp.ndarray,  # [R] (per-row) or [R, D] (per-element) f32
+    shift: jnp.ndarray,  # same shape as ratio
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gradient-free catch-up apply: ``sgn(w) * max(|w|*ratio - shift, 0)``
+    with per-row or per-element factors — one read + one write per element
+    (the flush / pure-catch-up half of the fused kernel)."""
+    R, D = w.shape
+    assert R % block_rows == 0 and D % block_cols == 0, (w.shape, block_rows, block_cols)
+    grid = (R // block_rows, D // block_cols)
+    ratio, ratio_spec = _factor_operand(ratio, R, D, block_rows, block_cols)
+    shift, shift_spec = _factor_operand(shift, R, D, block_rows, block_cols)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),  # w
+            ratio_spec,
+            shift_spec,
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+    )(w, ratio, shift)

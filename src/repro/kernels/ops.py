@@ -3,6 +3,11 @@
 These handle: deriving per-row catch-up factors from the DP caches, padding
 ragged shapes to hardware-aligned block multiples, 1-D <-> 2-D reshaping,
 and interpret-mode fallback on CPU (this container) vs compiled mode on TPU.
+
+Hyperparameters (``lam1``, ``eta``, the prox ``a``/``s``) are DYNAMIC f32
+operands, never static: they only enter through the catch-up factors / shift
+scalars computed outside the kernels, so a new value must not recompile, and
+``repro.sweeps`` passes them as traced per-config scalars under vmap.
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ from repro.core.dp_caches import RegCaches
 from repro.core.lazy_enet import catchup_factors
 
 from .enet_prox import enet_prox_kernel
-from .lazy_enet import lazy_enet_rows_kernel
+from .lazy_enet import enet_apply_rows_kernel, lazy_enet_rows_kernel
 
 
 def _default_interpret() -> bool:
@@ -31,18 +36,25 @@ def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
     return x
 
 
-@functools.partial(
-    jax.jit, static_argnames=("lam1", "block_rows", "block_cols", "interpret")
-)
+def _tile_flat(x: jnp.ndarray, block_rows: int, block_cols: int) -> jnp.ndarray:
+    """[n] -> [rows, block_cols] zero-padded to block multiples."""
+    n = x.shape[0]
+    rows_needed = -(-n // block_cols)
+    pad_rows = (-rows_needed) % block_rows
+    total = (rows_needed + pad_rows) * block_cols
+    return jnp.pad(x, (0, total - n)).reshape(rows_needed + pad_rows, block_cols)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
 def lazy_enet_update(
     w_rows: jnp.ndarray,  # [R, D] gathered parameter rows
     grad: jnp.ndarray,  # [R, D] loss gradient for those rows
-    psi: jnp.ndarray,  # [R] int32 last-touch step per row
+    psi: jnp.ndarray,  # [R] int32 last-touch step per row (or scalar)
     k: jnp.ndarray,  # scalar int32 current step (catch up over [psi, k))
     caches: RegCaches,
     eta: jnp.ndarray,  # scalar f32 learning rate for the gradient step
     *,
-    lam1: float,
+    lam1,  # scalar f32 l1 strength — dynamic (may be traced per-config)
     block_rows: int = 8,
     block_cols: int = 256,
     interpret: bool | None = None,
@@ -70,6 +82,80 @@ def lazy_enet_update(
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def enet_apply(
+    w: jnp.ndarray,  # [n] flat or [R, D] row slab
+    ratio: jnp.ndarray,  # broadcastable to w: per-element, per-row, or scalar
+    shift: jnp.ndarray,  # same shape as ratio
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Gradient-free shrink apply ``sgn(w)*max(|w|*ratio - shift, 0)`` with
+    pre-computed factors, shape-preserving.  Layouts:
+
+    * ``w`` [R, D] with factors [R] / [R, 1]: per-row tiles (flush of an
+      embedding-table slab — one catch-up window per row).
+    * ``w`` [n] with factors [n]: per-element — the linear trainer's flat
+      weight vector; both are reshaped to lane-aligned tiles.
+    * scalar factors broadcast over either layout.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if w.ndim == 2:
+        R, D = w.shape
+        wp = _pad_to(w, block_rows, block_cols)
+        if jnp.ndim(ratio) == 0:
+            ratio = jnp.broadcast_to(ratio, (R,))
+            shift = jnp.broadcast_to(shift, (R,))
+        if ratio.shape in ((R,), (R, 1)):
+            pr = wp.shape[0] - R
+            rr, ss = ratio.reshape(R), shift.reshape(R)
+            if pr:
+                rr, ss = jnp.pad(rr, (0, pr)), jnp.pad(ss, (0, pr))
+        else:  # per-element factors over the slab
+            assert ratio.shape == (R, D), (ratio.shape, w.shape)
+            rr = _pad_to(ratio, block_rows, block_cols)
+            ss = _pad_to(shift, block_rows, block_cols)
+        out = enet_apply_rows_kernel(
+            wp, rr, ss, block_rows=block_rows, block_cols=block_cols, interpret=interpret
+        )
+        return out[:R, :D]
+    assert w.ndim == 1, w.shape
+    n = w.shape[0]
+    ratio = jnp.broadcast_to(ratio, (n,))
+    shift = jnp.broadcast_to(shift, (n,))
+    w2 = _tile_flat(w, block_rows, block_cols)
+    r2 = _tile_flat(ratio, block_rows, block_cols)
+    s2 = _tile_flat(shift, block_rows, block_cols)
+    out = enet_apply_rows_kernel(
+        w2, r2, s2, block_rows=block_rows, block_cols=block_cols, interpret=interpret
+    )
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def catchup_update(
+    w: jnp.ndarray,  # [n] flat or [R, D] row slab
+    psi: jnp.ndarray,  # [n] / [R] / [R, 1] int32 last-touch, or scalar
+    k: jnp.ndarray,  # scalar int32 current step
+    caches: RegCaches,
+    lam1,  # dynamic f32 (may be traced per-config)
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Pure catch-up (no gradient step): derive per-entry (ratio, shift) from
+    the DP caches and apply the shrink in one pass — the kernel form of
+    ``repro.core.lazy_enet.catchup``."""
+    ratio, shift = catchup_factors(psi, k, caches, lam1)
+    return enet_apply(
+        w, ratio, shift, block_rows=block_rows, block_cols=block_cols, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
 def enet_prox(
     w: jnp.ndarray,  # any shape; flattened internally
     a: jnp.ndarray,  # scalar multiplicative decay
@@ -85,12 +171,7 @@ def enet_prox(
     shape = w.shape
     flat = w.reshape(-1)
     n = flat.shape[0]
-    cols = block_cols
-    rows_needed = -(-n // cols)
-    pad_rows = (-rows_needed) % block_rows
-    total = (rows_needed + pad_rows) * cols
-    flat = jnp.pad(flat, (0, total - n))
-    w2 = flat.reshape(rows_needed + pad_rows, cols)
+    w2 = _tile_flat(flat, block_rows, block_cols)
     out = enet_prox_kernel(
         w2, jnp.asarray(a, jnp.float32), jnp.asarray(s, jnp.float32),
         block_rows=block_rows, block_cols=block_cols, interpret=interpret,

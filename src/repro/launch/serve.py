@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backend as kernel_backend
 from repro.configs import get_arch
 from repro.dist import api as dist_api
 from repro.dist import sharding as dist_sharding
@@ -77,6 +78,7 @@ def serve_engine(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
         metrics=metrics,
     )
     engine.warmup()
+    warm_compiles = engine.compile_counts()
     prompts = rng.randint(0, cfg.vocab_size, size=(requests, prompt_len)).astype(np.int32)
     t0 = time.monotonic()
     futs = [engine.submit(p, max_new_tokens=new_tokens, arrival=t0) for p in prompts]
@@ -85,17 +87,25 @@ def serve_engine(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
     snap = metrics.snapshot()
     lat = snap.get("latency_request", {})
     toks = snap["counters"]["tokens_out"]
+    run_compiles = engine.compile_counts()
+    # the engine's core invariant, backend-independent: warmup is the
+    # complete compile set.  Kernel-backend choice is trace-static
+    # (repro.backend), so CI runs this under --backend pallas to prove the
+    # non-default backend adds zero recompiles.
+    assert run_compiles == warm_compiles, (
+        f"serving recompiled after warmup: {warm_compiles} -> {run_compiles}"
+    )
     print(f"{cfg.name} [engine]: {requests} reqs x ({prompt_len}+{new_tokens}) over "
           f"{n_slots} slots -> {toks / max(elapsed, 1e-9):.1f} tok/s; "
           f"latency p50 {lat.get('p50_ms', 0):.1f}ms p99 {lat.get('p99_ms', 0):.1f}ms; "
-          f"compiles {engine.compile_counts()}")
+          f"compiles {run_compiles} (unchanged since warmup)")
     return np.stack([f.result(timeout=0) for f in futs], axis=0)
 
 
 def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, seed=0,
           mesh_shape: str | None = None, temperature: float = 0.0,
           static: bool = False, n_slots: int | None = None,
-          requests: int | None = None):
+          requests: int | None = None, backend: str | None = None):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -118,7 +128,9 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, see
         # every jit below — engine or static — must trace inside the context
         ctx = dist_api.activate(mesh, rules)
 
-    with ctx:
+    with ctx, kernel_backend.use_backend(backend):
+        # every jit below traces inside the backend context: the attention
+        # path is backend-selected exactly once, at warmup/trace time
         if static:
             return serve_static(cfg, model, params, batch=batch, prompt_len=prompt_len,
                                 new_tokens=new_tokens, seed=seed, temperature=temperature)
@@ -150,11 +162,16 @@ def main():
         "--mesh", default=None, metavar="DxM",
         help='data x model mesh over visible devices (e.g. "1x2")',
     )
+    ap.add_argument(
+        "--backend", default=None, choices=kernel_backend.available_backends(),
+        help="kernel backend for the attention hot path "
+             "(default: $REPRO_BACKEND or platform default)",
+    )
     args = ap.parse_args()
     serve(args.arch, reduced=args.reduced, batch=args.batch,
           prompt_len=args.prompt_len, new_tokens=args.new_tokens, seed=args.seed,
           mesh_shape=args.mesh, temperature=args.temperature, static=args.static,
-          n_slots=args.slots, requests=args.requests)
+          n_slots=args.slots, requests=args.requests, backend=args.backend)
 
 
 if __name__ == "__main__":

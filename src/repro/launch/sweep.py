@@ -20,6 +20,7 @@ import time
 
 import numpy as np
 
+from repro import backend as kernel_backend
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.data import BowConfig, SyntheticBow
 from repro.serving import LinearService
@@ -63,6 +64,13 @@ def main() -> None:
         action="store_true",
         help="hot-swap the winner into a LinearService and serve a sample batch",
     )
+    ap.add_argument(
+        "--backend",
+        default=None,
+        choices=kernel_backend.available_backends(),
+        help="kernel backend for the vmapped lazy/flush hot paths "
+        "(default: $REPRO_BACKEND or platform default)",
+    )
     args = ap.parse_args()
 
     n1, n2 = parse_grid(args.grid)
@@ -73,6 +81,7 @@ def main() -> None:
         lam2=args.lam2_hi,
         round_len=args.round_len,
         schedule=ScheduleConfig(kind="inv_sqrt", eta0=args.eta0, t0=100.0),
+        backend=args.backend,
     )
     grid = make_grid(
         base,

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backend as kernel_backend
 from repro.checkpoint import checkpointer
 from repro.configs import get_arch
 from repro.data import LMDataConfig, SyntheticLMData
@@ -167,19 +168,25 @@ def main():
         help='data x model mesh over visible devices (e.g. "2x2"); '
              "default: single-device, no sharding",
     )
-    args = ap.parse_args()
-    _, losses = train(
-        args.arch,
-        reduced=args.reduced,
-        steps=args.steps,
-        batch_size=args.batch,
-        seq_len=args.seq,
-        ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every,
-        resume=args.resume,
-        seed=args.seed,
-        mesh_shape=args.mesh,
+    ap.add_argument(
+        "--backend", default=None, choices=kernel_backend.available_backends(),
+        help="kernel backend for attention + lazy-reg hot paths "
+             "(default: $REPRO_BACKEND or platform default)",
     )
+    args = ap.parse_args()
+    with kernel_backend.use_backend(args.backend):
+        _, losses = train(
+            args.arch,
+            reduced=args.reduced,
+            steps=args.steps,
+            batch_size=args.batch,
+            seq_len=args.seq,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+            resume=args.resume,
+            seed=args.seed,
+            mesh_shape=args.mesh,
+        )
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 
 

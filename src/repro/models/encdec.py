@@ -14,6 +14,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import backend as kb
 from repro.configs import ArchConfig
 from repro.dist.api import shard
 from repro.models import layers as ll
@@ -105,6 +106,13 @@ def decode_train(cfg: ArchConfig, params, tokens, enc_out, *, collect=False):
 
 
 def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    # training keeps the reference einsum attention: flash is forward-only
+    # (DESIGN.md §8/§11) and autodiff runs backward through this trace
+    with kb.use_backend("reference"):
+        return _loss_fn(cfg, params, batch)
+
+
+def _loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     enc_out = encode(cfg, params, batch["frames"])
     logits, _ = decode_train(cfg, params, batch["tokens"], enc_out)
     logits = logits.astype(jnp.float32)

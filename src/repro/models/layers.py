@@ -6,17 +6,15 @@ All functions are pure; parameters arrive as dict leaves declared by the
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import backend as kb
 from repro.configs import ArchConfig
 from repro.dist.api import shard
 from repro.models import params as pp
-
-NEG_INF = -1e30
 
 
 # --------------------------------------------------------------------------
@@ -138,30 +136,24 @@ def gqa_attention(
     q_positions=None,  # [Sq] int32 absolute positions (decode: [1] = pos)
     kv_positions=None,  # [Skv] int32
     kv_valid=None,  # [Skv] bool or [B, Skv] — mask invalid cache slots
+    q_offset=None,  # absolute position of q[0]: scalar, or [B] per-slot (Sq=1)
+    backend: Optional[str] = None,
 ):
-    B, Sq, H, hd = q.shape
-    KV = k.shape[2]
-    G = H // KV
-    qg = q.reshape(B, Sq, KV, G, hd)
-    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k, preferred_element_type=jnp.float32)
-    logits = logits / math.sqrt(hd)
-    Skv = k.shape[1]
-    if q_positions is None:
-        q_positions = jnp.arange(Sq, dtype=jnp.int32)
-    if kv_positions is None:
-        kv_positions = jnp.arange(Skv, dtype=jnp.int32)
-    mask = jnp.ones((Sq, Skv), dtype=bool)
-    if causal:
-        mask &= kv_positions[None, :] <= q_positions[:, None]
-    if window:
-        mask &= kv_positions[None, :] > q_positions[:, None] - window
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
-    if kv_valid is not None:
-        kvm = kv_valid if kv_valid.ndim == 2 else kv_valid[None]
-        logits = jnp.where(kvm[:, None, None, None, :], logits, NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
-    return out.reshape(B, Sq, H, hd)
+    """Backend-dispatched GQA attention (repro.backend; DESIGN.md §11).
+
+    The implementation lives in the active kernel backend, resolved at trace
+    time: ``reference`` is the einsum+softmax chain that always lived here
+    (moved verbatim — bitwise identical); ``pallas`` streams the offset-form
+    mask shapes (training, chunked prefill, lock-step and per-slot decode)
+    through :func:`repro.kernels.flash_attention` and falls back to the
+    reference path for masks flash can't express (local windows, explicit
+    position vectors / validity masks).  Call sites that know their mask is
+    a causal horizon at an absolute offset pass ``q_offset`` instead of
+    position vectors so the flash route can engage."""
+    return kb.resolve(backend).attention(
+        q, k, v, causal=causal, window=window, q_positions=q_positions,
+        kv_positions=kv_positions, kv_valid=kv_valid, q_offset=q_offset,
+    )
 
 
 def attn_out(p, o):  # o [B,S,H,hd] -> [B,S,d]

@@ -17,6 +17,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import backend as kb
 from repro.configs import ArchConfig
 from repro.dist.api import shard
 from repro.models import layers as ll
@@ -259,6 +260,15 @@ def _ce_from_logits(logits, labels):
 
 
 def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    # flash attention is forward-only (DESIGN.md §8/§11): the training
+    # forward — which autodiff runs backward through — always traces the
+    # reference einsum attention, whatever backend the session selected.
+    # Inference entrypoints (prefill/prefill_at/decode*) stay dispatched.
+    with kb.use_backend("reference"):
+        return _loss_fn(cfg, params, batch)
+
+
+def _loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     tokens, labels = batch["tokens"], batch["labels"]
     extra = batch.get("patches")
 
@@ -557,10 +567,10 @@ def decode_multi(cfg: ArchConfig, params, cache, token, pos):
         raise NotImplementedError("decode_multi: KV-cache attention families only")
     x = ll.embed_tokens(cfg, params, token[:, None])  # [B,1,d]
     pos2 = pos[:, None].astype(jnp.int32)  # [B,1] per-slot rope positions
-    C = cache["k"].shape[2]
-    kv_pos = jnp.arange(C, dtype=jnp.int32)
-    valid = kv_pos[None, :] <= pos[:, None]  # [B,C] per-slot causal
     if cfg.window:
+        C = cache["k"].shape[2]
+        kv_pos = jnp.arange(C, dtype=jnp.int32)
+        valid = kv_pos[None, :] <= pos[:, None]  # [B,C] per-slot causal
         valid &= kv_pos[None, :] > pos[:, None] - cfg.window
 
     def body(carry, inp):
@@ -570,10 +580,13 @@ def decode_multi(cfg: ArchConfig, params, cache, token, pos):
         q, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=pos2)
         ncl = _cache_write_multi(cfg, cl, k[:, 0], v[:, 0], pos)
         kf, vf = _cache_read(cfg, ncl, xc.dtype)
-        # causal/window handled through the per-slot kv_valid mask: the
-        # scalar-position mask path in gqa_attention can't express a
-        # different horizon per batch row
-        o = ll.gqa_attention(q, kf, vf, causal=False, window=0, kv_valid=valid)
+        if cfg.window:
+            # the per-row window horizon only fits the kv_valid mask path
+            o = ll.gqa_attention(q, kf, vf, causal=False, window=0, kv_valid=valid)
+        else:
+            # per-slot causal horizon in offset form: slot b attends
+            # kv <= pos[b] — the shape the flash backend streams
+            o = ll.gqa_attention(q, kf, vf, causal=True, q_offset=pos)
         xc = xc + ll.attn_out(pl["attn"], o)
         h = ll.apply_norm(cfg, pl["norm2"], xc)
         if "moe" in pl:
@@ -666,8 +679,6 @@ def decode_step(cfg: ArchConfig, params, cache, token, pos):
             new_cache[f"t{t}_rec2"] = cache[f"t{t}_rec2"]
 
     else:
-        C = cache["k"].shape[2]
-        kv_pos = jnp.arange(C, dtype=jnp.int32)
 
         def body(carry, inp):
             xc = carry
@@ -676,9 +687,10 @@ def decode_step(cfg: ArchConfig, params, cache, token, pos):
             q, k, v = ll.qkv_proj(cfg, pl["attn"], h, rope_positions=pos_arr)
             ncl = _cache_write(cfg, cl, k[:, 0], v[:, 0], pos)
             kf, vf = _cache_read(cfg, ncl, xc.dtype)
+            # offset form: q sits at absolute position pos over a cache whose
+            # slots ARE absolute positions — flash-expressible when window=0
             o = ll.gqa_attention(
-                q, kf, vf, causal=True, window=cfg.window,
-                q_positions=pos_arr, kv_positions=kv_pos,
+                q, kf, vf, causal=True, window=cfg.window, q_offset=pos
             )
             xc = xc + ll.attn_out(pl["attn"], o)
             h = ll.apply_norm(cfg, pl["norm2"], xc)

@@ -13,16 +13,24 @@ backward pass:
 
 A *flush* (round boundary) brings every row current and rebases the caches.
 
+The row-slab math — catch-up, fused update, flush shrink — dispatches
+through :mod:`repro.backend` (the [rows, d_embed] slab is exactly the Pallas
+kernel's tile shape); the gather/scatter that moves rows in and out of the
+table stays in XLA (DESIGN.md §11).  ``begin`` marks psi = i, so ``finish``'s
+fused update runs with an identity catch-up window (psi == k == i): one pass
+over the row bytes either way.
+
 Note (DESIGN.md §3): with *tied* embeddings the unembedding contribution
 makes the loss gradient dense over the vocab, so the lazy technique does not
 apply — train_step falls back to the trunk optimizer for that leaf.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro import backend as kb
 from repro.core import dp_caches, lazy_enet
 from repro.core.dp_caches import RegCaches
 
@@ -50,12 +58,14 @@ def begin(
     lam1: float,
     lam2: float,
     flavor: str,
+    backend: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, LazyRowState]:
     """Catch touched rows up to the current step; returns (current_table,
     mid-state).  Run BEFORE the forward pass."""
+    bk = kb.resolve(backend)
     caches = dp_caches.extend(state.caches, state.i, eta, lam2, flavor)
     w_rows = table[idx].astype(jnp.float32)
-    cur = lazy_enet.catchup(w_rows, state.psi[idx][:, None], state.i, caches, lam1)
+    cur = bk.catchup_rows(w_rows, state.psi[idx][:, None], state.i, caches, lam1)
     table_cur = table.at[idx].set(cur.astype(table.dtype))
     new_psi = state.psi.at[idx].set(state.i)
     return table_cur, LazyRowState(psi=new_psi, caches=caches, i=state.i)
@@ -67,29 +77,51 @@ def finish(
     idx: jnp.ndarray,
     state: LazyRowState,
     eta: jnp.ndarray,
+    *,
+    lam1: float = 0.0,
+    backend: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, LazyRowState]:
-    """SGD step on the touched (already-current) rows; advances the round."""
+    """SGD step on the touched (already-current) rows; advances the round.
+    Routed through the backend's fused kernel with psi == k == i — begin()
+    just marked the rows current, so the catch-up factors are exactly
+    (ratio=1, shift=0) and the fused op reduces to the gradient step in one
+    pass over the slab."""
+    bk = kb.resolve(backend)
     g_rows = grad[idx].astype(jnp.float32)
-    new_rows = table_cur[idx].astype(jnp.float32) - eta * g_rows
+    new_rows = bk.fused_catchup_sgd(
+        table_cur[idx].astype(jnp.float32), g_rows, state.i, state.i, state.caches,
+        lam1, eta,
+    )
     new_table = table_cur.at[idx].set(new_rows.astype(table_cur.dtype))
     return new_table, LazyRowState(psi=state.psi, caches=state.caches, i=state.i + 1)
 
 
-def flush(table: jnp.ndarray, state: LazyRowState, *, lam1: float, round_len: int):
+def flush(
+    table: jnp.ndarray,
+    state: LazyRowState,
+    *,
+    lam1: float,
+    round_len: int,
+    backend: Optional[str] = None,
+):
     """Bring every row current; rebase the round (O(rows), amortized)."""
-    cur = lazy_enet.catchup(
-        table.astype(jnp.float32), state.psi[:, None], state.i, state.caches, lam1
-    )
+    ratio, shift = lazy_enet.catchup_factors(state.psi[:, None], state.i, state.caches, lam1)
+    cur = kb.resolve(backend).flush_rows(table.astype(jnp.float32), ratio, shift)
     return cur.astype(table.dtype), init(state.psi.shape[0], round_len)
 
 
-def current_table(table: jnp.ndarray, state: LazyRowState, *, lam1: float) -> jnp.ndarray:
+def current_table(
+    table: jnp.ndarray, state: LazyRowState, *, lam1: float, backend: Optional[str] = None
+) -> jnp.ndarray:
     """All rows brought current (pure — e.g. for eval/checkpoint export)."""
-    cur = lazy_enet.catchup(table.astype(jnp.float32), state.psi[:, None], state.i, state.caches, lam1)
+    ratio, shift = lazy_enet.catchup_factors(state.psi[:, None], state.i, state.caches, lam1)
+    cur = kb.resolve(backend).flush_rows(table.astype(jnp.float32), ratio, shift)
     return cur.astype(table.dtype)
 
 
-def row_nnz(table: jnp.ndarray, state: LazyRowState, *, lam1: float) -> jnp.ndarray:
+def row_nnz(
+    table: jnp.ndarray, state: LazyRowState, *, lam1: float, backend: Optional[str] = None
+) -> jnp.ndarray:
     """Rows with any surviving weight (model-sparsity statistic)."""
-    cur = current_table(table, state, lam1=lam1)
+    cur = current_table(table, state, lam1=lam1, backend=backend)
     return jnp.sum(jnp.any(jnp.abs(cur) > 0, axis=-1))

@@ -17,6 +17,7 @@ count in binary instead.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import List, Optional, Sequence, Tuple
@@ -25,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backend as kernel_backend
 from repro.core import linear_trainer as lt
 from repro.core.linear_trainer import LinearConfig, SparseBatch
 from repro.serving.metrics import ServingMetrics
@@ -44,7 +46,21 @@ def _binary_buckets(micro_batch: int) -> Tuple[int, ...]:
 class LinearService:
     def __init__(self, cfg: LinearConfig, *, p_max: int = 128, micro_batch: int = 8,
                  max_delay: float = 0.0, w0: Optional[np.ndarray] = None,
-                 metrics: Optional[ServingMetrics] = None):
+                 metrics: Optional[ServingMetrics] = None,
+                 backend: Optional[str] = None):
+        if backend is not None and cfg.backend is not None and backend != cfg.backend:
+            raise ValueError(
+                f"conflicting explicit backends: cfg.backend={cfg.backend!r} "
+                f"vs backend={backend!r}"
+            )
+        if cfg.backend is None:
+            # pin a CONCRETE backend into the config at construction: every
+            # jit this service builds (now or in a later swap_weights
+            # rebuild) closes over the same choice, whatever use_backend()/
+            # $REPRO_BACKEND context happens to be live when it first traces
+            cfg = dataclasses.replace(
+                cfg, backend=backend or kernel_backend.resolve(None).name
+            )
         self.cfg = cfg
         self.p_max = p_max
         self.micro_batch = micro_batch
@@ -56,7 +72,10 @@ class LinearService:
 
     def _build_jits(self) -> None:
         """(Re)build the jitted step/flush/predict closed over self.cfg —
-        from __init__ and from a cfg-changing swap_weights."""
+        from __init__ and from a cfg-changing swap_weights.  self.cfg.backend
+        is always concrete here (__init__ pins it), so all three jits route
+        through the same kernel backend; it is never a jit argument, so the
+        compile-count bound below is backend-independent."""
         self._step = jax.jit(lt.make_lazy_step(self.cfg), donate_argnums=0)
         self._flush = jax.jit(functools.partial(lt.flush, self.cfg), donate_argnums=0)
         self._predict = jax.jit(functools.partial(lt.predict_proba_sparse, self.cfg))
@@ -85,6 +104,12 @@ class LinearService:
         close over the lams as constants, so that costs one rebuild per
         swap — never a per-request recompile.  The feature space is fixed:
         online requests in flight keep indexing the same rows."""
+        if cfg is not None and cfg.backend is None:
+            # sweep-winner configs usually carry backend=None: keep the
+            # backend pinned at construction rather than reverting the live
+            # service to lazy trace-time resolution (and avoid a needless
+            # jit rebuild when only the backend field differs)
+            cfg = dataclasses.replace(cfg, backend=self.cfg.backend)
         if cfg is not None and cfg != self.cfg:
             assert cfg.dim == self.cfg.dim, "swap cannot change the feature space"
             self.cfg = cfg

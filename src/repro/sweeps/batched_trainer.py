@@ -15,6 +15,11 @@ trace, compile, and dispatch.
 The per-config hyperparameters enter as stacked
 :class:`~repro.core.Hypers` lanes (``grid.hypers()``), vmapped alongside the
 state; ``core.make_lazy_step_hp`` is the shared single-config step they feed.
+
+The step's row-slab math dispatches through :mod:`repro.backend` (captured
+from ``base.backend`` when the round fn is built), and the kernels take every
+hyper as a *dynamic* operand — a traced per-config lam1 vmaps straight
+through the Pallas path without per-value recompiles (DESIGN.md §11).
 """
 
 from __future__ import annotations

@@ -167,7 +167,9 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None, rules=None):
         new_trunk, new_opt = opt_update(trunk_p, trunk_g, state.opt, lr)
 
         if use_lazy:
-            new_emb, new_lazy = lazy_rows.finish(emb_p, emb_g, idx, mid_lazy, eta_emb)
+            new_emb, new_lazy = lazy_rows.finish(
+                emb_p, emb_g, idx, mid_lazy, eta_emb, lam1=cfg.lam1
+            )
             new_params = {**new_trunk, "embedding": new_emb}
         else:
             new_params, new_lazy = new_trunk, state.lazy

@@ -1,0 +1,119 @@
+"""Backend-dispatched attention: the pallas (flash, interpret-mode) route
+must match the reference einsum on every offset-form mask the serving engine
+uses, and must fall back to the reference path — exactly — for masks flash
+cannot express."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro import backend as kb
+from repro.models.layers import gqa_attention
+
+TOL = dict(rtol=2e-5, atol=2e-6)
+
+
+def _qkv(rng, B=2, Sq=12, Skv=12, H=4, KV=2, hd=8):
+    q = jnp.asarray(rng.randn(B, Sq, H, hd).astype(np.float32) * 0.3)
+    k = jnp.asarray(rng.randn(B, Skv, KV, hd).astype(np.float32) * 0.3)
+    v = jnp.asarray(rng.randn(B, Skv, KV, hd).astype(np.float32) * 0.3)
+    return q, k, v
+
+
+def test_causal_training_form(rng):
+    q, k, v = _qkv(rng)
+    ref = gqa_attention(q, k, v, causal=True, backend="reference")
+    pal = gqa_attention(q, k, v, causal=True, backend="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), **TOL)
+
+
+def test_noncausal_full_form(rng):
+    q, k, v = _qkv(rng, Sq=7, Skv=13)
+    ref = gqa_attention(q, k, v, causal=False, backend="reference")
+    pal = gqa_attention(q, k, v, causal=False, backend="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), **TOL)
+
+
+def test_decode_scalar_offset(rng):
+    """Lock-step decode: Sq=1 at absolute position pos over a C-slot cache."""
+    q, k, v = _qkv(rng, Sq=1, Skv=20)
+    for pos in (0, 7, 19):
+        off = jnp.asarray(pos, jnp.int32)
+        ref = gqa_attention(q, k, v, causal=True, q_offset=off, backend="reference")
+        pal = gqa_attention(q, k, v, causal=True, q_offset=off, backend="pallas")
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), **TOL)
+
+
+def test_decode_scalar_offset_matches_position_vectors(rng):
+    """Offset form is the same mask the old q_positions/kv_positions call
+    expressed — the reference result must be identical."""
+    q, k, v = _qkv(rng, Sq=1, Skv=20)
+    pos = 9
+    via_offset = gqa_attention(
+        q, k, v, causal=True, q_offset=jnp.asarray(pos, jnp.int32), backend="reference"
+    )
+    via_positions = gqa_attention(
+        q,
+        k,
+        v,
+        causal=True,
+        q_positions=jnp.asarray([pos], jnp.int32),
+        kv_positions=jnp.arange(20, dtype=jnp.int32),
+        backend="reference",
+    )
+    np.testing.assert_array_equal(np.asarray(via_offset), np.asarray(via_positions))
+
+
+def test_decode_per_slot_offsets(rng):
+    """Continuous-batching decode: every slot at its own position.  The
+    per-slot offset form must equal the kv_valid mask decode_multi used."""
+    B = 3
+    q, k, v = _qkv(rng, B=B, Sq=1, Skv=16)
+    offs = jnp.asarray([2, 15, 7], jnp.int32)
+    ref = gqa_attention(q, k, v, causal=True, q_offset=offs, backend="reference")
+    pal = gqa_attention(q, k, v, causal=True, q_offset=offs, backend="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), **TOL)
+    valid = jnp.arange(16, dtype=jnp.int32)[None, :] <= offs[:, None]
+    via_valid = gqa_attention(q, k, v, causal=False, kv_valid=valid, backend="reference")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(via_valid))
+
+
+def test_window_falls_back_to_reference_exactly(rng):
+    """Local-window masks aren't flash-expressible: the pallas backend must
+    return the reference result bit-for-bit (same code path)."""
+    q, k, v = _qkv(rng)
+    ref = gqa_attention(q, k, v, causal=True, window=4, backend="reference")
+    pal = gqa_attention(q, k, v, causal=True, window=4, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(pal), np.asarray(ref))
+
+
+def test_kv_valid_falls_back_to_reference_exactly(rng):
+    q, k, v = _qkv(rng, B=2, Sq=1, Skv=10)
+    valid = jnp.asarray(
+        np.array(
+            [[1, 1, 1, 0, 0, 0, 0, 0, 0, 0], [1, 1, 1, 1, 1, 1, 1, 0, 0, 0]], dtype=bool
+        )
+    )
+    ref = gqa_attention(q, k, v, causal=False, kv_valid=valid, backend="reference")
+    pal = gqa_attention(q, k, v, causal=False, kv_valid=valid, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(pal), np.asarray(ref))
+
+
+def test_context_manager_routes_models(rng):
+    """use_backend() changes what a model forward traces: the pallas context
+    must inject pallas_call into the jaxpr, the default must not."""
+    import jax
+
+    q, k, v = _qkv(rng)
+    with kb.use_backend("reference"):
+        s_ref = str(jax.make_jaxpr(lambda q, k, v: gqa_attention(q, k, v))(q, k, v))
+    assert "pallas_call" not in s_ref
+    with kb.use_backend("pallas"):
+        s_pal = str(jax.make_jaxpr(lambda q, k, v: gqa_attention(q, k, v))(q, k, v))
+    assert "pallas_call" in s_pal
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_preserved(rng, dtype):
+    q, k, v = (x.astype(dtype) for x in _qkv(rng))
+    out = gqa_attention(q, k, v, backend="pallas")
+    assert out.dtype == dtype and out.shape == q.shape

@@ -1,0 +1,66 @@
+"""Backend registry + selection precedence: arg > use_backend context >
+$REPRO_BACKEND > platform default (reference on this CPU container)."""
+import pytest
+
+from repro import backend as kb
+
+
+def test_platform_default_is_reference_on_cpu():
+    # this suite runs on CPU; the pallas default is reserved for real TPUs
+    assert kb.default_backend_name() == "reference"
+
+
+def test_env_var_overrides_default(monkeypatch):
+    monkeypatch.setenv(kb.ENV_VAR, "pallas")
+    assert kb.resolve().name == "pallas"
+    monkeypatch.setenv(kb.ENV_VAR, "")  # empty = unset, falls through
+    assert kb.resolve().name == kb.default_backend_name()
+
+
+def test_context_overrides_env(monkeypatch):
+    monkeypatch.setenv(kb.ENV_VAR, "reference")
+    with kb.use_backend("pallas"):
+        assert kb.resolve().name == "pallas"
+        with kb.use_backend("reference"):  # innermost wins
+            assert kb.resolve().name == "reference"
+        assert kb.resolve().name == "pallas"
+    assert kb.resolve().name == "reference"
+
+
+def test_explicit_arg_overrides_context():
+    with kb.use_backend("pallas"):
+        assert kb.resolve("reference").name == "reference"
+
+
+def test_use_backend_none_is_noop():
+    before = kb.resolve().name
+    with kb.use_backend(None):
+        assert kb.resolve().name == before
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError):
+        kb.get_backend("cuda")
+    with pytest.raises(KeyError):
+        with kb.use_backend("not-a-backend"):
+            pass
+
+
+def test_linear_config_validates_backend():
+    from repro.core import LinearConfig
+
+    with pytest.raises(KeyError):
+        LinearConfig(dim=8, backend="not-a-backend")
+    assert LinearConfig(dim=8, backend="pallas").backend == "pallas"
+
+
+def test_register_custom_backend():
+    class Custom(kb.ReferenceBackend):
+        name = "custom-test"
+
+    kb.register_backend(Custom())
+    try:
+        assert kb.resolve("custom-test").name == "custom-test"
+        assert "custom-test" in kb.available_backends()
+    finally:
+        kb._REGISTRY.pop("custom-test", None)

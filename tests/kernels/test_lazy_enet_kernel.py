@@ -61,6 +61,62 @@ def test_lazy_enet_update_full_path(shape, dtype, flavor, rng):
     assert not np.any(np.isnan(np.asarray(out, np.float32)))
 
 
+def _caches(rng, n, lam2, flavor):
+    caches = init_caches(n)
+    for i in range(n):
+        caches = extend(
+            caches, jnp.asarray(i, jnp.int32),
+            jnp.asarray(rng.uniform(0.05, 0.5), jnp.float32), lam2, flavor,
+        )
+    return caches
+
+
+def test_lam1_is_dynamic_no_recompile(rng):
+    """lam1 only enters through the catch-up factors computed outside the
+    kernel, so it must be a dynamic f32 operand: two different values share
+    ONE jit cache entry (a sweep over lam1 never recompiles)."""
+    caches = _caches(rng, 12, 0.1, FOBOS)
+    w = jnp.asarray(rng.uniform(-2, 2, size=(8, 256)), jnp.float32)
+    g = jnp.asarray(rng.uniform(-1, 1, size=(8, 256)), jnp.float32)
+    psi = jnp.asarray(rng.randint(0, 12, size=(8,)), jnp.int32)
+    k = jnp.asarray(12, jnp.int32)
+    eta = jnp.asarray(0.2, jnp.float32)
+    before = lazy_enet_update._cache_size()
+    out1 = lazy_enet_update(w, g, psi, k, caches, eta, lam1=jnp.float32(0.05), interpret=True)
+    after_first = lazy_enet_update._cache_size()
+    out2 = lazy_enet_update(w, g, psi, k, caches, eta, lam1=jnp.float32(0.2), interpret=True)
+    after_second = lazy_enet_update._cache_size()
+    assert after_second == after_first == before + 1, (before, after_first, after_second)
+    np.testing.assert_allclose(
+        np.asarray(out1), np.asarray(lazy_enet_update_ref(w, g, psi, k, caches, 0.05, eta)),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out2), np.asarray(lazy_enet_update_ref(w, g, psi, k, caches, 0.2, eta)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_lam1_accepts_traced_per_config_scalars(rng):
+    """The sweeps path vmaps lam1 as a traced per-config scalar; the kernel
+    wrapper must accept it (it would have rejected a static_argnames lam1)."""
+    import jax
+
+    caches = _caches(rng, 10, 0.05, SGD)
+    w = jnp.asarray(rng.uniform(-2, 2, size=(4, 64)), jnp.float32)
+    g = jnp.asarray(rng.uniform(-1, 1, size=(4, 64)), jnp.float32)
+    psi = jnp.asarray(rng.randint(0, 10, size=(4,)), jnp.int32)
+    k = jnp.asarray(10, jnp.int32)
+    eta = jnp.asarray(0.1, jnp.float32)
+    lam1s = jnp.asarray([0.0, 0.03, 0.3], jnp.float32)
+    outs = jax.vmap(
+        lambda l1: lazy_enet_update(w, g, psi, k, caches, eta, lam1=l1, interpret=True)
+    )(lam1s)
+    for c, l1 in enumerate(np.asarray(lam1s)):
+        ref = lazy_enet_update_ref(w, g, psi, k, caches, float(l1), eta)
+        np.testing.assert_allclose(np.asarray(outs[c]), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
 def test_block_shape_sweep(rng):
     """Different VMEM tilings must not change results."""
     w = jnp.asarray(rng.uniform(-2, 2, size=(32, 512)), jnp.float32)

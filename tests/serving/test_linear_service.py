@@ -1,6 +1,8 @@
 """Online linear service: parity with the raw lazy trainer, O(p) predict
 parity, interleaved traffic, and the micro-batch frontend's exact-shape
 flush decomposition."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -183,7 +185,10 @@ def test_swap_weights_installs_sweep_winner():
 
     assert int(svc.state.t) == t_before  # schedule position preserved
     assert int(svc.state.i) == 0  # fresh round, caches rebased
-    assert svc.cfg == new_cfg
+    # the swapped hypers take effect; the kernel backend pinned at
+    # construction survives a swap whose cfg leaves backend=None
+    assert svc.cfg == dataclasses.replace(new_cfg, backend=svc.cfg.backend)
+    assert svc.cfg.backend is not None
     np.testing.assert_array_equal(svc.current_weights(), w_new)
     assert svc.metrics.counters["weight_swaps"] == 1
 
