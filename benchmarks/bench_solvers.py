@@ -1,0 +1,104 @@
+"""Per-solver benchmark: steady-state O(p) step time and sparsity at
+convergence for every registered lazy-update solver (repro.solvers) on the
+synthetic bag-of-words stream.
+
+Each solver trains the same traffic through `core.make_round_fn` (scan over
+a round + boundary flush — the deployed shape of the hot path).  The first
+round is the compile; steady state is the best-of-rest per-round wall time.
+Sparsity (nnz fraction of the current weights) rides along as the model-
+quality statistic elastic net is prized for — informative in the artifact,
+not regression-gated (only ``us_per*`` keys are; see check_regression.py).
+
+Writes BENCH_solvers.json (CI artifact, regression-gated against
+benchmarks/baselines/BENCH_solvers.json in the bench-smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import solvers as solver_registry
+from repro.core import LinearConfig, ScheduleConfig, init_state, make_round_fn, nnz
+from repro.data import BowConfig, SyntheticBow
+
+
+def run(fast: bool = False, json_path: str = "BENCH_solvers.json"):
+    dim = 8_192 if fast else 100_000
+    round_len = 128 if fast else 1024
+    n_rounds = 4 if fast else 6
+    batch, p_max = 4, 32
+    base = dict(
+        dim=dim,
+        lam1=1e-4,
+        lam2=1e-5,
+        round_len=round_len,
+        trunc_k=16,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+    )
+    bow = SyntheticBow(
+        BowConfig(dim=dim, p_max=p_max, p_mean=16.0, informative_pool=1024, n_informative=128)
+    )
+    rounds = [bow.sample_round(r, round_len, batch) for r in range(n_rounds)]
+
+    rows = []
+    out = {
+        "workload": {
+            "dim": dim,
+            "round_len": round_len,
+            "n_rounds": n_rounds,
+            "batch": batch,
+            "p_max": p_max,
+        },
+        "solvers": {},
+    }
+    for name in solver_registry.available_solvers():
+        cfg = LinearConfig(solver=name, **base)
+        round_fn = make_round_fn(cfg, "lazy")
+        state = init_state(cfg)
+        state, _ = round_fn(state, rounds[0])  # compile + first round
+        jax.block_until_ready(state.wpsi)
+        per_round = []
+        losses = None
+        for rb in rounds[1:]:
+            t0 = time.monotonic()
+            state, losses = round_fn(state, rb)
+            jax.block_until_ready(state.wpsi)
+            per_round.append(time.monotonic() - t0)
+        us_per_step = min(per_round) / round_len * 1e6
+        n_nonzero = int(nnz(cfg, state))
+        final_loss = float(np.asarray(losses)[-8:].mean())
+        out["solvers"][name] = {
+            "us_per_step": us_per_step,
+            "nnz": n_nonzero,
+            "nnz_frac": n_nonzero / dim,
+            "final_loss": final_loss,
+        }
+        rows.append(
+            (
+                f"solver_{name}_steady",
+                us_per_step,
+                f"nnz={n_nonzero} ({n_nonzero / dim:.3f}) loss={final_loss:.4f}",
+            )
+        )
+
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="BENCH_solvers.json")
+    args = ap.parse_args()
+    print("name,us_per_step,derived")
+    for name, us, derived in run(fast=args.fast, json_path=args.json):
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

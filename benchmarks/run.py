@@ -11,6 +11,8 @@ minibatch extensions).  Prints ``name,us_per_call,derived`` CSV.
               + online linear predict/learn service; writes BENCH_serving.json
   sweeps      vmap-batched 16-point (lam1, lam2) grid vs sequential fits;
               writes BENCH_sweeps.json
+  solvers     per-solver (sgd/fobos/ftrl/trunc) steady-state step time +
+              sparsity at convergence; writes BENCH_solvers.json
 
 Roofline tables (per arch x shape x mesh) come from the dry-run artifacts:
 ``python -m repro.analysis.roofline`` (results/dryrun must exist).
@@ -32,6 +34,7 @@ def main() -> None:
         bench_minibatch,
         bench_scaling,
         bench_serving,
+        bench_solvers,
         bench_sweeps,
     )
 
@@ -44,6 +47,7 @@ def main() -> None:
         "minibatch": lambda: bench_minibatch.run(steps=min(steps, 256)),
         "serving": lambda: bench_serving.run(fast=args.fast),
         "sweeps": lambda: bench_sweeps.run(fast=args.fast),
+        "solvers": lambda: bench_solvers.run(fast=args.fast),
     }
     only = set(args.only.split(",")) if args.only else None
 

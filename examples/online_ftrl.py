@@ -1,0 +1,59 @@
+"""Online FTRL-Proximal quickstart: drive the LinearService with the `ftrl`
+solver — per-coordinate AdaGrad learning rates, elastic net applied at read
+(no DP catch-up cache), the configuration F10-SGD benchmarks elastic-net
+linear models against.
+
+Examples stream one at a time through the admission queue; every learn is
+O(p) in the example's nonzeros, every predict gathers only the touched
+(z, n) rows and applies the closed-form proximal read.  After warmup the
+jit compile set never grows — same invariant, different solver.
+
+Run:  PYTHONPATH=src python examples/online_ftrl.py
+"""
+
+import numpy as np
+
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.data import BowConfig, SyntheticBow
+from repro.serving import LinearService
+
+
+def main() -> None:
+    cfg = LinearConfig(
+        dim=5_000,
+        lam1=1e-4,          # l1: drives exact zeros via the proximal threshold
+        lam2=1e-5,          # l2^2: shared strength, applied at read
+        round_len=256,
+        # for ftrl the schedule's eta0 is ALPHA, the per-coordinate rate
+        # scale; there is no eta*lam2 < 1 constraint to respect
+        schedule=ScheduleConfig(kind="constant", eta0=0.2),
+    )
+    service = LinearService(cfg, p_max=32, micro_batch=8, solver="ftrl")
+    print(f"service solver={service.cfg.solver} backend={service.cfg.backend}")
+
+    bow = SyntheticBow(
+        BowConfig(dim=cfg.dim, p_max=32, p_mean=16.0, informative_pool=1024, n_informative=128)
+    )
+
+    # online loop: submit -> poll (micro-batched learn) -> predict
+    for chunk_id in range(64):
+        chunk = bow.sample_round(chunk_id, 1, 8)
+        for r in range(8):
+            service.submit_learn(
+                np.asarray(chunk.idx[0][r]), np.asarray(chunk.val[0][r]),
+                float(chunk.y[0][r]), arrival=0.0,
+            )
+        service.poll(now=1.0, force=True)
+
+    hold = bow.sample_round(10_007, 1, 8)
+    probs = service.predict(SparseBatch(idx=hold.idx[0], val=hold.val[0], y=hold.y[0]))
+    w = service.current_weights()
+    print(f"served probs {np.round(probs, 3)}")
+    print(f"nnz {int(np.sum(w != 0.0))}/{cfg.dim} "
+          f"(exact zeros from the |z| <= lam1 threshold)")
+    print(f"counters {service.metrics.snapshot()['counters']}")
+    print(f"compile set {service.compile_counts()} — fixed after warmup")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,8 @@
 (DESIGN.md §11).
 
 One op surface (:class:`~repro.backend.api.KernelBackend`: ``catchup_rows``,
-``fused_catchup_sgd``, ``flush_rows``, ``prox_sweep``, ``attention``), two
-implementations:
+``fused_catchup_sgd``, ``flush_rows``, ``prox_sweep``, ``trunc_shrink``,
+``ftrl_read``, ``ftrl_update``, ``attention``), two implementations:
 
 * ``reference`` — the bitwise pre-backend jnp code (CPU/GPU default)
 * ``pallas``    — the :mod:`repro.kernels` TPU tiles (TPU default; interpret

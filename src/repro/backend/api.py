@@ -1,8 +1,10 @@
 """The kernel-backend op surface (DESIGN.md §11).
 
 A backend is one implementation of the paper's hot-path compute: the lazy
-elastic-net catch-up / fused update / dense shrink sweep, and the serving
-engine's attention.  Two ship in-tree:
+elastic-net catch-up / fused update / dense shrink sweep, the per-solver
+update math (FTRL apply-at-read + AdaGrad deltas, truncated-gradient
+boundary shrink — repro.solvers), and the serving engine's attention.  Two
+ship in-tree:
 
 * ``reference`` — the pure-jnp expressions the algorithm was validated with,
   bitwise-identical to the pre-backend code (they ARE that code, moved).
@@ -61,6 +63,26 @@ class KernelBackend:
         ``w`` (paper Eq 9 / §6.2) — the dense baseline's O(d) inner loop.
         ``eta``/``lam1``/``lam2`` may be traced scalars; ``flavor`` is
         trace-static ('sgd' | 'fobos')."""
+        raise NotImplementedError
+
+    def trunc_shrink(self, w, shift):
+        """Pure subtractive soft-threshold ``sgn(w) * max(|w| - shift, 0)``
+        — the truncated-gradient solver's K-step boundary truncation
+        (repro.solvers.trunc).  ``shift`` may be a traced scalar (gated to 0
+        off-boundary) or broadcastable to ``w``."""
+        raise NotImplementedError
+
+    def ftrl_read(self, z, n, alpha, beta, lam1, lam2):
+        """FTRL-Proximal apply-at-read weights from flat ``(z, n)`` state:
+        ``0`` where ``|z| <= lam1``, else ``(sgn(z)*lam1 - z) / ((beta +
+        sqrt(n))/alpha + lam2)``.  All hypers may be traced scalars."""
+        raise NotImplementedError
+
+    def ftrl_update(self, w, n, g, alpha):
+        """Per-coordinate AdaGrad FTRL update deltas for flat rows:
+        ``sigma = (sqrt(n + g^2) - sqrt(n)) / alpha``, returns
+        ``(dz, dn) = (g - sigma * w, g^2)``.  Deltas, not absolute values:
+        the caller's scatter-ADD keeps duplicate-index semantics in XLA."""
         raise NotImplementedError
 
     # -- attention -----------------------------------------------------------

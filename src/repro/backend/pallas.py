@@ -12,7 +12,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dp_caches import FOBOS, SGD
-from repro.kernels import catchup_update, enet_apply, enet_prox, lazy_enet_update
+from repro.kernels import (
+    catchup_update,
+    enet_apply,
+    enet_prox,
+    ftrl_read,
+    ftrl_update,
+    lazy_enet_update,
+)
 from repro.kernels.flash_attn import flash_attention
 
 from .api import KernelBackend
@@ -50,6 +57,21 @@ class PallasBackend(KernelBackend):
         else:
             raise ValueError(f"unknown flavor {flavor!r}")
         return enet_prox(w, a, s)
+
+    def trunc_shrink(self, w, shift):
+        # the (ratio=1, shift) specialization of the generic shrink tile,
+        # flattened so narrow layouts (the dense path's [d, 1]) tile along
+        # lanes instead of padding a 1-wide column out to a full block
+        shift = jnp.asarray(shift, jnp.float32)
+        if shift.ndim:
+            shift = jnp.broadcast_to(shift, w.shape).reshape(-1)
+        return enet_apply(w.reshape(-1), jnp.ones((), jnp.float32), shift).reshape(w.shape)
+
+    def ftrl_read(self, z, n, alpha, beta, lam1, lam2):
+        return ftrl_read(z, n, alpha, beta, lam1, lam2)
+
+    def ftrl_update(self, w, n, g, alpha):
+        return ftrl_update(w, n, g, alpha)
 
     # -- attention -----------------------------------------------------------
 

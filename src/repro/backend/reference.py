@@ -39,6 +39,25 @@ class ReferenceBackend(KernelBackend):
     def prox_sweep(self, w, eta, lam1, lam2, flavor):
         return dense_enet.reg_update(w, eta, lam1, lam2, flavor)
 
+    def trunc_shrink(self, w, shift):
+        return jnp.sign(w) * jnp.maximum(jnp.abs(w) - shift, 0.0)
+
+    def ftrl_read(self, z, n, alpha, beta, lam1, lam2):
+        # alpha enters via an explicit reciprocal so the arithmetic is the
+        # same ops whether alpha is a baked constant or a traced per-config
+        # scalar (XLA strength-reduces x / const to x * (1/const); writing
+        # the multiply ourselves keeps batch-of-1 sweeps bitwise)
+        inv_alpha = 1.0 / alpha
+        denom = (beta + jnp.sqrt(n)) * inv_alpha + lam2
+        w = (jnp.sign(z) * lam1 - z) / denom
+        return jnp.where(jnp.abs(z) <= lam1, 0.0, w)
+
+    def ftrl_update(self, w, n, g, alpha):
+        g2 = g * g
+        inv_alpha = 1.0 / alpha  # see ftrl_read
+        sigma = (jnp.sqrt(n + g2) - jnp.sqrt(n)) * inv_alpha
+        return g - sigma * w, g2
+
     # -- attention -----------------------------------------------------------
 
     def attention(

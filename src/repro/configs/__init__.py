@@ -59,6 +59,11 @@ class ArchConfig:
     # the paper's technique, attached to the embedding table (+ experts)
     lazy_embedding_reg: bool = True
     reg_flavor: str = "fobos"
+    # cache-based update rule for the embedding's lazy regularizer
+    # (repro.solvers: sgd | fobos | trunc; ftrl has no row-slab form).
+    # None defers to $REPRO_SOLVER and then reg_flavor.
+    reg_solver: "str | None" = None
+    reg_trunc_k: int = 16  # truncation period when reg_solver == "trunc"
     lam1: float = 1e-6
     lam2: float = 1e-7
     reg_round_len: int = 1024

@@ -8,8 +8,17 @@ boundary all weights are brought current and the DP caches rebase — the
 paper's own space-budget amortization (fn.1), doubling as the fp32 overflow
 guard (DESIGN.md §2).
 
-State layout (DESIGN.md §8): ``w`` and ``psi`` are
-PACKED into one [d, 2] f32 array (psi is exact in f32 for round_len < 2^24).
+The per-coordinate update rule is pluggable (:mod:`repro.solvers`,
+DESIGN.md §12): the paper's SGD/FoBoS DP-cache flavors, FTRL-Proximal with
+per-coordinate AdaGrad rates (apply-at-read, no catch-up cache), and
+K-step truncated gradient all run through the same step/flush/predict
+machinery here.  ``LinearConfig.solver`` picks one; unset, it falls back
+to ``$REPRO_SOLVER`` and then to ``flavor`` — so the default path is the
+pre-subsystem SGD/FoBoS trainer, bitwise (pinned by tests/solvers).
+
+State layout (DESIGN.md §8): the per-coordinate solver state is PACKED
+into one [d, state_cols] f32 array — ``(w, psi)`` for the DP-cache solvers
+(psi is exact in f32 for round_len < 2^24), ``(w, z, n)`` for FTRL.
 With separate arrays, XLA-CPU fuses the psi/w gathers into downstream
 consumers, keeps both buffers live across the scatters, and inserts two full
 O(d) copies per step — 245us/step at d=260,941.  The packed layout makes the
@@ -29,9 +38,9 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import dp_caches, lazy_enet
+from . import dp_caches
 from .dp_caches import FLAVORS, RegCaches
-from .schedules import ScheduleConfig, validate_schedule
+from .schedules import ScheduleConfig
 
 
 def _backend(name):
@@ -42,6 +51,15 @@ def _backend(name):
     from repro import backend as kb
 
     return kb.resolve(name)
+
+
+def _solver(cfg):
+    """Resolve the solver at call (trace/construction) time.  Deferred
+    import for the same reason as :func:`_backend`: repro.solvers imports
+    this module at load time."""
+    from repro import solvers
+
+    return solvers.for_config(cfg)
 
 LOGISTIC = "logistic"
 SQUARED = "squared"
@@ -80,6 +98,11 @@ class LinearConfig:
     schedule: ScheduleConfig = dataclasses.field(default_factory=ScheduleConfig)
     use_bias: bool = True
     round_len: int = 4096  # flush/rebase period (paper's space budget)
+    # update rule (repro.solvers): sgd | fobos | ftrl | trunc; None defers
+    # to $REPRO_SOLVER and then to ``flavor`` (the pre-subsystem default)
+    solver: Optional[str] = None
+    trunc_k: int = 16  # truncation period of the `trunc` solver
+    ftrl_beta: float = 1.0  # AdaGrad smoothing of the `ftrl` solver
     # kernel backend for the regularization hot paths (repro.backend):
     # None defers to use_backend()/$REPRO_BACKEND/platform default
     backend: Optional[str] = None
@@ -89,12 +112,26 @@ class LinearConfig:
         assert self.loss in (LOGISTIC, SQUARED), self.loss
         assert self.lam1 >= 0.0 and self.lam2 >= 0.0
         assert self.round_len < 2**24  # psi lives exactly in f32
+        if self.solver is not None:
+            _solver(self)  # fail fast on unknown names
         if self.backend is not None:
             _backend(self.backend)  # fail fast on unknown names
 
+    def hypers(self, lam1=None) -> "Hypers":
+        """This config's concrete hyper triple (``lam1`` optionally
+        overridden — possibly by a traced per-config scalar)."""
+        return Hypers(
+            lam1=self.lam1 if lam1 is None else lam1,
+            lam2=self.lam2,
+            eta_scale=self.schedule.eta0,
+        )
+
 
 class LinearState(NamedTuple):
-    wpsi: jnp.ndarray  # [d, 2] f32: col 0 = weight, col 1 = round-local psi
+    # [d, state_cols] f32 packed per-coordinate solver state; col 0 is
+    # always the weight (cols: (w, psi) DP solvers / (w, z, n) ftrl /
+    # (w,) dense baseline)
+    wpsi: jnp.ndarray
     b: jnp.ndarray  # scalar f32
     caches: RegCaches  # round-local DP caches, arrays [round_len+1]
     i: jnp.ndarray  # scalar int32, round-local step
@@ -107,18 +144,25 @@ def weights(state: LinearState) -> jnp.ndarray:
 
 
 def psi(state: LinearState) -> jnp.ndarray:
+    """Round-local last-touch steps — cache-based (w, psi) layouts only."""
     if state.wpsi.shape[1] == 1:  # dense layout: always current
         return jnp.zeros((state.wpsi.shape[0],), jnp.int32)
+    assert state.wpsi.shape[1] == 2, state.wpsi.shape  # ftrl carries no psi
     return state.wpsi[:, 1].astype(jnp.int32)
 
 
 def init_state(cfg: LinearConfig, w0: Optional[jnp.ndarray] = None, mode: str = "lazy") -> LinearState:
-    """mode="lazy": packed [d, 2] (w, psi).  mode="dense": flat [d, 1] — the
-    dense baseline carries no psi and must not pay strided writes for one."""
-    cols = 2 if mode == "lazy" else 1
-    wpsi = jnp.zeros((cfg.dim, cols), jnp.float32)
-    if w0 is not None:
-        wpsi = wpsi.at[:, 0].set(jnp.asarray(w0, jnp.float32))
+    """mode="lazy": the solver's packed [d, state_cols] layout.  mode=
+    "dense": flat [d, 1] — the dense baseline carries no per-coordinate
+    bookkeeping and must not pay strided writes for any."""
+    if mode == "lazy":
+        wpsi = _solver(cfg).init_cols(cfg, w0)
+    else:
+        if not _solver(cfg).has_dense:
+            raise ValueError(f"solver {_solver(cfg).name!r} has no dense baseline")
+        wpsi = jnp.zeros((cfg.dim, 1), jnp.float32)
+        if w0 is not None:
+            wpsi = wpsi.at[:, 0].set(jnp.asarray(w0, jnp.float32))
     return LinearState(
         wpsi=wpsi,
         b=jnp.zeros((), jnp.float32),
@@ -160,38 +204,22 @@ def make_lazy_step_hp(cfg: LinearConfig):
     callers with concrete hypers (make_lazy_step, sweeps.grid) validate
     eagerly at construction time.
 
-    The kernel backend (repro.backend) resolves when the step is TRACED —
-    the uniform rule for every fn in this module, so one program never mixes
-    backends.  Pin ``cfg.backend`` (as LinearService does at construction)
+    The kernel backend (repro.backend) AND the solver (repro.solvers)
+    resolve when the step is TRACED — the uniform rule for every fn in this
+    module, so one program never mixes backends or solvers.  Pin
+    ``cfg.backend``/``cfg.solver`` (as LinearService does at construction)
     to make the choice independent of trace-time context; the gather/scatter
     chain stays in XLA either way (DESIGN.md §11)."""
+    solver = _solver(cfg)
     unit_sched = cfg.schedule.unit().make()
 
     def step(state: LinearState, batch: SparseBatch, hp: Hypers):
         bk = _backend(cfg.backend)
         eta = jnp.asarray(hp.eta_scale, jnp.float32) * unit_sched(state.t)
-        # O(1): fill DP cache slot i+1 with this step's eta (Lemma 1 / Thm 1-2)
-        caches = dp_caches.extend(state.caches, state.i, eta, hp.lam2, cfg.flavor)
-        idx_f = batch.idx.reshape(-1)
-        # --- single gather: (w, psi) rows for the touched features ---
-        g2 = state.wpsi[idx_f]  # [B*p, 2]
-        w_g = g2[:, 0]
-        psi_g = g2[:, 1].astype(jnp.int32)
-        # --- lazy catch-up of touched weights: reg for tau in [psi, i) ---
-        w_cur = bk.catchup_rows(w_g, psi_g, state.i, caches, hp.lam1)
-        # --- predict with current weights, loss gradient ---
-        z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
-        loss, gz = _grad_z(cfg, z, batch.y)
-        g_w = (gz[:, None] * batch.val).reshape(-1)  # [B*p]
-        # --- write back: set (caught-up w, psi=i) — duplicates identical —
-        # then scatter-ADD the loss-gradient step (duplicates accumulate) ---
-        upd = jnp.stack([w_cur, jnp.broadcast_to(state.i.astype(jnp.float32), w_cur.shape)], axis=1)
-        wpsi = state.wpsi.at[idx_f].set(upd)
-        wpsi = wpsi.at[idx_f, 0].add(-eta * g_w)
-        b = state.b - eta * jnp.sum(gz) if cfg.use_bias else state.b
-        # reg for step i itself stays pending (applied at next touch / flush)
-        new = LinearState(wpsi=wpsi, b=b, caches=caches, i=state.i + 1, t=state.t + 1)
-        return new, jnp.mean(loss)
+        # the O(p) touched-coordinate step (solvers/: gather, bring current,
+        # gradient, scatter back; reg for step i itself stays pending for
+        # cache-based solvers — applied at next touch / flush)
+        return solver.touched_update(cfg, state, batch, hp, eta, bk)
 
     return step
 
@@ -203,10 +231,9 @@ def make_lazy_step(cfg: LinearConfig):
     in batched sweeps, so lazy/dense/swept paths share eta arithmetic
     exactly (vs the pre-sweeps single-expression schedule it can differ in
     the last ulp)."""
-    sched = cfg.schedule.make()
-    validate_schedule(sched, cfg.lam2, cfg.flavor, horizon=10_000_000)
+    _solver(cfg).validate(cfg)  # per-solver hyper/schedule checks, eager
     step_hp = make_lazy_step_hp(cfg)
-    hp = Hypers(lam1=cfg.lam1, lam2=cfg.lam2, eta_scale=cfg.schedule.eta0)
+    hp = cfg.hypers()
 
     def step(state: LinearState, batch: SparseBatch):
         return step_hp(state, batch, hp)
@@ -215,7 +242,10 @@ def make_lazy_step(cfg: LinearConfig):
 
 
 def make_dense_step(cfg: LinearConfig):
-    validate_schedule(cfg.schedule.make(), cfg.lam2, cfg.flavor, horizon=10_000_000)
+    solver = _solver(cfg)
+    if not solver.has_dense:
+        raise ValueError(f"solver {solver.name!r} has no dense per-step baseline")
+    solver.validate(cfg)
     # eta via the unit schedule, the same expression the lazy step uses, so
     # the lazy-vs-dense comparison stays arithmetic-identical
     unit_sched = cfg.schedule.unit().make()
@@ -230,8 +260,8 @@ def make_dense_step(cfg: LinearConfig):
         loss, gz = _grad_z(cfg, z, batch.y)
         g_w = (gz[:, None] * batch.val).reshape(-1)
         wpsi = state.wpsi.at[idx_f, 0].add(-eta * g_w)
-        # O(d): dense regularization sweep over EVERY coordinate (Eq 9 / §6.2)
-        wpsi = bk.prox_sweep(wpsi, eta, cfg.lam1, cfg.lam2, cfg.flavor)
+        # O(d): the solver's dense regularization sweep over EVERY coordinate
+        wpsi = solver.dense_reg(cfg, wpsi, eta, state.t, bk)
         b = state.b - eta * jnp.sum(gz) if cfg.use_bias else state.b
         new = LinearState(wpsi=wpsi, b=b, caches=state.caches, i=state.i, t=state.t + 1)
         return new, jnp.mean(loss)
@@ -239,30 +269,29 @@ def make_dense_step(cfg: LinearConfig):
     return step
 
 
-def flush(cfg: LinearConfig, state: LinearState, lam1=None) -> LinearState:
-    """Bring every weight current and rebase the round (O(d), amortized).
+def flush(cfg: LinearConfig, state: LinearState, lam1=None, hp: Optional[Hypers] = None) -> LinearState:
+    """Bring every weight current and open a fresh round (O(d), amortized;
+    cache-based solvers rebase their DP caches, apply-at-read solvers
+    rematerialize the weight column).
 
-    ``lam1`` overrides cfg.lam1 (may be a traced per-config scalar — the
-    batched-sweep path, where the shared round counter makes this flush
-    batch-uniform: every config rebases at the same step)."""
-    lam1 = cfg.lam1 if lam1 is None else lam1
-    ratio, shift = lazy_enet.catchup_factors(psi(state), state.i, state.caches, lam1)
-    w = _backend(cfg.backend).flush_rows(weights(state), ratio, shift)
-    wpsi = jnp.stack([w, jnp.zeros_like(w)], axis=1)
-    return LinearState(
-        wpsi=wpsi,
-        b=state.b,
-        caches=dp_caches.init_caches(cfg.round_len),
-        i=jnp.zeros_like(state.i),
-        t=state.t,
-    )
+    ``lam1`` overrides cfg.lam1, or pass a full ``hp`` (either may hold
+    traced per-config scalars — the batched-sweep path, where the shared
+    round counter makes this flush batch-uniform: every config rebases at
+    the same step)."""
+    if hp is None:
+        hp = cfg.hypers(lam1=lam1)
+    return _solver(cfg).flush(cfg, state, hp, _backend(cfg.backend))
 
 
-def current_weights(cfg: LinearConfig, state: LinearState, lam1=None) -> jnp.ndarray:
+def current_weights(
+    cfg: LinearConfig, state: LinearState, lam1=None, hp: Optional[Hypers] = None
+) -> jnp.ndarray:
     """All weights brought current (pure; does not advance the round)."""
-    lam1 = cfg.lam1 if lam1 is None else lam1
-    ratio, shift = lazy_enet.catchup_factors(psi(state), state.i, state.caches, lam1)
-    return _backend(cfg.backend).flush_rows(weights(state), ratio, shift)
+    if state.wpsi.shape[1] == 1:  # dense layout: always current
+        return state.wpsi[:, 0]
+    if hp is None:
+        hp = cfg.hypers(lam1=lam1)
+    return _solver(cfg).read_weights(cfg, state, hp, _backend(cfg.backend))
 
 
 def make_round_fn(cfg: LinearConfig, mode: str):
@@ -300,18 +329,18 @@ def predict_proba_sparse(cfg: LinearConfig, state: LinearState, batch: SparseBat
     if state.wpsi.shape[1] == 1:  # dense layout: weights always current
         w_cur = g2[:, 0]
     else:
-        w_cur = _backend(cfg.backend).catchup_rows(
-            g2[:, 0], g2[:, 1].astype(jnp.int32), state.i, state.caches, cfg.lam1
-        )
+        w_cur = _solver(cfg).read_rows(cfg, g2, state, cfg.hypers(), _backend(cfg.backend))
     z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
     return jax.nn.sigmoid(z) if cfg.loss == LOGISTIC else z
 
 
-def mean_loss(cfg: LinearConfig, state: LinearState, batch: SparseBatch, lam1=None) -> jnp.ndarray:
+def mean_loss(
+    cfg: LinearConfig, state: LinearState, batch: SparseBatch, lam1=None, hp: Optional[Hypers] = None
+) -> jnp.ndarray:
     """Mean held-out loss on ``batch`` with lazily-current weights (pure).
-    ``lam1`` as in :func:`current_weights` — the sweeps CV path evaluates a
-    whole config axis through one vmap of this function."""
-    w = current_weights(cfg, state, lam1=lam1)
+    ``lam1``/``hp`` as in :func:`current_weights` — the sweeps CV path
+    evaluates a whole config axis through one vmap of this function."""
+    w = current_weights(cfg, state, lam1=lam1, hp=hp)
     z = _predict_current(cfg, w[batch.idx], state.b, batch)
     loss, _ = _grad_z(cfg, z, batch.y)
     return jnp.mean(loss)

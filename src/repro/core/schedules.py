@@ -4,8 +4,12 @@ All schedules are pure functions ``t -> eta`` where ``t`` may be a traced
 int32 scalar (they are called inside jit'd training steps) and the result is
 a float32 scalar.  The paper's lazy updates support any *time-dependent*
 schedule (constant, 1/t, 1/sqrt(t), warmup-stable-decay, ...); they do NOT
-support per-coordinate schedules such as AdaGrad (paper §3), which is why the
-lazy optimizer in :mod:`repro.optim.lazy_rows` is SGD/FoBoS-flavored.
+support per-coordinate schedules such as AdaGrad (paper §3), which is why
+the cache-based solvers (sgd/fobos/trunc — and with them the row-slab
+optimizer in :mod:`repro.optim.lazy_rows`) are global-schedule learners.
+Per-coordinate rates ARE available through the ``ftrl`` solver
+(:mod:`repro.solvers.ftrl`), which sidesteps the caches entirely by
+applying regularization at read.
 """
 from __future__ import annotations
 
@@ -112,7 +116,13 @@ def validate_schedule(sched: Schedule, lam2: float, flavor: str, horizon: int) -
     """The SGD flavor requires eta_t * lam2 < 1 for every step (otherwise the
     multiplicative factor 1 - eta*lam2 goes non-positive and log-space caching
     is invalid — and plain SGD would diverge anyway).  FoBoS has no such
-    constraint.  Called eagerly (not jitted) at trainer construction."""
+    constraint.
+
+    This is a *primitive*, not policy: whether it applies to a given trainer
+    is the solver's call — trainer construction and sweeps.grid ask
+    ``Solver.validate(cfg)`` (repro.solvers), where the SGD-decay family
+    (sgd, trunc) invokes this check and FoBoS/FTRL (which have no eta*lam2
+    divergence mode) do not.  Called eagerly, never jitted."""
     if flavor != "sgd" or lam2 == 0.0:
         return
     import numpy as np

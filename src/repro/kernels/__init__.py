@@ -7,6 +7,8 @@ and attention hot path dispatches here when the pallas backend is selected
   (the paper's hot spot: 2 reads + 1 write per element vs the 3 + 2 of a
   split catchup-then-update), plus the gradient-free apply used by flushes
 * enet_prox — dense elastic-net shrink sweep (dense baseline / flush shrink)
+* ftrl — FTRL-Proximal apply-at-read + per-coordinate AdaGrad update deltas
+  (the `ftrl` solver's elementwise hot paths, repro.solvers.ftrl)
 * flash_attn — forward flash attention, the serving engine's attention path
   (training / chunked prefill / per-slot continuous-batching decode via
   absolute q offsets)
@@ -18,7 +20,14 @@ reference implementations through :mod:`repro.backend`, never by importing
 this package directly.
 """
 from .flash_attn import flash_attention
-from .ops import catchup_update, enet_apply, enet_prox, lazy_enet_update
+from .ops import (
+    catchup_update,
+    enet_apply,
+    enet_prox,
+    ftrl_read,
+    ftrl_update,
+    lazy_enet_update,
+)
 from . import ref
 
 __all__ = [
@@ -26,6 +35,8 @@ __all__ = [
     "enet_apply",
     "enet_prox",
     "flash_attention",
+    "ftrl_read",
+    "ftrl_update",
     "lazy_enet_update",
     "ref",
 ]

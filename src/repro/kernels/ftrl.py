@@ -1,0 +1,125 @@
+"""Pallas TPU kernels for the FTRL-Proximal solver (repro.solvers.ftrl).
+
+Two elementwise passes over gathered coordinate tiles:
+
+* ``ftrl_read_rows_kernel`` — the apply-at-read elastic-net proximal step:
+
+    w = 0                                              if |z| <= lam1
+        (sgn(z)*lam1 - z) / ((beta + sqrt(n))/alpha + lam2)    otherwise
+
+* ``ftrl_update_rows_kernel`` — the per-coordinate AdaGrad update deltas:
+
+    sigma = (sqrt(n + g^2) - sqrt(n)) / alpha
+    dz    = g - sigma * w
+    dn    = g^2
+
+  Deltas (not absolute values) come back so the caller's scatter-ADD keeps
+  the additive duplicate-index semantics in XLA — the same division of
+  labor as the catch-up kernels (DESIGN.md §11): tiny per-row derivations
+  outside, the O(n) elementwise pass inside.
+
+TPU mapping mirrors kernels/lazy_enet.py: grid = (R/block_rows,
+D/block_cols) over zero-padded [R, D] tiles (padded w=n=g=z=0 entries
+produce 0 outputs: sign(0)=0 gates the read, g=0 gates the deltas), with
+every hyper a DYNAMIC (1, 1) f32 tile — a new alpha/beta/lam must never
+recompile, and repro.sweeps vmaps them as traced per-config scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _read_kernel(z_ref, n_ref, alpha_ref, beta_ref, lam1_ref, lam2_ref, out_ref):
+    z = z_ref[...].astype(jnp.float32)
+    n = n_ref[...].astype(jnp.float32)
+    # reciprocal-of-alpha form, matching the reference backend exactly (see
+    # ReferenceBackend.ftrl_read: keeps constant vs traced alpha bitwise)
+    inv_alpha = 1.0 / alpha_ref[0, 0].astype(jnp.float32)
+    lam1 = lam1_ref[0, 0].astype(jnp.float32)
+    denom = (beta_ref[0, 0].astype(jnp.float32) + jnp.sqrt(n)) * inv_alpha + lam2_ref[
+        0, 0
+    ].astype(jnp.float32)
+    w = (jnp.sign(z) * lam1 - z) / denom
+    out_ref[...] = jnp.where(jnp.abs(z) <= lam1, 0.0, w).astype(out_ref.dtype)
+
+
+def _update_kernel(w_ref, n_ref, g_ref, alpha_ref, dz_ref, dn_ref):
+    w = w_ref[...].astype(jnp.float32)
+    n = n_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    g2 = g * g
+    sigma = (jnp.sqrt(n + g2) - jnp.sqrt(n)) * (1.0 / alpha_ref[0, 0].astype(jnp.float32))
+    dz_ref[...] = (g - sigma * w).astype(dz_ref.dtype)
+    dn_ref[...] = g2.astype(dn_ref.dtype)
+
+
+def _scalar(x) -> jnp.ndarray:
+    return jnp.asarray(x, jnp.float32).reshape(1, 1)
+
+
+def _tile(br: int, bc: int) -> pl.BlockSpec:
+    return pl.BlockSpec((br, bc), lambda i, j: (i, j))
+
+
+_SCAL = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def ftrl_read_rows_kernel(
+    z: jnp.ndarray,  # [R, D]
+    n: jnp.ndarray,  # [R, D]
+    alpha: jnp.ndarray,  # scalar f32 (dynamic)
+    beta: jnp.ndarray,
+    lam1: jnp.ndarray,
+    lam2: jnp.ndarray,
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call; shapes must already be padded to block multiples
+    (use repro.kernels.ops.ftrl_read for the public padded wrapper)."""
+    R, D = z.shape
+    assert z.shape == n.shape and R % block_rows == 0 and D % block_cols == 0, (z.shape, n.shape)
+    grid = (R // block_rows, D // block_cols)
+    return pl.pallas_call(
+        _read_kernel,
+        grid=grid,
+        in_specs=[_tile(block_rows, block_cols)] * 2 + [_SCAL] * 4,
+        out_specs=_tile(block_rows, block_cols),
+        out_shape=jax.ShapeDtypeStruct(z.shape, jnp.float32),
+        interpret=interpret,
+    )(z, n, _scalar(alpha), _scalar(beta), _scalar(lam1), _scalar(lam2))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def ftrl_update_rows_kernel(
+    w: jnp.ndarray,  # [R, D] current (read) weights
+    n: jnp.ndarray,  # [R, D] AdaGrad accumulators
+    g: jnp.ndarray,  # [R, D] per-example loss gradients
+    alpha: jnp.ndarray,  # scalar f32 (dynamic)
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool = False,
+):
+    """Raw pallas_call returning ``(dz, dn)`` delta tiles."""
+    R, D = w.shape
+    assert w.shape == n.shape == g.shape, (w.shape, n.shape, g.shape)
+    assert R % block_rows == 0 and D % block_cols == 0, (w.shape, block_rows, block_cols)
+    grid = (R // block_rows, D // block_cols)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[_tile(block_rows, block_cols)] * 3 + [_SCAL],
+        out_specs=(_tile(block_rows, block_cols), _tile(block_rows, block_cols)),
+        out_shape=(
+            jax.ShapeDtypeStruct(w.shape, jnp.float32),
+            jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        ),
+        interpret=interpret,
+    )(w, n, g, _scalar(alpha))

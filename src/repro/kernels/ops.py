@@ -20,6 +20,7 @@ from repro.core.dp_caches import RegCaches
 from repro.core.lazy_enet import catchup_factors
 
 from .enet_prox import enet_prox_kernel
+from .ftrl import ftrl_read_rows_kernel, ftrl_update_rows_kernel
 from .lazy_enet import enet_apply_rows_kernel, lazy_enet_rows_kernel
 
 
@@ -153,6 +154,63 @@ def catchup_update(
     return enet_apply(
         w, ratio, shift, block_rows=block_rows, block_cols=block_cols, interpret=interpret
     )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def ftrl_read(
+    z: jnp.ndarray,  # [n] flat FTRL accumulators
+    n: jnp.ndarray,  # [n] flat AdaGrad sums
+    alpha,  # dynamic f32 scalars (may be traced per-config)
+    beta,
+    lam1,
+    lam2,
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Apply-at-read FTRL-Proximal weights from flat ``(z, n)`` state —
+    the solver's elastic-net closed form, shape-preserving."""
+    if interpret is None:
+        interpret = _default_interpret()
+    assert z.ndim == 1 and z.shape == n.shape, (z.shape, n.shape)
+    cnt = z.shape[0]
+    z2 = _tile_flat(z, block_rows, block_cols)
+    n2 = _tile_flat(n, block_rows, block_cols)
+    out = ftrl_read_rows_kernel(
+        z2, n2,
+        jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32),
+        jnp.asarray(lam1, jnp.float32), jnp.asarray(lam2, jnp.float32),
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return out.reshape(-1)[:cnt]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def ftrl_update(
+    w: jnp.ndarray,  # [n] flat current (read) weights
+    n: jnp.ndarray,  # [n] flat AdaGrad sums
+    g: jnp.ndarray,  # [n] flat loss gradients
+    alpha,  # dynamic f32 scalar (may be traced per-config)
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Per-coordinate AdaGrad FTRL update deltas ``(dz, dn)`` — the caller
+    scatter-ADDs them so duplicate indices keep additive semantics in XLA."""
+    if interpret is None:
+        interpret = _default_interpret()
+    assert w.ndim == 1 and w.shape == n.shape == g.shape, (w.shape, n.shape, g.shape)
+    cnt = w.shape[0]
+    w2 = _tile_flat(w, block_rows, block_cols)
+    n2 = _tile_flat(n, block_rows, block_cols)
+    g2 = _tile_flat(g, block_rows, block_cols)
+    dz, dn = ftrl_update_rows_kernel(
+        w2, n2, g2, jnp.asarray(alpha, jnp.float32),
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return dz.reshape(-1)[:cnt], dn.reshape(-1)[:cnt]
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))

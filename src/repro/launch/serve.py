@@ -5,6 +5,13 @@ baseline.  Families the engine can't serve exactly (recurrent state consumes
 prompt padding: rwkv6/recurrentgemma; enc-dec; VLM) fall back to the static
 loop automatically.
 
+``--linear`` serves the *online elastic-net* LinearService instead of an
+LM: synthetic bag-of-words traffic streams through the admission queue
+(learn) and the O(p) sparse predictor, under any ``--solver``
+(repro.solvers) and ``--backend``.  After warmup the jit compile set is
+asserted frozen — fixed shapes, no per-solver recompiles at steady state —
+which is the line CI's serving-smoke job runs per solver.
+
 Reduced configs run on CPU; full configs lower onto the production mesh via
 the same decode fns the dry-run compiles.  With --mesh the params and KV
 cache are placed via the repro.dist rule table (weights tensor-parallel over
@@ -102,6 +109,70 @@ def serve_engine(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
     return np.stack([f.result(timeout=0) for f in futs], axis=0)
 
 
+def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch=8,
+                 requests=256, round_len=256, seed=0):
+    """Online learn/predict smoke over the LinearService: warm the complete
+    jit set (every power-of-two bucket x {learn, predict} + the round
+    flush), then stream ``requests`` examples and assert zero recompiles."""
+    from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+    from repro.data import BowConfig, SyntheticBow
+    from repro.serving import LinearService
+
+    cfg = LinearConfig(
+        dim=dim, round_len=round_len, lam1=1e-5, lam2=1e-6,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+    )
+    svc = LinearService(cfg, p_max=p_max, micro_batch=micro_batch,
+                        backend=backend, solver=solver)
+    bow = SyntheticBow(BowConfig(
+        dim=dim, p_max=p_max, p_mean=p_max / 2.0,
+        informative_pool=min(4096, dim // 2), n_informative=min(512, dim // 8),
+        seed=seed,
+    ))
+
+    def flat_batch(chunk, n):
+        return SparseBatch(idx=chunk.idx[0][:n], val=chunk.val[0][:n], y=chunk.y[0][:n])
+
+    # --- warmup: one learn + one predict per bucket shape, plus the flush —
+    # after this the compile set is COMPLETE for any traffic mix
+    warm = bow.sample_round(10_000, 1, micro_batch)
+    for b in svc.buckets:
+        svc.learn(flat_batch(warm, b))
+        svc.predict(flat_batch(warm, b))
+    svc.state = svc._flush(svc.state)
+    warm_compiles = svc.compile_counts()
+
+    # --- steady state: Poisson-ish online traffic through the queue ---
+    rng = np.random.RandomState(seed)
+    t0 = time.monotonic()
+    served = 0
+    chunk_id = 0
+    while served < requests:
+        n = int(rng.randint(1, micro_batch + 1))
+        chunk = bow.sample_round(20_000 + chunk_id, 1, micro_batch)
+        chunk_id += 1
+        for r in range(n):
+            idx, val, y = np.asarray(chunk.idx[0][r]), np.asarray(chunk.val[0][r]), float(chunk.y[0][r])
+            svc.submit_learn(idx, val, y, arrival=0.0)
+        svc.poll(now=1.0, force=True)
+        svc.predict(flat_batch(chunk, n))
+        served += n
+    elapsed = time.monotonic() - t0
+
+    run_compiles = svc.compile_counts()
+    # the LinearService invariant the LM engine also holds: warmup is the
+    # complete compile set — solver and backend choices are trace-static
+    # (repro.solvers / repro.backend), so steady state never recompiles
+    assert run_compiles == warm_compiles, (
+        f"linear service recompiled after warmup: {warm_compiles} -> {run_compiles}"
+    )
+    snap = svc.metrics.snapshot()
+    print(f"linear[{svc.cfg.solver}/{svc.cfg.backend}]: {served} learn + {served} predict "
+          f"examples in {elapsed:.2f}s ({served / max(elapsed, 1e-9):.0f} ex/s each way); "
+          f"counters {snap['counters']}; compiles {run_compiles} (unchanged since warmup)")
+    return svc
+
+
 def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, seed=0,
           mesh_shape: str | None = None, temperature: float = 0.0,
           static: bool = False, n_slots: int | None = None,
@@ -141,7 +212,15 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, see
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None, help="LM architecture (required unless --linear)")
+    ap.add_argument("--linear", action="store_true",
+                    help="serve the online elastic-net LinearService instead of an LM")
+    ap.add_argument(
+        "--solver", default=None,
+        help="update rule for --linear (repro.solvers: sgd | fobos | ftrl | "
+             "trunc; default: $REPRO_SOLVER or the config's flavor)",
+    )
+    ap.add_argument("--dim", type=int, default=20_000, help="--linear feature-space size")
     # BooleanOptionalAction: --no-reduced reaches the full-size config (the
     # old action="store_true" + default=True made it unreachable)
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction, default=True,
@@ -168,6 +247,12 @@ def main():
              "(default: $REPRO_BACKEND or platform default)",
     )
     args = ap.parse_args()
+    if args.linear:
+        serve_linear(solver=args.solver, backend=args.backend, dim=args.dim,
+                     requests=args.requests or 256, seed=args.seed)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --linear")
     serve(args.arch, reduced=args.reduced, batch=args.batch,
           prompt_len=args.prompt_len, new_tokens=args.new_tokens, seed=args.seed,
           mesh_shape=args.mesh, temperature=args.temperature, static=args.static,

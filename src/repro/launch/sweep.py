@@ -21,6 +21,7 @@ import time
 import numpy as np
 
 from repro import backend as kernel_backend
+from repro import solvers as solver_registry
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.data import BowConfig, SyntheticBow
 from repro.serving import LinearService
@@ -58,6 +59,15 @@ def main() -> None:
     ap.add_argument("--lam2-lo", type=float, default=1e-7)
     ap.add_argument("--eta0", type=float, default=0.3)
     ap.add_argument("--flavor", default="fobos", choices=("sgd", "fobos"))
+    ap.add_argument(
+        "--solver",
+        default=None,
+        metavar="NAME[,NAME...]",
+        help="solver(s) to sweep (repro.solvers: sgd | fobos | ftrl | trunc); "
+        "a comma-separated list adds a solver axis to the grid — every "
+        "solver trains on the same data, one vmapped program each "
+        "(default: --flavor)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--swap-demo",
@@ -74,6 +84,11 @@ def main() -> None:
     args = ap.parse_args()
 
     n1, n2 = parse_grid(args.grid)
+    solvers = None
+    if args.solver:
+        solvers = tuple(s.strip() for s in args.solver.split(",") if s.strip())
+        for s in solvers:
+            solver_registry.get_solver(s)  # fail fast on unknown names
     base = LinearConfig(
         dim=args.dim,
         flavor=args.flavor,
@@ -87,6 +102,7 @@ def main() -> None:
         base,
         log_ladder(args.lam1_hi, args.lam1_lo, n1),
         log_ladder(args.lam2_hi, args.lam2_lo, n2),
+        solvers=solvers,
     )
     pool = min(8192, args.dim // 2)
     bow = SyntheticBow(
@@ -117,7 +133,7 @@ def main() -> None:
     steps = args.folds**2 * args.rounds * args.round_len * grid.n_cfg
     print(f"done in {elapsed:.1f}s ({steps / elapsed:.0f} config-steps/s)\n")
 
-    print("lam1        lam2        cv_loss   nnz")
+    print("solver  lam1        lam2        cv_loss   nnz")
     # winner's weights come from the final fold fit; nnz is reported for the
     # winner only (per-config weights of other points are not retained)
     for c in range(grid.n_cfg):
@@ -126,7 +142,10 @@ def main() -> None:
         nnz = (
             f"{int(np.sum(np.abs(res.best_weights) > 0)):>6d}" if c == res.best_index else "     -"
         )
-        print(f"{cfg.lam1:.3e}  {cfg.lam2:.3e}  {res.cv_loss[c]:.4f}  {nnz}{star}")
+        print(
+            f"{cfg.solver:<6s}  {cfg.lam1:.3e}  {cfg.lam2:.3e}  "
+            f"{res.cv_loss[c]:.4f}  {nnz}{star}"
+        )
 
     if args.swap_demo:
         print("\nswap demo: installing the winner into a live LinearService")

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backend as kernel_backend
+from repro import solvers
 from repro.checkpoint import checkpointer
 from repro.configs import get_arch
 from repro.data import LMDataConfig, SyntheticLMData
@@ -76,10 +77,18 @@ def train(
     seed: int = 0,
     log_every: int = 10,
     mesh_shape: str | None = None,
+    solver: str | None = None,
 ):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
+    if solver is not None:
+        # update rule for the embedding's lazy elastic-net regularizer
+        # (repro.solvers; cache-based solvers only — validated eagerly when
+        # the step function is built)
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, reg_solver=solver)
     model = build(cfg)
 
     # Optional data x model mesh over the visible devices ("2x2", "4x1", …).
@@ -173,6 +182,18 @@ def main():
         help="kernel backend for attention + lazy-reg hot paths "
              "(default: $REPRO_BACKEND or platform default)",
     )
+    # only cache-based solvers can host the embedding row slab (one psi per
+    # row; apply-at-read solvers keep per-coordinate state) — reject the
+    # rest at argparse time, not after the model is built
+    row_solvers = tuple(
+        n for n in solvers.available_solvers() if solvers.get_solver(n).caches_based
+    )
+    ap.add_argument(
+        "--solver", default=None, choices=row_solvers,
+        help="update rule for the embedding's lazy regularizer "
+             "(cache-based solvers only; default: $REPRO_SOLVER or the "
+             "arch's reg_flavor)",
+    )
     args = ap.parse_args()
     with kernel_backend.use_backend(args.backend):
         _, losses = train(
@@ -186,6 +207,7 @@ def main():
             resume=args.resume,
             seed=args.seed,
             mesh_shape=args.mesh,
+            solver=args.solver,
         )
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 

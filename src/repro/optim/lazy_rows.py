@@ -20,6 +20,14 @@ table stays in XLA (DESIGN.md §11).  ``begin`` marks psi = i, so ``finish``'s
 fused update runs with an identity catch-up window (psi == k == i): one pass
 over the row bytes either way.
 
+The *update rule* is pluggable (:mod:`repro.solvers`): any cache-based
+solver — the paper's sgd/fobos flavors or K-step truncated gradient — can
+host the slab, because they all reduce the missed window to the same
+per-row ``(ratio, shift)`` affine form; only the O(1) cache extension in
+``begin`` differs (``Solver.extend_caches``).  Apply-at-read solvers
+(ftrl) keep per-*coordinate* ``(z, n)`` state, which has no per-row psi
+equivalent, and are rejected eagerly by :func:`resolve_solver`.
+
 Note (DESIGN.md §3): with *tied* embeddings the unembedding contribution
 makes the loss gradient dense over the vocab, so the lazy technique does not
 apply — train_step falls back to the trunk optimizer for that leaf.
@@ -33,6 +41,30 @@ import jax.numpy as jnp
 from repro import backend as kb
 from repro.core import dp_caches, lazy_enet
 from repro.core.dp_caches import RegCaches
+
+
+def resolve_solver(name: Optional[str], flavor: str, *, round_len: Optional[int] = None,
+                   trunc_k: int = 16):
+    """Resolve (and eagerly validate) the solver hosting a row slab:
+    ``name`` > $REPRO_SOLVER > ``flavor``.  Apply-at-read solvers are
+    rejected here — at construction time, not at trace time."""
+    from repro import solvers
+
+    sv = solvers.resolve(name, default=flavor)
+    if not sv.caches_based:
+        raise ValueError(
+            f"solver {sv.name!r} keeps per-coordinate state and cannot host row-slab "
+            "lazy regularization (one psi per row); use a cache-based solver "
+            f"{tuple(n for n in solvers.available_solvers() if solvers.get_solver(n).caches_based)}"
+        )
+    if sv.name == "trunc":
+        if trunc_k < 1:
+            raise ValueError(f"trunc solver needs trunc_k >= 1, got {trunc_k}")
+        if round_len is not None and round_len % trunc_k:
+            raise ValueError(
+                f"trunc solver needs round_len % trunc_k == 0, got {round_len} % {trunc_k}"
+            )
+    return sv
 
 
 class LazyRowState(NamedTuple):
@@ -58,12 +90,16 @@ def begin(
     lam1: float,
     lam2: float,
     flavor: str,
+    solver: Optional[str] = None,
+    trunc_k: int = 16,
     backend: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, LazyRowState]:
     """Catch touched rows up to the current step; returns (current_table,
-    mid-state).  Run BEFORE the forward pass."""
+    mid-state).  Run BEFORE the forward pass.  ``solver`` picks the
+    cache-based update rule (default: $REPRO_SOLVER, then ``flavor``)."""
     bk = kb.resolve(backend)
-    caches = dp_caches.extend(state.caches, state.i, eta, lam2, flavor)
+    sv = resolve_solver(solver, flavor, trunc_k=trunc_k)
+    caches = sv.extend_caches(state.caches, state.i, eta, lam2, k_period=trunc_k)
     w_rows = table[idx].astype(jnp.float32)
     cur = bk.catchup_rows(w_rows, state.psi[idx][:, None], state.i, caches, lam1)
     table_cur = table.at[idx].set(cur.astype(table.dtype))

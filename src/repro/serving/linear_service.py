@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backend as kernel_backend
+from repro import solvers as solver_registry
 from repro.core import linear_trainer as lt
 from repro.core.linear_trainer import LinearConfig, SparseBatch
 from repro.serving.metrics import ServingMetrics
@@ -47,11 +48,17 @@ class LinearService:
     def __init__(self, cfg: LinearConfig, *, p_max: int = 128, micro_batch: int = 8,
                  max_delay: float = 0.0, w0: Optional[np.ndarray] = None,
                  metrics: Optional[ServingMetrics] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 solver: Optional[str] = None):
         if backend is not None and cfg.backend is not None and backend != cfg.backend:
             raise ValueError(
                 f"conflicting explicit backends: cfg.backend={cfg.backend!r} "
                 f"vs backend={backend!r}"
+            )
+        if solver is not None and cfg.solver is not None and solver != cfg.solver:
+            raise ValueError(
+                f"conflicting explicit solvers: cfg.solver={cfg.solver!r} "
+                f"vs solver={solver!r}"
             )
         if cfg.backend is None:
             # pin a CONCRETE backend into the config at construction: every
@@ -60,6 +67,12 @@ class LinearService:
             # $REPRO_BACKEND context happens to be live when it first traces
             cfg = dataclasses.replace(
                 cfg, backend=backend or kernel_backend.resolve(None).name
+            )
+        if cfg.solver is None:
+            # same pinning for the solver: the live service must not change
+            # update rule because $REPRO_SOLVER changed under it
+            cfg = dataclasses.replace(
+                cfg, solver=(solver or solver_registry.for_config(cfg).name)
             )
         self.cfg = cfg
         self.p_max = p_max
@@ -98,18 +111,32 @@ class LinearService:
         """Hot-swap a finished sweep's winning model into the live service.
 
         The new state opens a fresh round (psi=0, empty caches — the swapped
-        weights are already current) with the global step ``t`` preserved so
+        weights are already current; apply-at-read solvers re-seed their
+        state by inverting the read) with the global step ``t`` preserved so
         attenuating schedules do not restart hot.  Passing ``cfg`` also
-        swaps the winning hyperparameters; the jitted step/flush/predict
-        close over the lams as constants, so that costs one rebuild per
-        swap — never a per-request recompile.  The feature space is fixed:
-        online requests in flight keep indexing the same rows."""
+        swaps the winning hyperparameters — and may swap the *solver*, as
+        long as the packed state shape matches (a [d, 3] ftrl state cannot
+        take over a [d, 2] cache-based service's donated buffers mid-
+        flight); the jitted step/flush/predict close over the lams as
+        constants, so that costs one rebuild per swap — never a per-request
+        recompile.  The feature space is fixed: online requests in flight
+        keep indexing the same rows."""
         if cfg is not None and cfg.backend is None:
             # sweep-winner configs usually carry backend=None: keep the
             # backend pinned at construction rather than reverting the live
             # service to lazy trace-time resolution (and avoid a needless
             # jit rebuild when only the backend field differs)
             cfg = dataclasses.replace(cfg, backend=self.cfg.backend)
+        if cfg is not None:
+            if cfg.solver is None:
+                cfg = dataclasses.replace(cfg, solver=self.cfg.solver)
+            new_cols = solver_registry.for_config(cfg).state_cols
+            old_cols = solver_registry.for_config(self.cfg).state_cols
+            if new_cols != old_cols:
+                raise ValueError(
+                    f"swap across solvers of mismatched state shape: "
+                    f"{self.cfg.solver!r} [d, {old_cols}] -> {cfg.solver!r} [d, {new_cols}]"
+                )
         if cfg is not None and cfg != self.cfg:
             assert cfg.dim == self.cfg.dim, "swap cannot change the feature space"
             self.cfg = cfg

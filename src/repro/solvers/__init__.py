@@ -1,0 +1,94 @@
+"""repro.solvers — the pluggable lazy-update solver subsystem (DESIGN.md
+§12).
+
+One interface (:class:`~repro.solvers.api.Solver`: ``touched_update`` /
+``read_rows`` / ``read_weights`` / ``flush`` / ``validate`` /
+``extend_caches``), four in-tree implementations:
+
+* ``sgd`` / ``fobos`` — the paper's DP-cache flavors, moved out of
+  ``core.linear_trainer`` bitwise-identically (dp.py)
+* ``ftrl``  — FTRL-Proximal + per-coordinate AdaGrad, elastic net applied
+  at read from ``(z, n)`` state; needs no catch-up cache (ftrl.py)
+* ``trunc`` — truncated gradient, K-step lazy truncation via a
+  boundary-gated B cache (trunc.py)
+
+Selection precedence, resolved at TRACE time like :mod:`repro.backend`:
+
+  1. explicit config field (``LinearConfig.solver``) / fn ``solver=`` kwarg
+  2. ``REPRO_SOLVER`` environment variable
+  3. the config's ``flavor`` (sgd | fobos) — the pre-subsystem default
+
+The choice is trace-static: it never becomes a jit argument, so serving
+keeps its fixed compile set per solver, and programs traced before a switch
+keep their original solver until rebuilt.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+from .api import Solver
+from .dp import DPSolver, LazyCacheSolver
+from .ftrl import FTRLSolver
+from .trunc import TruncSolver
+
+ENV_VAR = "REPRO_SOLVER"
+
+_REGISTRY: Dict[str, Solver] = {}
+
+
+def register_solver(solver: Solver) -> None:
+    """Register a solver instance under ``solver.name`` (replaces any
+    previous registration — how an out-of-tree learner plugs in)."""
+    _REGISTRY[solver.name] = solver
+
+
+def available_solvers() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_solver(name: str) -> Solver:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver {name!r}; registered: {available_solvers()}"
+        ) from None
+
+
+def resolve(name: Optional[str] = None, default: str = "fobos") -> Solver:
+    """Resolve the active solver: arg > $REPRO_SOLVER > ``default``.  An
+    empty/None ``name`` falls through; called at trace/construction time by
+    every dispatching call site."""
+    if name:
+        return get_solver(name)
+    env = os.environ.get(ENV_VAR, "").strip()
+    if env:
+        return get_solver(env)
+    return get_solver(default)
+
+
+def for_config(cfg) -> Solver:
+    """The solver a :class:`~repro.core.LinearConfig` trains with: its
+    ``solver`` field when set, else $REPRO_SOLVER, else its ``flavor``."""
+    return resolve(cfg.solver, default=cfg.flavor)
+
+
+register_solver(DPSolver("sgd"))
+register_solver(DPSolver("fobos"))
+register_solver(FTRLSolver())
+register_solver(TruncSolver())
+
+__all__ = [
+    "ENV_VAR",
+    "DPSolver",
+    "FTRLSolver",
+    "LazyCacheSolver",
+    "Solver",
+    "TruncSolver",
+    "available_solvers",
+    "for_config",
+    "get_solver",
+    "register_solver",
+    "resolve",
+]

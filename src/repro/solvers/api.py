@@ -1,0 +1,130 @@
+"""The solver interface: one lazy-update online learner = one `Solver`.
+
+The paper's DP caches give closed-form *delayed* regularization for SGD and
+FoBoS with a global (possibly time-varying) learning rate — but they are not
+the only sparse online learners with O(p)-per-example lazy updates.  The
+industry-standard family the F10-SGD paper benchmarks elastic-net linear
+models against (FTRL-Proximal with per-coordinate AdaGrad rates) and
+Langford/Li/Zhang's Truncated Gradient both admit constant-time delayed
+updates of their own:
+
+* FTRL-Proximal needs *no* shared catch-up cache at all: the elastic-net
+  proximal step is applied closed-form **at read** from per-coordinate
+  ``(z, n)`` state, so an absent feature owes nothing when it returns.
+* Truncated gradient truncates only every K-th step, and the missed
+  boundary shrinks in a window ``[psi, i)`` collapse to a single subtractive
+  shrink — the same ``(ratio, shift)`` affine form the paper's DP caches
+  produce, with the B-cache accumulating boundary shifts only.
+
+A Solver packages everything the trainer stack needs to run one of these
+learners over the shared :class:`~repro.core.linear_trainer.LinearState`
+container:
+
+* ``state_cols`` — the per-coordinate state packed into ``wpsi[:, :cols]``
+  (2 = ``(w, psi)`` for cache-based solvers, 3 = ``(w, z, n)`` for FTRL).
+* ``touched_update`` — the O(p) per-example step (gather touched rows,
+  bring them current, gradient step, scatter back).
+* ``flush`` / ``read_weights`` / ``read_rows`` — bring weights current:
+  delayed-regularization solvers replay missed updates against the DP
+  caches; apply-at-read solvers derive weights from their state.
+* ``validate`` — per-solver hyper/schedule checks, eager and concrete
+  (e.g. SGD's ``eta*lam2 < 1``; FTRL has no such constraint and must not
+  be rejected by it — the check lives *here*, not in ``core.schedules``).
+
+Solvers are plain trace-time Python objects, resolved exactly like
+:mod:`repro.backend` backends: config arg > ``$REPRO_SOLVER`` > default
+(the config's ``flavor``), never a jit argument — so the choice is
+trace-static and serving keeps its zero-recompile invariant per solver.
+
+Hyperparameters arrive as :class:`~repro.core.linear_trainer.Hypers`
+(possibly traced per-config scalars under the sweeps vmap); ``eta`` is the
+global-schedule learning rate for the current step, pre-computed by the
+caller (solvers with per-coordinate rates use ``hp.eta_scale`` as their
+``alpha`` instead and keep ``eta`` for the bias).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class Solver:
+    """Abstract lazy-update solver.  Implementations override every method;
+    the base class only documents semantics (mirrors backend.KernelBackend).
+    """
+
+    name: str = "abstract"
+    #: columns of the packed per-coordinate state ``wpsi[:, :state_cols]``
+    state_cols: int = 2
+    #: True when delayed regularization runs against the round-local DP
+    #: caches (sgd/fobos/trunc) — the solvers optim.lazy_rows can host
+    caches_based: bool = True
+    #: True when make_dense_step has a per-step dense baseline for this
+    #: solver (the paper's O(d) comparison); apply-at-read solvers don't
+    has_dense: bool = True
+
+    # -- eager validation ----------------------------------------------------
+
+    def validate(self, cfg) -> None:
+        """Per-solver hyper/schedule validation with *concrete* values.
+        Called at trainer construction and by sweeps.grid per grid point
+        (inside the batched program the hypers are traced and can no longer
+        be inspected).  Raises ValueError on an invalid combination."""
+        raise NotImplementedError
+
+    # -- state ---------------------------------------------------------------
+
+    def init_cols(self, cfg, w0: Optional[jnp.ndarray]) -> jnp.ndarray:
+        """Fresh packed per-coordinate state ``[dim, state_cols]``, seeded
+        from weights ``w0`` when given (the warm-start / swap_weights hook;
+        solvers whose weights are derived state must invert the read)."""
+        raise NotImplementedError
+
+    def seed_cols(self, cfg, w0, hp) -> jnp.ndarray:
+        """Packed state whose read is exactly ``w0``, shape-polymorphic:
+        ``w0`` may be ``[d]`` or ``[n_cfg, d]`` (the batched warm-start
+        path) with ``hp`` fields scalars or ``[n_cfg]`` lanes.  Returns
+        ``w0.shape + (state_cols,)``."""
+        raise NotImplementedError
+
+    # -- the O(p) step -------------------------------------------------------
+
+    def touched_update(self, cfg, state, batch, hp, eta, bk) -> Tuple[object, jnp.ndarray]:
+        """One O(p) training step: bring the touched coordinates current,
+        predict, apply the loss-gradient update, scatter back.  Returns
+        ``(new_state, mean_loss)``.  ``eta`` is the global-schedule rate for
+        this step; ``bk`` the resolved kernel backend."""
+        raise NotImplementedError
+
+    # -- bring weights current -----------------------------------------------
+
+    def read_rows(self, cfg, rows, state, hp, bk) -> jnp.ndarray:
+        """Current weights for gathered state rows ``[n, state_cols]`` —
+        the O(p) serving-prediction path (pure, no write-back)."""
+        raise NotImplementedError
+
+    def read_weights(self, cfg, state, hp, bk) -> jnp.ndarray:
+        """All ``[dim]`` weights brought current (pure)."""
+        raise NotImplementedError
+
+    def flush(self, cfg, state, hp, bk):
+        """Bring every weight current and open a fresh round (O(d),
+        amortized over the round).  Cache-based solvers rebase their DP
+        caches here; apply-at-read solvers materialize the weight column."""
+        raise NotImplementedError
+
+    # -- dense baseline ------------------------------------------------------
+
+    def dense_reg(self, cfg, wpsi, eta, t, bk) -> jnp.ndarray:
+        """One dense per-step regularization sweep over every coordinate —
+        the O(d) baseline's inner loop (only when ``has_dense``)."""
+        raise NotImplementedError
+
+    # -- row-slab surface (optim.lazy_rows; cache-based solvers only) --------
+
+    def extend_caches(self, caches, i, eta, lam2, *, k_period: int = 0):
+        """Fill DP-cache slot ``i+1`` given slots ``<= i`` (O(1) per step).
+        ``k_period`` is the truncation period for solvers that regularize
+        only at K-step boundaries (ignored by per-step solvers)."""
+        raise NotImplementedError

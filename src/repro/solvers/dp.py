@@ -1,0 +1,125 @@
+"""Cache-based delayed-regularization solvers: the paper's SGD and FoBoS
+flavors, refactored out of ``core.linear_trainer`` onto the Solver
+interface **bitwise-identically** (the step/flush/read bodies below ARE the
+pre-refactor code, moved; tests/solvers pins this with an inline copy of
+the old closure).
+
+The whole family shares one structure — the DP caches are the engine:
+
+  touched step:  extend cache slot i+1, gather (w, psi) rows, replay the
+                 missed regularization for tau in [psi, i) in closed form,
+                 predict, scatter back (caught-up w, psi=i) + gradient.
+  flush:         one (ratio, shift) pair per coordinate from the caches,
+                 applied buffer-wide; caches rebase.
+
+Subclasses only choose how slot ``i+1`` is filled (``extend_caches``):
+SGD/FoBoS via :func:`repro.core.dp_caches.extend` (per-step elastic net,
+Thm 1/2), truncated gradient via a boundary-gated B increment (trunc.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import dp_caches, lazy_enet
+from repro.core.dp_caches import FOBOS, SGD
+from repro.core.schedules import validate_schedule
+
+from .api import Solver
+
+
+class LazyCacheSolver(Solver):
+    """Shared machinery for solvers whose delayed updates replay against the
+    round-local DP caches.  ``state_cols = 2``: packed ``(w, psi)``."""
+
+    state_cols = 2
+    caches_based = True
+    has_dense = True
+
+    # subclass hook: the truncation period (0 = regularize every step)
+    def k_period(self, cfg) -> int:
+        return 0
+
+    def init_cols(self, cfg, w0: Optional[jnp.ndarray]) -> jnp.ndarray:
+        wpsi = jnp.zeros((cfg.dim, 2), jnp.float32)
+        if w0 is not None:
+            wpsi = wpsi.at[:, 0].set(jnp.asarray(w0, jnp.float32))
+        return wpsi
+
+    def seed_cols(self, cfg, w0, hp) -> jnp.ndarray:
+        w0 = jnp.asarray(w0, jnp.float32)
+        return jnp.stack([w0, jnp.zeros_like(w0)], axis=-1)  # psi = 0: current
+
+    def touched_update(self, cfg, state, batch, hp, eta, bk) -> Tuple[object, jnp.ndarray]:
+        from repro.core import linear_trainer as lt
+
+        # O(1): fill DP cache slot i+1 with this step's eta (Lemma 1 / Thm 1-2)
+        caches = self.extend_caches(
+            state.caches, state.i, eta, hp.lam2, k_period=self.k_period(cfg)
+        )
+        idx_f = batch.idx.reshape(-1)
+        # --- single gather: (w, psi) rows for the touched features ---
+        g2 = state.wpsi[idx_f]  # [B*p, 2]
+        w_g = g2[:, 0]
+        psi_g = g2[:, 1].astype(jnp.int32)
+        # --- lazy catch-up of touched weights: reg for tau in [psi, i) ---
+        w_cur = bk.catchup_rows(w_g, psi_g, state.i, caches, hp.lam1)
+        # --- predict with current weights, loss gradient ---
+        z = lt._predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
+        loss, gz = lt._grad_z(cfg, z, batch.y)
+        g_w = (gz[:, None] * batch.val).reshape(-1)  # [B*p]
+        # --- write back: set (caught-up w, psi=i) — duplicates identical —
+        # then scatter-ADD the loss-gradient step (duplicates accumulate) ---
+        upd = jnp.stack([w_cur, jnp.broadcast_to(state.i.astype(jnp.float32), w_cur.shape)], axis=1)
+        wpsi = state.wpsi.at[idx_f].set(upd)
+        wpsi = wpsi.at[idx_f, 0].add(-eta * g_w)
+        b = state.b - eta * jnp.sum(gz) if cfg.use_bias else state.b
+        # reg for step i itself stays pending (applied at next touch / flush)
+        new = lt.LinearState(wpsi=wpsi, b=b, caches=caches, i=state.i + 1, t=state.t + 1)
+        return new, jnp.mean(loss)
+
+    def read_rows(self, cfg, rows, state, hp, bk) -> jnp.ndarray:
+        return bk.catchup_rows(
+            rows[:, 0], rows[:, 1].astype(jnp.int32), state.i, state.caches, hp.lam1
+        )
+
+    def read_weights(self, cfg, state, hp, bk) -> jnp.ndarray:
+        from repro.core import linear_trainer as lt
+
+        ratio, shift = lazy_enet.catchup_factors(lt.psi(state), state.i, state.caches, hp.lam1)
+        return bk.flush_rows(lt.weights(state), ratio, shift)
+
+    def flush(self, cfg, state, hp, bk):
+        from repro.core import linear_trainer as lt
+
+        w = self.read_weights(cfg, state, hp, bk)
+        wpsi = jnp.stack([w, jnp.zeros_like(w)], axis=1)
+        return lt.LinearState(
+            wpsi=wpsi,
+            b=state.b,
+            caches=dp_caches.init_caches(cfg.round_len),
+            i=jnp.zeros_like(state.i),
+            t=state.t,
+        )
+
+
+class DPSolver(LazyCacheSolver):
+    """The paper's two flavors (Eq 9 / §6.2) as registry entries: per-step
+    elastic net, delayed via :func:`repro.core.dp_caches.extend`."""
+
+    def __init__(self, flavor: str):
+        assert flavor in (SGD, FOBOS), flavor
+        self.name = flavor
+
+    def validate(self, cfg) -> None:
+        # the eta*lam2 < 1 divergence check is SGD-specific; FoBoS is
+        # unconditionally valid (validate_schedule returns early for it)
+        validate_schedule(cfg.schedule.make(), cfg.lam2, self.name, horizon=10_000_000)
+
+    def extend_caches(self, caches, i, eta, lam2, *, k_period: int = 0):
+        return dp_caches.extend(caches, i, eta, lam2, self.name)
+
+    def dense_reg(self, cfg, wpsi, eta, t, bk) -> jnp.ndarray:
+        # O(d): dense regularization sweep over EVERY coordinate (Eq 9 / §6.2)
+        return bk.prox_sweep(wpsi, eta, cfg.lam1, cfg.lam2, self.name)

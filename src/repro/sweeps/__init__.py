@@ -1,5 +1,7 @@
 """repro.sweeps — vmap-batched, warm-started (lam1, lam2) regularization
-paths with k-fold CV over the lazy elastic-net trainer (DESIGN.md §10)."""
+paths with k-fold CV over the lazy elastic-net trainer (DESIGN.md §10).
+Grids may also carry a solver axis (repro.solvers, DESIGN.md §12): one
+vmapped program per solver, results stacked flat solver-major."""
 
 from .batched_trainer import (
     HYPER_AXES,

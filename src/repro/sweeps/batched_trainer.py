@@ -1,8 +1,12 @@
 """vmap-batched lazy elastic-net training: a whole (lam1, lam2, eta0) grid
-in one compiled program.
+in one compiled program — per solver (a solver change is a *program*
+change, so a grid's solver axis runs as a loop of these programs;
+:func:`run_grid` stacks the per-solver results back into flat solver-major
+order).
 
 State layout: the ordinary :class:`~repro.core.LinearState` grows a leading
-config axis on ``wpsi`` ([n_cfg, d, 2]), ``b`` ([n_cfg]) and the DP caches
+config axis on ``wpsi`` ([n_cfg, d, state_cols] — the solver's packed
+layout), ``b`` ([n_cfg]) and the DP caches
 ([n_cfg, round_len+1] each) — while the round-local step ``i`` and global
 step ``t`` stay UNBATCHED scalars (:data:`STATE_AXES`).  Every config
 consumes the same data stream in lock-step, so the round boundary — and with
@@ -47,14 +51,23 @@ def init_batched_state(
     n_cfg: int,
     w0: Optional[np.ndarray] = None,
     b0: Optional[np.ndarray] = None,
+    hp: Optional[Hypers] = None,
 ) -> LinearState:
-    """Config-batched initial state.  ``w0`` ([n_cfg, d]) and ``b0``
-    ([n_cfg]) seed per-config weights/bias — the warm-start hook."""
-    wpsi = jnp.zeros((n_cfg, base.dim, 2), jnp.float32)
+    """Config-batched initial state in the solver's packed layout.  ``w0``
+    ([n_cfg, d]) and ``b0`` ([n_cfg]) seed per-config weights/bias — the
+    warm-start hook; solvers whose weights are derived state (ftrl) invert
+    the read per lane, which needs the per-config ``hp`` (defaults to
+    base's concrete hypers broadcast)."""
+    from repro import solvers as solver_registry
+
+    sv = solver_registry.for_config(base)
     if w0 is not None:
         w0 = jnp.asarray(w0, jnp.float32)
         assert w0.shape == (n_cfg, base.dim), w0.shape
-        wpsi = wpsi.at[:, :, 0].set(w0)
+        wpsi = sv.seed_cols(base, w0, base.hypers() if hp is None else hp)
+        assert wpsi.shape == (n_cfg, base.dim, sv.state_cols), wpsi.shape
+    else:
+        wpsi = jnp.zeros((n_cfg, base.dim, sv.state_cols), jnp.float32)
     b = jnp.zeros((n_cfg,), jnp.float32)
     if b0 is not None:
         b = jnp.asarray(b0, jnp.float32).reshape(n_cfg)
@@ -81,29 +94,49 @@ def make_batched_round_fn(base: LinearConfig):
         # round boundary is shared across the config axis (i is unbatched),
         # so the O(d) flush is batch-uniform — hoisted out of the scan, one
         # vmapped sweep per round (DESIGN.md §10).
-        return lt.flush(base, state, lam1=hp.lam1), losses
+        return lt.flush(base, state, hp=hp), losses
 
     vround = jax.vmap(cfg_round, in_axes=(STATE_AXES, HYPER_AXES, None), out_axes=(STATE_AXES, 0))
     return jax.jit(vround, donate_argnums=0)
 
 
 def make_batched_eval(base: LinearConfig):
-    """jit'd ``eval_fn(bstate, lam1, batch) -> [n_cfg]`` mean held-out loss
-    per config lane (pure; one shared eval batch)."""
+    """jit'd ``eval_fn(bstate, hp, batch) -> [n_cfg]`` mean held-out loss
+    per config lane (pure; one shared eval batch).  The full per-lane
+    ``hp`` rides along because apply-at-read solvers derive weights from
+    every hyper, not just lam1."""
 
-    def eval_one(state: LinearState, lam1, batch: SparseBatch):
-        return lt.mean_loss(base, state, batch, lam1=lam1)
+    def eval_one(state: LinearState, hp: Hypers, batch: SparseBatch):
+        return lt.mean_loss(base, state, batch, hp=hp)
 
-    return jax.jit(jax.vmap(eval_one, in_axes=(STATE_AXES, 0, None)))
+    return jax.jit(jax.vmap(eval_one, in_axes=(STATE_AXES, HYPER_AXES, None)))
 
 
-def batched_current_weights(base: LinearConfig, bstate: LinearState, lam1) -> jnp.ndarray:
+def batched_current_weights(base: LinearConfig, bstate: LinearState, hp: Hypers) -> jnp.ndarray:
     """All config lanes' weights brought current -> [n_cfg, d]."""
     fn = jax.vmap(
-        lambda s, l1: lt.current_weights(base, s, lam1=l1),
-        in_axes=(STATE_AXES, 0),
+        lambda s, h: lt.current_weights(base, s, hp=h),
+        in_axes=(STATE_AXES, HYPER_AXES),
     )
-    return fn(bstate, jnp.asarray(lam1))
+    return fn(bstate, jax.tree.map(jnp.asarray, hp))
+
+
+def concat_batched_states(states: Sequence[LinearState]) -> LinearState:
+    """Stack per-solver batched states back into one flat solver-major
+    state (shapes agree — make_grid rejects mixed state_cols; the shared
+    unbatched i/t are identical: every sub-grid consumed the same rounds)."""
+    first = states[0]
+    if len(states) == 1:
+        return first
+    return LinearState(
+        wpsi=jnp.concatenate([s.wpsi for s in states], axis=0),
+        b=jnp.concatenate([s.b for s in states], axis=0),
+        caches=jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0), *[s.caches for s in states]
+        ),
+        i=first.i,
+        t=first.t,
+    )
 
 
 def run_grid(
@@ -113,11 +146,29 @@ def run_grid(
     b0: Optional[np.ndarray] = None,
 ) -> Tuple[LinearState, np.ndarray]:
     """Train every grid point on ``rounds`` (a list of [R, B, p] round
-    batches, identical shapes) in one vmapped program.  Returns the final
-    batched state (flushed: weights current) and losses [n_cfg, n_rounds*R].
-    """
+    batches, identical shapes) — one vmapped program per solver-axis entry
+    (a solver is a program change; within a solver the whole sub-grid is
+    one vmap).  Returns the final batched state (flushed: weights current)
+    and losses [n_cfg, n_rounds*R], both flat solver-major."""
+    subs = grid.per_solver()
+    if len(subs) > 1:
+        n = grid.sub_n
+        outs = [
+            run_grid(
+                g,
+                rounds,
+                w0=None if w0 is None else w0[c * n : (c + 1) * n],
+                b0=None if b0 is None else b0[c * n : (c + 1) * n],
+            )
+            for c, g in enumerate(subs)
+        ]
+        return (
+            concat_batched_states([s for s, _ in outs]),
+            np.concatenate([ls for _, ls in outs], axis=0),
+        )
+    grid = subs[0]  # base with the axis' solver pinned (base may carry None)
     round_fn = make_batched_round_fn(grid.base)
-    bstate = init_batched_state(grid.base, grid.n_cfg, w0=w0, b0=b0)
+    bstate = init_batched_state(grid.base, grid.n_cfg, w0=w0, b0=b0, hp=grid.hypers())
     hp = grid.hypers()
     losses = []
     for rb in rounds:

@@ -58,6 +58,31 @@ def kfold_cv(
     """Train/evaluate the grid over ``folds`` chunks of the bow stream.
     Each chunk is ``rounds_per_fold`` rounds of [round_len, batch, p_max]."""
     assert folds >= 2, "k-fold CV needs k >= 2"
+    subs = grid.per_solver()
+    if len(subs) > 1:
+        # one CV per solver-axis entry (counter-seeded chunks are identical
+        # across calls, so every solver scores on the same folds); the
+        # global winner is the global argmin — which, within its own
+        # sub-grid, is also that sub-grid's winner, so its refit weights
+        # are already in hand.
+        parts = [
+            kfold_cv(g, bow, folds=folds, rounds_per_fold=rounds_per_fold,
+                     batch=batch, warm_start=warm_start)
+            for g in subs
+        ]
+        cv_loss = np.concatenate([p.cv_loss for p in parts])
+        best = int(np.argmin(cv_loss))
+        s, j = best // grid.sub_n, best % grid.sub_n
+        assert parts[s].best_index == j, (best, parts[s].best_index)
+        return CVResult(
+            fold_loss=np.concatenate([p.fold_loss for p in parts], axis=1),
+            cv_loss=cv_loss,
+            best_index=best,
+            best_config=grid.config_at(best),
+            best_weights=parts[s].best_weights,
+            best_b=parts[s].best_b,
+        )
+    grid = subs[0]  # base with the axis' solver pinned (base may carry None)
     base = grid.base
     chunks: List[List[SparseBatch]] = [
         [
@@ -68,15 +93,15 @@ def kfold_cv(
     ]
     eval_fn = make_batched_eval(base)
     round_fn = make_batched_round_fn(base)  # ONE compile: all folds + refit
-    lam1 = grid.hypers().lam1
+    hp = grid.hypers()
     fold_loss = np.zeros((folds, grid.n_cfg), np.float64)
     for f in range(folds):
         train_rounds = [rb for g in range(folds) if g != f for rb in chunks[g]]
         fit = run_path(grid, train_rounds, warm_start=warm_start, round_fn=round_fn)
         # flushed solutions -> fresh (current) batched state for the evaluator
-        bstate = init_batched_state(base, grid.n_cfg, w0=fit.weights, b0=fit.b)
+        bstate = init_batched_state(base, grid.n_cfg, w0=fit.weights, b0=fit.b, hp=hp)
         held_out = _concat_eval([_flatten_eval(rb) for rb in chunks[f]])
-        fold_loss[f] = np.asarray(eval_fn(bstate, lam1, held_out))
+        fold_loss[f] = np.asarray(eval_fn(bstate, hp, held_out))
     cv_loss = fold_loss.mean(axis=0)
     best = int(np.argmin(cv_loss))
     # the deployable model must see every chunk: refit the (whole) path on

@@ -1,11 +1,22 @@
-"""Grid / path specifications for (lam1, lam2, eta0) hyperparameter sweeps.
+"""Grid / path specifications for (solver, lam1, lam2, eta0) sweeps.
 
 A :class:`Grid` is the cartesian product of a lam1 ladder, a lam2 ladder,
 and an eta0 ladder over one shared :class:`~repro.core.LinearConfig` (which
-fixes everything that changes the *program*: dim, loss, flavor, schedule
-kind, round_len).  The product is flattened **lam1-major**, so the configs
+fixes everything that changes the *program*: dim, loss, schedule kind,
+round_len), optionally crossed with a **solver axis** (repro.solvers).  The
+(lam1, lam2, eta0) product is flattened **lam1-major**, so the configs
 sharing one lam1 value — the unit the warm-started path walks — form a
-contiguous ``[stage_size]`` slice, and ``stage_hypers(s)`` is a cheap view.
+contiguous ``[stage_size]`` slice, and ``stage_hypers(s)`` is a cheap view;
+the solver axis sits outermost (**solver-major**: grid point ``i`` belongs
+to solver ``solvers[i // sub_n]``).
+
+Within one solver the whole sub-grid trains as ONE vmapped program (the
+hypers are traced); *across* solvers the program itself differs — a
+different cache-extension / read rule is a different trace — so the batched
+runners (run_grid / run_path / kfold_cv) execute one vmapped program per
+solver via :meth:`Grid.per_solver`.  Mixing solvers whose state shapes
+disagree (ftrl's [d, 3] vs the cache-based solvers' [d, 2]) cannot share a
+stacked batched state and is rejected eagerly at construction.
 
 The lam1 ladder is kept in **descending** order: continuation along a
 regularization path runs strong-to-weak (the heavily-regularized solution is
@@ -13,9 +24,12 @@ sparse and close to zero, and each relaxation moves the optimum a short
 distance — the Elastic-GD path trick; see Allerbo & Jonasson 2022 and
 DESIGN.md §10).
 
-Validation is eager and concrete: the SGD flavor's ``eta*lam2 < 1``
-requirement is checked per (lam2, eta0) pair at construction, because inside
-the batched trainer the lams are traced and can no longer be inspected.
+Validation is eager and concrete, and asks the *solver* (the satellite fix:
+the ``eta*lam2 < 1`` check is an SGD-family constraint, not a grid
+invariant — FTRL has no such divergence mode and must not be rejected by
+it): ``Solver.validate`` runs per (solver, lam2, eta0) triple at
+construction, because inside the batched trainer the lams are traced and
+can no longer be inspected.
 """
 
 from __future__ import annotations
@@ -26,7 +40,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.linear_trainer import Hypers, LinearConfig
-from repro.core.schedules import validate_schedule
 
 
 def log_ladder(hi: float, lo: float, n: int) -> tuple:
@@ -41,30 +54,58 @@ def log_ladder(hi: float, lo: float, n: int) -> tuple:
 
 @dataclasses.dataclass(frozen=True)
 class Grid:
-    """Flattened (lam1-major) cartesian sweep grid.  Build via make_grid."""
+    """Flattened (solver-major, then lam1-major) sweep grid.  Build via
+    make_grid.  ``shape``/``stage_*``/``unflatten`` describe the
+    per-solver (lam1, lam2, eta0) sub-grid."""
 
     base: LinearConfig
     lam1: tuple  # descending ladder, length n1
     lam2: tuple  # length n2
     eta0: tuple  # length ne
+    solvers: tuple = ()  # solver-name axis, outermost; () = base's solver
+
+    @property
+    def solver_axis(self) -> tuple:
+        """Concrete solver names, one per outermost-axis entry."""
+        if self.solvers:
+            return self.solvers
+        from repro import solvers as solver_registry
+
+        return (solver_registry.for_config(self.base).name,)
 
     @property
     def shape(self) -> tuple:
         return (len(self.lam1), len(self.lam2), len(self.eta0))
 
     @property
-    def n_cfg(self) -> int:
+    def sub_n(self) -> int:
+        """Grid points per solver (= n1 * n2 * ne)."""
         n1, n2, ne = self.shape
         return n1 * n2 * ne
+
+    @property
+    def n_cfg(self) -> int:
+        return len(self.solver_axis) * self.sub_n
 
     @property
     def stage_size(self) -> int:
         """Configs per lam1 stage (= n2 * ne)."""
         return len(self.lam2) * len(self.eta0)
 
+    def per_solver(self) -> tuple:
+        """One single-solver sub-grid per solver-axis entry — the unit the
+        batched runners vmap (a solver change is a program change, so the
+        solver axis runs as a Python loop of vmapped programs)."""
+        return tuple(
+            dataclasses.replace(
+                self, base=dataclasses.replace(self.base, solver=s), solvers=(s,)
+            )
+            for s in self.solver_axis
+        )
+
     def flat(self) -> tuple:
-        """(lam1, lam2, eta0) as three float32 [n_cfg] arrays, lam1-major:
-        ``flat_index = i1 * stage_size + i2 * ne + ie``."""
+        """(lam1, lam2, eta0) of the per-solver sub-grid as three float32
+        [sub_n] arrays, lam1-major: ``i = i1 * stage_size + i2 * ne + ie``."""
         g1, g2, ge = np.meshgrid(self.lam1, self.lam2, self.eta0, indexing="ij")
         return (
             g1.reshape(-1).astype(np.float32),
@@ -73,27 +114,38 @@ class Grid:
         )
 
     def hypers(self) -> Hypers:
-        """The whole grid as stacked [n_cfg] Hypers — the vmapped axis."""
+        """The whole grid as stacked [n_cfg] Hypers, solver-major (the
+        (lam1, lam2, eta0) block repeats per solver-axis entry)."""
         f1, f2, fe = self.flat()
+        reps = len(self.solver_axis)
+        if reps > 1:
+            f1, f2, fe = (np.tile(f, reps) for f in (f1, f2, fe))
         return Hypers(lam1=jnp.asarray(f1), lam2=jnp.asarray(f2), eta_scale=jnp.asarray(fe))
 
     def stage_hypers(self, s: int) -> Hypers:
-        """Stage ``s`` of the lam1 path as stacked [stage_size] Hypers."""
-        hp = self.hypers()
+        """Stage ``s`` of the (per-solver) lam1 path as [stage_size] Hypers."""
+        f1, f2, fe = self.flat()
         lo, hi = s * self.stage_size, (s + 1) * self.stage_size
-        return Hypers(lam1=hp.lam1[lo:hi], lam2=hp.lam2[lo:hi], eta_scale=hp.eta_scale[lo:hi])
+        return Hypers(
+            lam1=jnp.asarray(f1[lo:hi]),
+            lam2=jnp.asarray(f2[lo:hi]),
+            eta_scale=jnp.asarray(fe[lo:hi]),
+        )
 
     def unflatten(self, i: int) -> tuple:
-        """flat index -> (i1, i2, ie)."""
+        """flat index -> (i1, i2, ie) within solver ``i // sub_n``."""
         _, n2, ne = self.shape
+        i = i % self.sub_n
         return (i // (n2 * ne), (i // ne) % n2, i % ne)
 
     def config_at(self, i: int) -> LinearConfig:
         """The flat-index-``i`` point as a plain single-config LinearConfig
         (sequential baselines, and the winner a CV sweep hands to serving)."""
+        solver = self.solver_axis[i // self.sub_n]
         i1, i2, ie = self.unflatten(i)
         return dataclasses.replace(
             self.base,
+            solver=solver,
             lam1=self.lam1[i1],
             lam2=self.lam2[i2],
             schedule=dataclasses.replace(self.base.schedule, eta0=self.eta0[ie]),
@@ -105,19 +157,47 @@ def make_grid(
     lam1_ladder,
     lam2_ladder,
     eta0_ladder=None,
+    solvers=None,
 ) -> Grid:
     """Build (and validate) a sweep grid.  ``lam1_ladder`` is sorted
-    descending; ``eta0_ladder`` defaults to the base schedule's eta0."""
+    descending; ``eta0_ladder`` defaults to the base schedule's eta0;
+    ``solvers`` (a sequence of repro.solvers names) adds an outermost
+    solver axis, defaulting to the base config's resolved solver."""
+    from repro import solvers as solver_registry
+
     lam1 = tuple(sorted((float(v) for v in lam1_ladder), reverse=True))
     lam2 = tuple(float(v) for v in lam2_ladder)
     eta0 = tuple(float(v) for v in (eta0_ladder or (base.schedule.eta0,)))
     assert lam1 and lam2 and eta0, "ladders must be non-empty"
     assert all(v >= 0.0 for v in lam1 + lam2), "regularization strengths must be >= 0"
     assert all(v > 0.0 for v in eta0), "eta0 must be > 0"
-    # eager SGD-flavor eta*lam2 < 1 check over every (lam2, eta0) pair: the
-    # batched trainer traces lams and cannot validate inside the program.
-    for e0 in eta0:
-        sched = dataclasses.replace(base.schedule, eta0=e0).make()
-        for l2 in lam2:
-            validate_schedule(sched, l2, base.flavor, horizon=10_000_000)
-    return Grid(base=base, lam1=lam1, lam2=lam2, eta0=eta0)
+    if solvers is None:
+        names = (solver_registry.for_config(base).name,)
+    else:
+        names = tuple(solvers)
+        assert names, "solver axis must be non-empty"
+    # solvers sharing one grid must share a state shape: the batched runners
+    # stack per-solver results into ONE [n_cfg, d, cols] state (eager error —
+    # a [d, 3] ftrl lane cannot concatenate with [d, 2] cache-based lanes)
+    cols = {n: solver_registry.get_solver(n).state_cols for n in names}
+    if len(set(cols.values())) > 1:
+        raise ValueError(
+            f"solver axis mixes state shapes {cols}; sweep them as separate grids"
+        )
+    # eager per-solver hyper/schedule validation over every (lam2, eta0)
+    # pair (e.g. the SGD-family eta*lam2 < 1 divergence check — asked OF THE
+    # SOLVER, so ftrl configs are not falsely rejected by it): the batched
+    # trainer traces lams and cannot validate inside the program.
+    for s in names:
+        sv = solver_registry.get_solver(s)
+        for e0 in eta0:
+            for l2 in lam2:
+                sv.validate(
+                    dataclasses.replace(
+                        base,
+                        solver=s,
+                        lam2=l2,
+                        schedule=dataclasses.replace(base.schedule, eta0=e0),
+                    )
+                )
+    return Grid(base=base, lam1=lam1, lam2=lam2, eta0=eta0, solvers=names)

@@ -47,7 +47,20 @@ def run_path(
     on the same ``rounds``; warm starts chain stage s's flushed solution
     into stage s+1's init.  ``round_fn`` lets a caller reuse one jitted
     batched round program across repeated paths (kfold_cv: one compile for
-    all folds); by default one is built here and shared across stages."""
+    all folds); by default one is built here and shared across stages.
+
+    A multi-solver grid walks one path per solver-axis entry (each solver
+    is its own program — and its own continuation chain: warm starts never
+    cross solvers) and concatenates the results solver-major."""
+    subs = grid.per_solver()
+    if len(subs) > 1:
+        parts = [run_path(g, rounds, warm_start=warm_start) for g in subs]
+        return PathResult(
+            weights=np.concatenate([p.weights for p in parts], axis=0),
+            b=np.concatenate([p.b for p in parts], axis=0),
+            losses=np.concatenate([p.losses for p in parts], axis=0),
+        )
+    grid = subs[0]  # base with the axis' solver pinned (base may carry None)
     if round_fn is None:
         round_fn = make_batched_round_fn(grid.base)
     n1 = len(grid.lam1)
@@ -57,7 +70,7 @@ def run_path(
         hp = grid.stage_hypers(s)
         seed_w = w_prev if warm_start else None
         seed_b = b_prev if warm_start else None
-        bstate = init_batched_state(grid.base, grid.stage_size, w0=seed_w, b0=seed_b)
+        bstate = init_batched_state(grid.base, grid.stage_size, w0=seed_w, b0=seed_b, hp=hp)
         stage_losses = []
         for rb in rounds:
             bstate, ls = round_fn(bstate, hp, rb)

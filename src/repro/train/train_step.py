@@ -65,6 +65,12 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None, rules=None):
     sched = cfg.schedule.make()
     emb_sched = dataclasses.replace(cfg.schedule, eta0=cfg.emb_lr).make()
     use_lazy = lazy_enabled(cfg)
+    if use_lazy:
+        # eager: unknown / apply-at-read solvers and misaligned truncation
+        # periods must fail at construction, not inside the trace
+        lazy_rows.resolve_solver(
+            cfg.reg_solver, cfg.reg_flavor, round_len=cfg.reg_round_len, trunc_k=cfg.reg_trunc_k
+        )
     use_compress = bool(
         cfg.grad_compress_pod and mesh is not None and "pod" in mesh.axis_names and cfg.grad_accum == 1
     )
@@ -152,6 +158,7 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None, rules=None):
             emb_cur, mid_lazy = lazy_rows.begin(
                 params["embedding"], idx, state.lazy, eta_emb,
                 lam1=cfg.lam1, lam2=cfg.lam2, flavor=cfg.reg_flavor,
+                solver=cfg.reg_solver, trunc_k=cfg.reg_trunc_k,
             )
             params = {**params, "embedding": emb_cur}
 

@@ -185,9 +185,11 @@ def test_swap_weights_installs_sweep_winner():
 
     assert int(svc.state.t) == t_before  # schedule position preserved
     assert int(svc.state.i) == 0  # fresh round, caches rebased
-    # the swapped hypers take effect; the kernel backend pinned at
-    # construction survives a swap whose cfg leaves backend=None
-    assert svc.cfg == dataclasses.replace(new_cfg, backend=svc.cfg.backend)
+    # the swapped hypers take effect; the kernel backend and solver pinned
+    # at construction survive a swap whose cfg leaves them None
+    assert svc.cfg == dataclasses.replace(
+        new_cfg, backend=svc.cfg.backend, solver=svc.cfg.solver
+    )
     assert svc.cfg.backend is not None
     np.testing.assert_array_equal(svc.current_weights(), w_new)
     assert svc.metrics.counters["weight_swaps"] == 1

@@ -1,0 +1,176 @@
+"""The refactor's load-bearing guarantees:
+
+1. ``sgd``/``fobos`` through the solver interface are BITWISE-equal to the
+   pre-refactor trainer (the old step/flush bodies are inlined here as the
+   oracle — they compile to the same XLA program or this fails).
+2. The sweeps batch-of-1 bitwise property holds PER SOLVER: a 1-lane
+   vmapped grid equals the plain single-config fit exactly, for all four
+   solvers (collision-free indices, as in tests/sweeps).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from repro.core import (
+    FOBOS,
+    SGD,
+    LinearConfig,
+    LinearState,
+    ScheduleConfig,
+    SparseBatch,
+    init_state,
+    make_round_fn,
+)
+from repro.core import dp_caches, lazy_enet
+from repro.sweeps import make_grid, run_grid
+
+DIM = 53
+
+
+def _pre_refactor_round_fn(cfg: LinearConfig):
+    """The linear trainer exactly as it existed before repro.solvers (PR 4's
+    reference-backend form): hard-coded DP-cache step + flush."""
+    unit_sched = cfg.schedule.unit().make()
+    eta_scale = cfg.schedule.eta0
+
+    def step(state, batch):
+        eta = jnp.asarray(eta_scale, jnp.float32) * unit_sched(state.t)
+        caches = dp_caches.extend(state.caches, state.i, eta, cfg.lam2, cfg.flavor)
+        idx_f = batch.idx.reshape(-1)
+        g2 = state.wpsi[idx_f]
+        w_g = g2[:, 0]
+        psi_g = g2[:, 1].astype(jnp.int32)
+        w_cur = lazy_enet.catchup(w_g, psi_g, state.i, caches, cfg.lam1)
+        z = jnp.sum(w_cur.reshape(batch.idx.shape) * batch.val, axis=-1) + state.b
+        loss = jnp.maximum(z, 0.0) - z * batch.y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        gz = jax.nn.sigmoid(z) - batch.y
+        g_w = (gz[:, None] * batch.val).reshape(-1)
+        upd = jnp.stack(
+            [w_cur, jnp.broadcast_to(state.i.astype(jnp.float32), w_cur.shape)], axis=1
+        )
+        wpsi = state.wpsi.at[idx_f].set(upd)
+        wpsi = wpsi.at[idx_f, 0].add(-eta * g_w)
+        b = state.b - eta * jnp.sum(gz)
+        new = LinearState(wpsi=wpsi, b=b, caches=caches, i=state.i + 1, t=state.t + 1)
+        return new, jnp.mean(loss)
+
+    def flush(state):
+        psi = state.wpsi[:, 1].astype(jnp.int32)
+        ratio, shift = lazy_enet.catchup_factors(psi, state.i, state.caches, cfg.lam1)
+        mag = jnp.abs(state.wpsi[:, 0]) * ratio - shift
+        w = jnp.sign(state.wpsi[:, 0]) * jnp.maximum(mag, 0.0)
+        return LinearState(
+            wpsi=jnp.stack([w, jnp.zeros_like(w)], axis=1),
+            b=state.b,
+            caches=dp_caches.init_caches(cfg.round_len),
+            i=jnp.zeros_like(state.i),
+            t=state.t,
+        )
+
+    @jax.jit
+    def round_fn(state, round_batches):
+        state, losses = jax.lax.scan(step, state, round_batches)
+        return flush(state), losses
+
+    return round_fn
+
+
+def _mk_rounds(rng, n_rounds, R, B, p, dim=DIM):
+    out = []
+    for _ in range(n_rounds):
+        idx = np.stack(
+            [rng.choice(dim, size=B * p, replace=False).reshape(B, p) for _ in range(R)]
+        ).astype(np.int32)
+        val = rng.uniform(-2.0, 2.0, size=(R, B, p)).astype(np.float32)
+        y = (rng.uniform(size=(R, B)) > 0.5).astype(np.float32)
+        out.append(SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y)))
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    flavor=st.sampled_from([SGD, FOBOS]),
+    lam1=st.floats(0.0, 0.3),
+    lam2=st.floats(0.0, 0.3),
+    kind=st.sampled_from(["constant", "inv_t", "inv_sqrt"]),
+)
+def test_dp_solvers_bitwise_equal_pre_refactor(seed, flavor, lam1, lam2, kind):
+    rng = np.random.RandomState(seed)
+    cfg = LinearConfig(
+        dim=DIM,
+        flavor=flavor,
+        lam1=lam1,
+        lam2=lam2,
+        round_len=6,
+        schedule=ScheduleConfig(kind=kind, eta0=0.4),
+        backend="reference",  # the oracle is the reference arithmetic
+    )
+    rounds = _mk_rounds(rng, 2, cfg.round_len, 2, 3)
+
+    old_fn = _pre_refactor_round_fn(cfg)
+    new_fn = make_round_fn(cfg, "lazy")
+    s_old, s_new = init_state(cfg), init_state(cfg)
+    for rb in rounds:
+        s_old, l_old = old_fn(s_old, rb)
+        s_new, l_new = new_fn(s_new, rb)
+        np.testing.assert_array_equal(np.asarray(l_new), np.asarray(l_old))
+    np.testing.assert_array_equal(np.asarray(s_new.wpsi), np.asarray(s_old.wpsi))
+    np.testing.assert_array_equal(np.asarray(s_new.b), np.asarray(s_old.b))
+    for leaf_new, leaf_old in zip(jax.tree.leaves(s_new.caches), jax.tree.leaves(s_old.caches)):
+        np.testing.assert_array_equal(np.asarray(leaf_new), np.asarray(leaf_old))
+
+
+@pytest.mark.parametrize("solver", ["sgd", "fobos", "ftrl", "trunc"])
+@pytest.mark.parametrize("loss", ["logistic", "squared"])
+def test_batch_of_one_bitwise_per_solver(solver, loss, rng):
+    """The sweeps property, now per solver: one vmapped lane == plain fit,
+    bitwise (shared make_lazy_step_hp arithmetic; collision-free idx)."""
+    cfg = LinearConfig(
+        dim=DIM,
+        loss=loss,
+        solver=solver,
+        lam1=2e-2,
+        lam2=1e-2,
+        round_len=8,
+        trunc_k=4,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3),
+        backend="reference",
+    )
+    rounds = _mk_rounds(rng, 2, cfg.round_len, 2, 3)
+    grid = make_grid(cfg, (cfg.lam1,), (cfg.lam2,), (cfg.schedule.eta0,), solvers=(solver,))
+    bstate, blosses = run_grid(grid, rounds)
+
+    round_fn = make_round_fn(grid.config_at(0), "lazy")
+    state = init_state(grid.config_at(0))
+    losses = []
+    for rb in rounds:
+        state, ls = round_fn(state, rb)
+        losses.append(np.asarray(ls))
+    np.testing.assert_array_equal(np.asarray(bstate.wpsi[0]), np.asarray(state.wpsi))
+    np.testing.assert_array_equal(np.asarray(bstate.b)[0], np.asarray(state.b))
+    np.testing.assert_array_equal(blosses[0], np.concatenate(losses))
+
+
+def test_trunc_k1_is_sgd(rng):
+    """With K = 1 the truncated-gradient caches fill identically to the SGD
+    flavor's, so the whole trajectory coincides."""
+    base = dict(
+        dim=DIM, lam1=2e-2, lam2=1e-2, round_len=8,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3), backend="reference",
+    )
+    rounds = _mk_rounds(rng, 2, 8, 2, 3)
+    out = {}
+    for solver, extra in (("sgd", {}), ("trunc", {"trunc_k": 1})):
+        cfg = LinearConfig(solver=solver, **extra, **base)
+        fn = make_round_fn(cfg, "lazy")
+        st_ = init_state(cfg)
+        losses = []
+        for rb in rounds:
+            st_, ls = fn(st_, rb)
+            losses.append(np.asarray(ls))
+        out[solver] = (np.asarray(st_.wpsi), np.concatenate(losses))
+    np.testing.assert_array_equal(out["trunc"][0], out["sgd"][0])
+    np.testing.assert_array_equal(out["trunc"][1], out["sgd"][1])

@@ -1,0 +1,128 @@
+"""LinearService x solvers: construction-time pinning, per-solver fixed
+compile sets (zero steady-state recompiles), learn/predict parity against
+the direct trainer, and swap_weights across solvers of matching state
+shape (with the mismatched-shape eager error)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.core import linear_trainer as lt
+from repro.serving import LinearService
+
+DIM = 64
+
+SOLVERS = ["sgd", "fobos", "ftrl", "trunc"]
+
+
+def _cfg(solver=None, **kw):
+    base = dict(
+        dim=DIM, lam1=1e-3, lam2=1e-4, round_len=8, trunc_k=4,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3),
+    )
+    base.update(kw)
+    return LinearConfig(solver=solver, **base)
+
+
+def _drive(svc, steps=12, seed=0):
+    r = np.random.RandomState(seed)
+    for t in range(steps):
+        svc.submit_learn(r.randint(0, DIM, 5), r.uniform(-1, 1, 5), float(t % 2), arrival=0.0)
+        svc.poll(now=1.0, force=True)
+    return svc.predict(
+        SparseBatch(
+            idx=r.randint(0, DIM, size=(3, 6)).astype(np.int32),
+            val=r.uniform(-1, 1, size=(3, 6)).astype(np.float32),
+            y=np.zeros(3, np.float32),
+        )
+    )
+
+
+def test_solver_pinned_at_construction(monkeypatch):
+    from repro import solvers
+
+    monkeypatch.setenv(solvers.ENV_VAR, "ftrl")
+    svc = LinearService(_cfg(), p_max=8, micro_batch=4)
+    assert svc.cfg.solver == "ftrl"  # env resolved ONCE, then concrete
+    monkeypatch.setenv(solvers.ENV_VAR, "sgd")
+    svc2 = LinearService(_cfg(), p_max=8, micro_batch=4, solver="trunc")
+    assert svc2.cfg.solver == "trunc"  # explicit arg beats env
+    with pytest.raises(ValueError, match="conflicting explicit solvers"):
+        LinearService(_cfg(solver="sgd"), p_max=8, micro_batch=4, solver="ftrl")
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_compile_set_fixed_per_solver(solver):
+    """Warmup traffic is the complete compile set for every solver — solver
+    choice is trace-static, never a jit argument."""
+    svc = LinearService(_cfg(solver), p_max=8, micro_batch=4)
+    _drive(svc, steps=10, seed=0)  # > round_len: the flush jit is warm too
+    counts = svc.compile_counts()
+    _drive(svc, steps=18, seed=1)
+    assert svc.compile_counts() == counts
+    assert svc.metrics.snapshot()["counters"].get("round_flushes", 0) >= 1
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_service_matches_direct_trainer(solver, rng):
+    """learn/predict through the padded micro-batch frontend equals the raw
+    make_lazy_step + predict_proba_sparse trainer for each solver."""
+    cfg = _cfg(solver)
+    svc = LinearService(cfg, p_max=6, micro_batch=4)
+    cfg_pinned = svc.cfg  # solver + backend made concrete
+    from repro.core import init_state, make_lazy_step
+
+    step = make_lazy_step(cfg_pinned)
+    ref = init_state(cfg_pinned)
+    for t in range(10):
+        idx = rng.randint(0, DIM, size=(1, 6)).astype(np.int32)
+        val = rng.uniform(-1, 1, size=(1, 6)).astype(np.float32)
+        y = np.asarray([t % 2], np.float32)
+        batch = SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y))
+        svc.learn(batch)
+        ref, _ = step(ref, batch)
+        if int(ref.i) >= cfg_pinned.round_len:
+            ref = lt.flush(cfg_pinned, ref)
+    ev = SparseBatch(
+        idx=jnp.asarray(rng.randint(0, DIM, size=(2, 6)).astype(np.int32)),
+        val=jnp.asarray(rng.uniform(-1, 1, size=(2, 6)).astype(np.float32)),
+        y=jnp.asarray(np.zeros(2, np.float32)),
+    )
+    np.testing.assert_allclose(
+        svc.predict(ev), np.asarray(lt.predict_proba_sparse(cfg_pinned, ref, ev)),
+        rtol=1e-5, atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        svc.current_weights(), np.asarray(lt.current_weights(cfg_pinned, ref)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_swap_across_matching_state_shapes(rng):
+    """sgd -> trunc share the (w, psi) layout: the swap installs the new
+    solver's config and re-seeds state that reads back the given weights."""
+    svc = LinearService(_cfg("sgd"), p_max=8, micro_batch=4)
+    _drive(svc, steps=4)
+    w = rng.randn(DIM).astype(np.float32)
+    svc.swap_weights(w, b=0.5, cfg=_cfg("trunc"))
+    assert svc.cfg.solver == "trunc"
+    np.testing.assert_allclose(svc.current_weights(), w, rtol=1e-6, atol=1e-7)
+    _drive(svc, steps=4, seed=3)  # keeps serving after the swap
+
+
+def test_swap_to_ftrl_from_cache_solver_raises(rng):
+    svc = LinearService(_cfg("fobos"), p_max=8, micro_batch=4)
+    with pytest.raises(ValueError, match="mismatched state shape"):
+        svc.swap_weights(np.zeros(DIM, np.float32), cfg=_cfg("ftrl"))
+
+
+def test_swap_within_ftrl_roundtrips(rng):
+    svc = LinearService(_cfg("ftrl"), p_max=8, micro_batch=4)
+    _drive(svc, steps=4)
+    w = (rng.randn(DIM) * (rng.uniform(size=DIM) > 0.5)).astype(np.float32)
+    t_before = int(svc.state.t)
+    svc.swap_weights(w, b=0.1, cfg=dataclasses.replace(svc.cfg, lam1=5e-3))
+    assert int(svc.state.t) == t_before  # schedule position preserved
+    np.testing.assert_allclose(svc.current_weights(), w, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,77 @@
+"""Solver registry semantics: precedence (config arg > $REPRO_SOLVER >
+flavor default), fail-fast on unknown names, and trace-time pinning."""
+import pytest
+
+from repro import solvers
+from repro.core import LinearConfig
+
+
+def test_available_and_get():
+    names = solvers.available_solvers()
+    assert {"sgd", "fobos", "ftrl", "trunc"} <= set(names)
+    for n in names:
+        assert solvers.get_solver(n).name == n
+    with pytest.raises(KeyError, match="unknown solver"):
+        solvers.get_solver("adamw")
+
+
+def test_precedence_config_beats_env(monkeypatch):
+    monkeypatch.setenv(solvers.ENV_VAR, "ftrl")
+    cfg = LinearConfig(dim=8, flavor="sgd", solver="trunc")
+    assert solvers.for_config(cfg).name == "trunc"
+
+
+def test_precedence_env_beats_flavor(monkeypatch):
+    monkeypatch.setenv(solvers.ENV_VAR, "ftrl")
+    cfg = LinearConfig(dim=8, flavor="sgd")
+    assert solvers.for_config(cfg).name == "ftrl"
+
+
+def test_flavor_is_default(monkeypatch):
+    monkeypatch.delenv(solvers.ENV_VAR, raising=False)
+    for flavor in ("sgd", "fobos"):
+        assert solvers.for_config(LinearConfig(dim=8, flavor=flavor)).name == flavor
+
+
+def test_unknown_solver_fails_fast_in_config():
+    with pytest.raises(KeyError, match="unknown solver"):
+        LinearConfig(dim=8, solver="nope")
+
+
+def test_state_cols():
+    assert solvers.get_solver("sgd").state_cols == 2
+    assert solvers.get_solver("fobos").state_cols == 2
+    assert solvers.get_solver("trunc").state_cols == 2
+    assert solvers.get_solver("ftrl").state_cols == 3
+    assert not solvers.get_solver("ftrl").caches_based
+    assert not solvers.get_solver("ftrl").has_dense
+
+
+def test_trunc_validation_errors():
+    from repro.core import ScheduleConfig
+
+    sv = solvers.get_solver("trunc")
+    with pytest.raises(ValueError, match="round_len % trunc_k"):
+        sv.validate(LinearConfig(dim=8, solver="trunc", round_len=10, trunc_k=4))
+    # SGD-family decay constraint applies to trunc's l2 term
+    with pytest.raises(ValueError, match="eta\\*lam2"):
+        sv.validate(
+            LinearConfig(
+                dim=8, solver="trunc", round_len=16, trunc_k=4, lam2=3.0,
+                schedule=ScheduleConfig(kind="constant", eta0=0.5),
+            )
+        )
+
+
+def test_ftrl_not_rejected_by_sgd_divergence_check():
+    """The satellite fix: a schedule/lam2 combination the SGD flavor must
+    reject is perfectly valid for FTRL (no eta*lam2 divergence mode)."""
+    from repro.core import ScheduleConfig, make_lazy_step
+
+    hot = dict(
+        dim=8, lam2=3.0, round_len=16,
+        schedule=ScheduleConfig(kind="constant", eta0=0.5),
+    )
+    with pytest.raises(ValueError, match="eta\\*lam2"):
+        make_lazy_step(LinearConfig(flavor="sgd", **hot))
+    make_lazy_step(LinearConfig(solver="ftrl", **hot))  # must not raise

@@ -1,0 +1,160 @@
+"""Truncated-gradient solver correctness: the lazy K-step implementation
+(closed-form multi-step shrink via the boundary-gated B cache) against a
+dense eager NumPy reference that truncates every coordinate at every K-th
+step, across losses x schedules x backends and across round boundaries."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.core import (
+    LinearConfig,
+    ScheduleConfig,
+    SparseBatch,
+    init_state,
+    make_lazy_step,
+    make_round_fn,
+)
+from repro.core import linear_trainer as lt
+
+DIM = 43
+
+
+def _mk_steps(rng, T, B, p, dim=DIM):
+    idx = rng.randint(0, dim, size=(T, B, p)).astype(np.int32)
+    val = rng.uniform(-2.0, 2.0, size=(T, B, p)).astype(np.float32)
+    val = (val * (rng.uniform(size=val.shape) > 0.3)).astype(np.float32)
+    y = (rng.uniform(size=(T, B)) > 0.5).astype(np.float32)
+    return idx, val, y
+
+
+def _eager_trunc(cfg: LinearConfig, idx, val, y, eta_fn):
+    """Dense eager reference (float64 NumPy): gradient step on touched
+    coords, per-step l2^2 decay on ALL coords, and at every K-th step the
+    l1 truncation ``|w| <- [|w| - K*eta_t*lam1]_+`` on ALL coords."""
+    K, lam1, lam2 = cfg.trunc_k, cfg.lam1, cfg.lam2
+    w = np.zeros(cfg.dim, np.float64)
+    b = 0.0
+    losses = []
+    for t in range(idx.shape[0]):
+        eta = float(eta_fn(t))
+        B, p = idx[t].shape
+        f = idx[t].reshape(-1)
+        zlin = np.sum(w[idx[t]] * val[t], axis=-1) + b
+        if cfg.loss == "logistic":
+            loss = np.maximum(zlin, 0.0) - zlin * y[t] + np.log1p(np.exp(-np.abs(zlin)))
+            gz = 1.0 / (1.0 + np.exp(-zlin)) - y[t]
+        else:
+            loss = 0.5 * (zlin - y[t]) ** 2
+            gz = zlin - y[t]
+        g = (gz[:, None] * val[t]).reshape(-1)
+        np.add.at(w, f, -eta * g)
+        # decay-then-truncate, matching the cache weighting (exp(-logP_next))
+        w = np.sign(w) * np.maximum(np.abs(w) * (1.0 - eta * lam2), 0.0)
+        if (t + 1) % K == 0:
+            w = np.sign(w) * np.maximum(np.abs(w) - K * eta * lam1, 0.0)
+        b -= eta * float(np.sum(gz))
+        losses.append(np.mean(loss))
+    return w, b, np.asarray(losses)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("loss", ["logistic", "squared"])
+@pytest.mark.parametrize("kind", ["constant", "inv_t", "inv_sqrt"])
+def test_trunc_lazy_matches_eager_dense(backend, loss, kind, rng):
+    cfg = LinearConfig(
+        dim=DIM,
+        loss=loss,
+        solver="trunc",
+        lam1=2e-2,
+        lam2=1e-2,
+        trunc_k=4,
+        round_len=8,  # round_len % K == 0: boundaries survive the rebase
+        schedule=ScheduleConfig(kind=kind, eta0=0.4),
+        backend=backend,
+    )
+    T = 2 * cfg.round_len + 5  # two flushed rounds + a mid-round tail
+    idx, val, y = _mk_steps(rng, T, 3, 5)
+    sched = cfg.schedule.make()
+
+    round_fn = make_round_fn(cfg, "lazy")
+    state = init_state(cfg)
+    losses = []
+    for start in range(0, 2 * cfg.round_len, cfg.round_len):
+        rb = SparseBatch(
+            idx=jnp.asarray(idx[start : start + cfg.round_len]),
+            val=jnp.asarray(val[start : start + cfg.round_len]),
+            y=jnp.asarray(y[start : start + cfg.round_len]),
+        )
+        state, ls = round_fn(state, rb)
+        losses.append(np.asarray(ls))
+    step = make_lazy_step(cfg)
+    for t in range(2 * cfg.round_len, T):
+        state, ls = step(
+            state, SparseBatch(jnp.asarray(idx[t]), jnp.asarray(val[t]), jnp.asarray(y[t]))
+        )
+        losses.append(np.asarray(ls)[None])
+    losses = np.concatenate(losses)
+
+    w_ref, b_ref, l_ref = _eager_trunc(cfg, idx, val, y, sched)
+    np.testing.assert_allclose(
+        np.asarray(lt.current_weights(cfg, state)), w_ref, rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(float(state.b), b_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(losses, l_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_trunc_dense_step_matches_eager(rng):
+    """make_dense_step's trunc baseline (prox decay + gated trunc_shrink)
+    follows the same eager reference — the O(d) comparison arm bench_solvers
+    times."""
+    cfg = LinearConfig(
+        dim=DIM, solver="trunc", lam1=2e-2, lam2=1e-2, trunc_k=4, round_len=8,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.4),
+    )
+    T = 11
+    idx, val, y = _mk_steps(rng, T, 3, 5)
+    from repro.core import make_dense_step
+
+    step = make_dense_step(cfg)
+    state = init_state(cfg, mode="dense")
+    losses = []
+    for t in range(T):
+        state, ls = step(
+            state, SparseBatch(jnp.asarray(idx[t]), jnp.asarray(val[t]), jnp.asarray(y[t]))
+        )
+        losses.append(float(ls))
+    w_ref, b_ref, l_ref = _eager_trunc(cfg, idx, val, y, cfg.schedule.make())
+    np.testing.assert_allclose(np.asarray(state.wpsi[:, 0]), w_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(losses), l_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_trunc_weights_between_boundaries_untruncated(rng):
+    """Between boundaries only the l2 decay runs: with lam2 = 0 a weight
+    touched mid-window must show NO l1 shrink until the K-step fires."""
+    cfg = LinearConfig(
+        dim=DIM, solver="trunc", lam1=0.5, lam2=0.0, trunc_k=8, round_len=16,
+        schedule=ScheduleConfig(kind="constant", eta0=0.1),
+    )
+    step = make_lazy_step(cfg)
+    state = init_state(cfg, w0=np.full(DIM, 2.0, np.float32))
+    # touch coordinate 0 at steps 0..5 (< K-1): catch-ups cover no boundary
+    for t in range(6):
+        batch = SparseBatch(
+            idx=jnp.asarray(np.zeros((1, 1), np.int32)),
+            val=jnp.asarray(np.zeros((1, 1), np.float32)),  # zero-valued: no grad
+            y=jnp.asarray(np.zeros(1, np.float32)),
+        )
+        state, _ = step(state, batch)
+    assert float(state.wpsi[0, 0]) == 2.0  # untouched by reg so far
+    # ... after crossing the K = 8 boundary the shrink lands in one shot
+    for t in range(6, 9):
+        state, _ = step(state, batch)
+    w0 = float(lt.current_weights(cfg, state)[0])
+    np.testing.assert_allclose(w0, 2.0 - cfg.trunc_k * 0.1 * cfg.lam1, rtol=1e-6)
+
+
+def test_make_dense_step_rejects_ftrl():
+    with pytest.raises(ValueError, match="no dense"):
+        from repro.core import make_dense_step
+
+        make_dense_step(LinearConfig(dim=8, solver="ftrl"))

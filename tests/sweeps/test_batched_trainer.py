@@ -142,9 +142,9 @@ def test_batched_eval_matches_mean_loss():
     rounds = _mk_rounds(rng, 2, base.round_len, 2, 4)
     bstate, _ = run_grid(grid, rounds)
     held_out = jax.tree.map(lambda a: a[0], _mk_rounds(rng, 1, 1, 16, 4)[0])
-    lam1 = grid.hypers().lam1
-    batched = np.asarray(make_batched_eval(base)(bstate, lam1, held_out))
-    w_all = np.asarray(batched_current_weights(base, bstate, lam1))
+    hp = grid.hypers()
+    batched = np.asarray(make_batched_eval(base)(bstate, hp, held_out))
+    w_all = np.asarray(batched_current_weights(base, bstate, hp))
     for c in range(grid.n_cfg):
         cfg = grid.config_at(c)
         state = init_state(cfg, w0=w_all[c])._replace(b=bstate.b[c])

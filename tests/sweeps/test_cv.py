@@ -69,9 +69,12 @@ def test_cv_best_config_is_grid_point():
     res = kfold_cv(grid, bow, folds=2, batch=4)
     assert res.best_config.lam1 in grid.lam1
     assert res.best_config.lam2 in grid.lam2
+    # grid points pin the resolved solver concretely (base leaves it None)
+    assert res.best_config.solver == base.flavor
     assert res.best_config == dataclasses.replace(
         base,
         lam1=res.best_config.lam1,
         lam2=res.best_config.lam2,
         schedule=res.best_config.schedule,
+        solver=res.best_config.solver,
     )

@@ -1,0 +1,102 @@
+"""The grid's solver axis: solver-major flattening, per-solver programs
+stacking back into one batched result, eager validation (mixed state
+shapes; per-solver schedule checks), and CV across the axis."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.data import BowConfig, SyntheticBow
+from repro.sweeps import kfold_cv, make_grid, run_grid
+
+DIM = 41
+
+
+def _base(**kw):
+    d = dict(
+        dim=DIM, flavor="fobos", lam1=1e-2, lam2=1e-3, round_len=8, trunc_k=4,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3),
+    )
+    d.update(kw)
+    return LinearConfig(**d)
+
+
+def _mk_rounds(rng, n_rounds, R, B, p, dim=DIM):
+    out = []
+    for _ in range(n_rounds):
+        idx = rng.randint(0, dim, size=(R, B, p)).astype(np.int32)
+        val = rng.uniform(-2.0, 2.0, size=(R, B, p)).astype(np.float32)
+        y = (rng.uniform(size=(R, B)) > 0.5).astype(np.float32)
+        out.append(SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y)))
+    return out
+
+
+def test_solver_axis_layout():
+    grid = make_grid(_base(), (0.1, 0.01), (0.05,), (0.2, 0.4), solvers=("fobos", "trunc"))
+    assert grid.shape == (2, 1, 2)  # per-solver sub-grid shape
+    assert grid.sub_n == 4 and grid.n_cfg == 8
+    assert grid.solver_axis == ("fobos", "trunc")
+    # solver-major: first sub_n configs are fobos, next sub_n trunc
+    assert [grid.config_at(i).solver for i in range(8)] == ["fobos"] * 4 + ["trunc"] * 4
+    # hypers tile per solver: lane i and lane i + sub_n share (lam1, lam2, eta0)
+    hp = grid.hypers()
+    np.testing.assert_array_equal(np.asarray(hp.lam1[:4]), np.asarray(hp.lam1[4:]))
+    # sub-grids round-trip
+    subs = grid.per_solver()
+    assert [g.solver_axis for g in subs] == [("fobos",), ("trunc",)]
+    assert all(g.base.solver == g.solver_axis[0] for g in subs)
+
+
+def test_mixed_state_shapes_rejected_eagerly():
+    with pytest.raises(ValueError, match="mixes state shapes"):
+        make_grid(_base(), (0.1,), (0.05,), solvers=("fobos", "ftrl"))
+
+
+def test_grid_validation_asks_the_solver():
+    """eta*lam2 >= 1 must reject sgd-family grids but NOT ftrl grids (the
+    schedules satellite: validation lives behind the solver interface)."""
+    hot = _base(schedule=ScheduleConfig(kind="constant", eta0=0.5))
+    with pytest.raises(ValueError, match="eta\\*lam2"):
+        make_grid(hot, (0.01,), (3.0,), solvers=("sgd",))
+    make_grid(hot, (0.01,), (3.0,), solvers=("ftrl",))  # must not raise
+    make_grid(hot, (0.01,), (3.0,), solvers=("fobos",))  # fobos: unconstrained
+
+
+def test_run_grid_solver_axis_equals_per_solver_runs(rng):
+    rounds = _mk_rounds(rng, 2, 8, 2, 3)
+    grid = make_grid(_base(), (0.1, 0.001), (0.01,), (0.3,), solvers=("fobos", "trunc"))
+    bstate, losses = run_grid(grid, rounds)
+    assert bstate.wpsi.shape == (4, DIM, 2) and losses.shape[0] == 4
+    for c, g in enumerate(grid.per_solver()):
+        bs, ls = run_grid(g, rounds)
+        lo, hi = c * grid.sub_n, (c + 1) * grid.sub_n
+        np.testing.assert_array_equal(np.asarray(bstate.wpsi[lo:hi]), np.asarray(bs.wpsi))
+        np.testing.assert_array_equal(losses[lo:hi], ls)
+    # the two solvers genuinely trained different programs
+    assert not np.array_equal(np.asarray(bstate.wpsi[:2]), np.asarray(bstate.wpsi[2:]))
+
+
+def test_kfold_cv_over_solver_axis():
+    base = _base(dim=512, round_len=16)
+    grid = make_grid(base, (1e-2, 1e-4), (1e-3,), solvers=("fobos", "trunc"))
+    bow = SyntheticBow(BowConfig(dim=512, p_max=8, p_mean=4.0, informative_pool=128,
+                                 n_informative=32, seed=0))
+    res = kfold_cv(grid, bow, folds=2, batch=4)
+    assert res.fold_loss.shape == (2, grid.n_cfg)
+    assert res.cv_loss.shape == (grid.n_cfg,)
+    assert res.best_index == int(np.argmin(res.cv_loss))
+    assert res.best_config.solver == grid.config_at(res.best_index).solver
+    assert res.best_weights.shape == (512,)
+
+
+def test_ftrl_only_grid_trains_ftrl(rng):
+    """A solver axis must override the base's flavor-resolved default (the
+    regression: base.solver=None used to silently train fobos)."""
+    rounds = _mk_rounds(rng, 1, 8, 2, 3)
+    base = _base()  # solver=None, flavor=fobos
+    out = {}
+    for s in ("fobos", "ftrl"):
+        bs, _ = run_grid(make_grid(base, (1e-2,), (1e-3,), solvers=(s,)), rounds)
+        out[s] = bs.wpsi
+    assert out["ftrl"].shape == (1, DIM, 3)
+    assert not np.array_equal(np.asarray(out["ftrl"][..., 0]), np.asarray(out["fobos"][..., 0]))
