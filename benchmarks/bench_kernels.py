@@ -1,22 +1,36 @@
-"""Kernel-layer benchmark: the fused lazy catch-up + SGD row update vs the
-unfused two-pass baseline it replaces, through the `repro.backend` op
-surface, on embedding-row-update shapes.
+"""Whole-step benchmark: the fused one-tile-pass solver step vs the unfused
+multi-op step it replaces, per solver, through the ``repro.backend`` op
+surface.
 
-*unfused* = two separately-jitted passes (catch-up materialized to HBM, then
-the gradient step) — 3 reads + 2 writes per element.  *fused* = one pass via
-``backend.fused_catchup_sgd`` — 2 reads + 1 write.  On this CPU container
-the reference backend is what the timings measure and the byte-traffic ratio
-is the derived column (the TPU win); the Pallas backend runs in interpret
-mode, so it is parity-checked on every shape but only *timed* on a real TPU
-(interpret timings are python-loop noise, not kernel performance).
+Timed region = the step math the fusion changes: gather -> catch-up (or
+FTRL apply-at-read) -> predict -> loss gradient -> update delta.  *unfused*
+runs it as separately-jitted stages split exactly at the pre-fusion
+trainer's kernel boundaries — (1) state-row gather, (2) catch-up / read,
+(3) predict + gradient + delta — each boundary a launch whose intermediate
+materializes (the HBM round trips the fused kernel deletes on TPU; on this
+CPU container the same boundaries cost dispatches + materialized buffers).
+*fused* is ONE compiled program: ``backend.fused_step`` /
+``backend.ftrl_fused_step``.  The scatter write-back is bitwise-identical
+code OUTSIDE the fusion boundary in both paths (DESIGN.md §13 — duplicate
+semantics live in XLA scatters), so it is measured once and reported as the
+ungated ``scatter_us`` rather than letting a shared O(touched) tail squash
+the ratio both sides pay equally.  The workload is the paper's sparse
+regime (small touched set per step), where per-step launch + intermediate
+overhead IS the steady-state cost.  The embedding row-slab op
+(``fused_catchup_sgd``, the optim.lazy_rows finish path) rides along as a
+fifth, bandwidth-bound pair.
 
-Writes BENCH_kernels.json (CI artifact, regression-gated by
-benchmarks/check_regression.py against benchmarks/baselines/).  Gated key:
-``fused_speedup`` — the MEDIAN of paired per-repeat unfused/fused ratios,
-the only estimator that held still under shared-runner throughput bursts
-(raw ``*_us`` medians ride along ungated; TPU-compiled pallas timings
-appear only when a TPU is attached).  A lost fusion drives the ratio to
-~1.0 and fails the +-30% gate.
+The Pallas backend runs in interpret mode on CPU, so it is parity-checked
+on every solver's inputs but only *timed* on a real TPU (interpret timings
+are python-loop noise, not kernel performance).
+
+Writes BENCH_fused.json (CI artifact, regression-gated by
+benchmarks/check_regression.py against benchmarks/baselines/).  Gated keys:
+``{solver}_fused_speedup`` for sgd/fobos/trunc/ftrl and
+``rows_fused_speedup`` — each the MEDIAN of paired per-repeat
+unfused/fused ratios, the only estimator that held still under
+shared-runner throughput bursts (raw ``*_us`` medians ride along ungated).
+A lost fusion drives a ratio to ~1.0 and fails the +-30% gate.
 """
 import json
 import time
@@ -26,9 +40,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backend as kernel_backend
-from repro.core import FOBOS, extend, init_caches
+from repro import solvers as solver_registry
+from repro.core import FOBOS, extend, init_caches, loss_and_grad_z
+from repro.core.lazy_enet import catchup_factors
 
-SHAPES = [(1024, 512), (8192, 1024)]
+# sparse-regime whole-step workload: [BATCH, P] touched features per step
+# out of a [D, cols] state slab, mid-round (caches filled to K_STEP so the
+# catch-up replays real debt)
+D, BATCH, P = 8192, 32, 16
+ROUND_LEN, K_STEP = 64, 32
+TRUNC_K = 4
+LAM1, LAM2, ETA = 1e-5, 1e-4, 0.1
+FTRL_BETA = 1.0
 
 
 def _time_once(fn, args, iters):
@@ -59,76 +82,256 @@ def _bench_pair(fn_a, fn_b, args, iters=20, repeats=9):
     return med(ta), med(tb), med(ratios)
 
 
-def run(fast: bool = False, json_path: str = "BENCH_kernels.json"):
+def _mk_caches(solver_name):
+    """Round-local DP caches filled to slot K_STEP via the solver's own
+    extend rule (trunc's is boundary-gated on TRUNC_K)."""
+    sol = solver_registry.get_solver(solver_name)
+    caches = init_caches(ROUND_LEN)
+    eta = jnp.asarray(ETA, jnp.float32)
+    for i in range(K_STEP):
+        caches = sol.extend_caches(
+            caches, jnp.asarray(i, jnp.int32), eta, LAM2, k_period=TRUNC_K
+        )
+    return caches
+
+
+def _mk_inputs(rng, cols):
+    wpsi = jnp.asarray(rng.randn(D, cols).astype(np.float32) * 0.1)
+    if cols == 2:  # (w, psi): stamps in [0, K_STEP)
+        wpsi = wpsi.at[:, 1].set(
+            jnp.asarray(rng.randint(0, K_STEP, size=D).astype(np.float32))
+        )
+    else:  # (w, z, n): AdaGrad accumulator must be >= 0
+        wpsi = wpsi.at[:, 2].set(jnp.abs(wpsi[:, 2]))
+    idx = jnp.asarray(rng.randint(0, D, size=(BATCH, P)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(-2.0, 2.0, size=(BATCH, P)).astype(np.float32))
+    y = jnp.asarray((rng.uniform(size=BATCH) > 0.5).astype(np.float32))
+    b = jnp.asarray(0.1, jnp.float32)
+    return wpsi, idx, val, y, b
+
+
+def _dp_pair(ref, caches):
+    """(unfused, fused) step-math closures for a cache-based solver, both
+    from (wpsi, idx, val, y, b) to (w_cur, delta, gz, loss) at fixed round
+    position K_STEP (the O(1) cache extend is shared by construction)."""
+    k = jnp.asarray(K_STEP, jnp.int32)
+    eta = jnp.asarray(ETA, jnp.float32)
+
+    # --- unfused: three launches, intermediates materialize at each cut ---
+    s_gather = jax.jit(lambda wpsi, idx: wpsi[idx.reshape(-1)])
+    s_catchup = jax.jit(
+        lambda g2: ref.catchup_rows(g2[:, 0], g2[:, 1].astype(jnp.int32), k, caches, LAM1)
+    )
+
+    @jax.jit
+    def s_grad(w_cur, val, y, b):
+        z = jnp.sum(w_cur.reshape(BATCH, P) * val, axis=1) + b
+        loss, gz = loss_and_grad_z("logistic", z, y)
+        return -eta * (gz[:, None] * val).reshape(-1), gz, jnp.mean(loss)
+
+    def unfused(wpsi, idx, val, y, b):
+        g2 = s_gather(wpsi, idx)
+        w_cur = s_catchup(g2)
+        neg_eta_g, gz, loss = s_grad(w_cur, val, y, b)
+        return w_cur, neg_eta_g, gz, loss
+
+    # --- fused: one launch, one tile pass over the touched rows ---
+    @jax.jit
+    def fused(wpsi, idx, val, y, b):
+        g2 = wpsi[idx.reshape(-1)]
+        ratio, shift = catchup_factors(g2[:, 1].astype(jnp.int32), k, caches, LAM1)
+        shape = (BATCH, P)
+        w_cur2, delta, gz, loss = ref.fused_step(
+            g2[:, 0].reshape(shape),
+            ratio.reshape(shape),
+            jnp.broadcast_to(shift, ratio.shape).reshape(shape),
+            val, y, b, eta, loss="logistic", use_bias=True,
+        )
+        return w_cur2.reshape(-1), delta.reshape(-1), gz, jnp.mean(loss)
+
+    return unfused, fused
+
+
+def _ftrl_pair(ref):
+    alpha = jnp.asarray(ETA, jnp.float32)
+
+    # --- unfused: gather, apply-at-read, grad + AdaGrad deltas ---
+    s_gather = jax.jit(lambda wpsi, idx: wpsi[idx.reshape(-1)])
+    s_read = jax.jit(
+        lambda g3: ref.ftrl_read(g3[:, 1], g3[:, 2], alpha, FTRL_BETA, LAM1, LAM2)
+    )
+
+    @jax.jit
+    def s_grad(w_cur, n_g, val, y, b):
+        z = jnp.sum(w_cur.reshape(BATCH, P) * val, axis=1) + b
+        loss, gz = loss_and_grad_z("logistic", z, y)
+        g_w = (gz[:, None] * val).reshape(-1)
+        dz, dn = ref.ftrl_update(w_cur, n_g, g_w, alpha)
+        return dz, dn, gz, jnp.mean(loss)
+
+    def unfused(wpsi, idx, val, y, b):
+        g3 = s_gather(wpsi, idx)
+        w_cur = s_read(g3)
+        dz, dn, gz, loss = s_grad(w_cur, g3[:, 2], val, y, b)
+        return dz, dn, gz, loss
+
+    @jax.jit
+    def fused(wpsi, idx, val, y, b):
+        g3 = wpsi[idx.reshape(-1)]
+        shape = (BATCH, P)
+        _, dz2, dn2, gz, loss = ref.ftrl_fused_step(
+            g3[:, 1].reshape(shape), g3[:, 2].reshape(shape),
+            val, y, b, alpha, FTRL_BETA, LAM1, LAM2,
+            loss="logistic", use_bias=True,
+        )
+        return dz2.reshape(-1), dn2.reshape(-1), gz, jnp.mean(loss)
+
+    return unfused, fused
+
+
+def _scatter_us(rng, iters):
+    """The shared write-back tail (scatter-SET + scatter-ADD into the state
+    slab + bias) — identical code in both paths, reported for context."""
+    wpsi = jnp.asarray(rng.randn(D, 2).astype(np.float32))
+    idx = jnp.asarray(rng.randint(0, D, size=(BATCH, P)).astype(np.int32))
+    upd = jnp.asarray(rng.randn(BATCH * P).astype(np.float32))
+
+    @jax.jit
+    def tail(wpsi, idx, upd):
+        idx_f = idx.reshape(-1)
+        wpsi = wpsi.at[idx_f].set(jnp.stack([upd, upd], axis=1))
+        return wpsi.at[idx_f, 0].add(upd)
+
+    return _time_once(tail, (wpsi, idx, upd), iters)
+
+
+def _pallas_parity(pal, solver_name, caches, wpsi, idx, val, y, b):
+    """Max abs error of the pallas fused op vs the reference fused op on the
+    same gathered inputs (interpret mode on CPU, compiled on TPU)."""
+    ref = kernel_backend.get_backend("reference")
+    idx_f = idx.reshape(-1)
+    shape = (BATCH, P)
+    if solver_name == "ftrl":
+        g3 = wpsi[idx_f]
+        args = (
+            g3[:, 1].reshape(shape), g3[:, 2].reshape(shape), val, y, b,
+            jnp.asarray(ETA, jnp.float32), FTRL_BETA, LAM1, LAM2,
+        )
+        kw = dict(loss="logistic", use_bias=True)
+        outs_p = pal.ftrl_fused_step(*args, **kw)
+        outs_r = ref.ftrl_fused_step(*args, **kw)
+    else:
+        g2 = wpsi[idx_f]
+        ratio, shift = catchup_factors(
+            g2[:, 1].astype(jnp.int32), jnp.asarray(K_STEP, jnp.int32), caches, LAM1
+        )
+        args = (
+            g2[:, 0].reshape(shape), ratio.reshape(shape),
+            jnp.broadcast_to(shift, ratio.shape).reshape(shape),
+            val, y, b, jnp.asarray(ETA, jnp.float32),
+        )
+        kw = dict(loss="logistic", use_bias=True)
+        outs_p = pal.fused_step(*args, **kw)
+        outs_r = ref.fused_step(*args, **kw)
+    return max(
+        float(jnp.max(jnp.abs(p.astype(jnp.float32) - r.astype(jnp.float32))))
+        for p, r in zip(outs_p, outs_r)
+    )
+
+
+def _rows_pair(ref, rng, R=4096, D_row=512):
+    """The optim.lazy_rows finish path: fused catch-up + SGD on an embedding
+    row slab vs the two-pass catchup-then-step baseline (bandwidth-bound:
+    3 vs 5 passes over the slab bytes)."""
+    n = 64
+    caches = init_caches(n)
+    for i in range(n):
+        caches = extend(
+            caches, jnp.asarray(i, jnp.int32), jnp.asarray(ETA, jnp.float32), LAM2, FOBOS
+        )
+    w = jnp.asarray(rng.randn(R, D_row).astype(np.float32))
+    g = jnp.asarray(rng.randn(R, D_row).astype(np.float32) * 0.01)
+    psi = jnp.asarray(rng.randint(0, n, size=(R,)).astype(np.int32))
+    k = jnp.asarray(n, jnp.int32)
+    eta = jnp.asarray(ETA, jnp.float32)
+
+    catchup = jax.jit(lambda w, psi: ref.catchup_rows(w, psi[:, None], k, caches, LAM1))
+    sgd = jax.jit(lambda w, g: w - eta * g)
+
+    def unfused(w, g, psi):
+        return sgd(catchup(w, psi), g)
+
+    fused = jax.jit(lambda w, g, psi: ref.fused_catchup_sgd(w, g, psi, k, caches, LAM1, eta))
+    return unfused, fused, (w, g, psi)
+
+
+def run(fast: bool = False, json_path: str = "BENCH_fused.json"):
     rng = np.random.RandomState(0)
-    rows = []
-    shapes = SHAPES[:1] if fast else SHAPES
-    n, lam1, lam2, eta_v = 64, 1e-5, 1e-4, 0.1
     on_tpu = jax.default_backend() == "tpu"
     ref = kernel_backend.get_backend("reference")
     pal = kernel_backend.get_backend("pallas")
+    # fast is a no-op here on purpose: the suite runs in seconds, every
+    # solver's speedup is regression-gated (a key missing from a fresh run
+    # fails the gate), and the gated ratios need the full iters x repeats to
+    # hold still inside the +-30% tolerance
+    del fast
+    iters, repeats = 20, 9
+    solvers = ("sgd", "fobos", "trunc", "ftrl")
     report = {
-        "workload": {"shapes": [f"{R}x{D}" for R, D in shapes], "iters": 20,
-                     "repeats": 9, "flavor": FOBOS, "lam1": lam1, "lam2": lam2},
+        "workload": {
+            "d": D, "batch": BATCH, "p": P, "round_len": ROUND_LEN, "k": K_STEP,
+            "iters": iters, "repeats": repeats,
+            "lam1": LAM1, "lam2": LAM2, "eta": ETA,
+        },
         "pallas_timed": on_tpu,
-        "shapes": {},
+        "scatter_us": _scatter_us(rng, iters),  # shared tail, never gated
+        "solvers": {},
     }
-    for R, D in shapes:
-        caches = init_caches(n)
-        for i in range(n):
-            caches = extend(
-                caches, jnp.asarray(i, jnp.int32), jnp.asarray(eta_v, jnp.float32), lam2, FOBOS
-            )
-        w = jnp.asarray(rng.randn(R, D).astype(np.float32))
-        g = jnp.asarray(rng.randn(R, D).astype(np.float32) * 0.01)
-        psi = jnp.asarray(rng.randint(0, n, size=(R,)).astype(np.int32))
-        k = jnp.asarray(n, jnp.int32)
-        eta = jnp.asarray(eta_v, jnp.float32)
+    rows = []
+    for name in solvers:
+        cols = solver_registry.get_solver(name).state_cols
+        caches = _mk_caches(name) if cols == 2 else None
+        wpsi, idx, val, y, b = _mk_inputs(rng, cols)
+        if name == "ftrl":
+            unfused, fused = _ftrl_pair(ref)
+        else:
+            unfused, fused = _dp_pair(ref, caches)
+        args = (wpsi, idx, val, y, b)
 
-        # --- unfused: catch-up lands in HBM, a second pass adds the grad
-        # (two separately-jitted programs: the intermediate materializes, as
-        # in the pre-fusion trainer; dispatch stays async for stable timing)
-        catchup = jax.jit(lambda w, psi, k: ref.catchup_rows(w, psi[:, None], k, caches, lam1))
-        sgd = jax.jit(lambda w, g: w - eta * g)
+        # both sides compute the same step math — assert it before timing it
+        for u, f in zip(unfused(*args), fused(*args)):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(f), rtol=1e-5, atol=1e-6)
 
-        def unfused(w, g, psi, k):
-            return sgd(catchup(w, psi, k), g)
-
-        # --- fused: one pass over the row bytes ---
-        fused = jax.jit(lambda w, g, psi, k: ref.fused_catchup_sgd(w, g, psi, k, caches, lam1, eta))
-
-        us_unfused, us_fused, speedup = _bench_pair(unfused, fused, (w, g, psi, k))
-
-        # --- pallas parity on the same inputs (timed only where compiled) ---
-        out_pal = pal.fused_catchup_sgd(w, g, psi, k, caches, lam1, eta)
-        out_ref = fused(w, g, psi, k)
-        err = float(jnp.max(jnp.abs(out_pal - out_ref)))
-        np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref), rtol=1e-5, atol=1e-6)
-
-        name = f"lazy_enet_rows_{R}x{D}"
+        us_unfused, us_fused, speedup = _bench_pair(unfused, fused, args, iters, repeats)
+        err = _pallas_parity(pal, name, caches, wpsi, idx, val, y, b)
         entry = {
             # "_us" (not "_us_per"): informational, NOT regression-gated —
-            # absolute microseconds track shared-runner load, the ratio below
-            # is the stable claim
+            # absolute microseconds track shared-runner load, the paired
+            # ratio below is the stable claim
             "unfused_us": us_unfused,
             "fused_us": us_fused,
-            "fused_speedup": speedup,  # gated (median of paired ratios)
+            f"{name}_fused_speedup": speedup,  # gated (median of paired ratios)
             "pallas_max_abs_err": err,  # parity, never gated
         }
         if on_tpu:
-            entry["pallas_fused_us"] = _time_once(
-                jax.jit(lambda w, g, psi, k: pal.fused_catchup_sgd(w, g, psi, k, caches, lam1, eta)),
-                (w, g, psi, k), 20,
-            )
-        report["shapes"][name] = entry
-        bytes_fused = R * D * 4 * 3  # w read + g read + w write
-        bytes_unfused = R * D * 4 * 5  # catchup r/w + update r/r/w
+            entry["pallas_fused_us"] = _time_once(fused, args, iters)
+        report["solvers"][name] = entry
         rows.append(
-            (name, us_fused,
-             f"fused {us_fused:.0f}us vs unfused {us_unfused:.0f}us; kernel moves "
-             f"{bytes_fused / 1e6:.0f}MB vs {bytes_unfused / 1e6:.0f}MB (1.67x); "
-             f"pallas err {err:.1e}")
+            (f"step_{name}", us_fused,
+             f"fused {us_fused:.0f}us vs unfused 3-stage {us_unfused:.0f}us "
+             f"({speedup:.2f}x); pallas err {err:.1e}")
         )
+
+    unfused_r, fused_r, args_r = _rows_pair(ref, rng)
+    us_u, us_f, sp = _bench_pair(unfused_r, fused_r, args_r, iters, repeats)
+    report["rows"] = {
+        "unfused_us": us_u, "fused_us": us_f, "rows_fused_speedup": sp,
+    }
+    rows.append(
+        ("lazy_enet_rows_4096x512", us_f,
+         f"fused {us_f:.0f}us vs unfused {us_u:.0f}us ({sp:.2f}x); "
+         f"row slab moves 3 vs 5 passes of bytes")
+    )
     with open(json_path, "w") as f:
         json.dump(report, f, indent=2)
     return rows

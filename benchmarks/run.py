@@ -1,18 +1,9 @@
 """Benchmark harness — one module per paper table/figure (+ the kernel and
 minibatch extensions).  Prints ``name,us_per_call,derived`` CSV.
 
-  table1      paper §7 Table 1 (lazy vs dense FoBoS elastic net, Medline stats)
-  scaling     O(p) vs O(d): per-step cost against nominal dimensionality
-  dp_overhead the elastic-net DP caches' constant factor vs l1-only/ridge/none
-  kernels     fused vs unfused lazy row update through repro.backend;
-              writes BENCH_kernels.json
-  minibatch   lazy minibatch extension throughput
-  serving     continuous-batching engine vs lock-step loop (Poisson traffic)
-              + online linear predict/learn service; writes BENCH_serving.json
-  sweeps      vmap-batched 16-point (lam1, lam2) grid vs sequential fits;
-              writes BENCH_sweeps.json
-  solvers     per-solver (sgd/fobos/ftrl/trunc) steady-state step time +
-              sparsity at convergence; writes BENCH_solvers.json
+The suite registry below is the single source of truth: ``--only`` choices,
+``--help`` text, and dispatch all read it (a suite added to SUITES shows up
+everywhere at once; an unknown ``--only`` name fails fast with the list).
 
 Roofline tables (per arch x shape x mesh) come from the dry-run artifacts:
 ``python -m repro.analysis.roofline`` (results/dryrun must exist).
@@ -20,43 +11,86 @@ Roofline tables (per arch x shape x mesh) come from the dry-run artifacts:
 import argparse
 import sys
 
+# name -> (runner factory, one-line description).  Runners import lazily so
+# ``--help`` and an unknown ``--only`` never pay jax startup.
+SUITES = {
+    "table1": (
+        lambda a, steps: _m("bench_lazy_vs_dense").run(steps=steps),
+        "paper §7 Table 1 (lazy vs dense FoBoS elastic net, Medline stats)",
+    ),
+    "scaling": (
+        lambda a, steps: _m("bench_scaling").run(),
+        "O(p) vs O(d): per-step cost against nominal dimensionality",
+    ),
+    "dp_overhead": (
+        lambda a, steps: _m("bench_dp_overhead").run(steps=steps),
+        "the elastic-net DP caches' constant factor vs l1-only/ridge/none",
+    ),
+    "kernels": (
+        lambda a, steps: _m("bench_kernels").run(fast=a.fast),
+        "fused whole-step solver kernels vs the unfused multi-op step "
+        "(sgd/fobos/trunc/ftrl + the lazy row slab); writes BENCH_fused.json",
+    ),
+    "minibatch": (
+        lambda a, steps: _m("bench_minibatch").run(steps=min(steps, 256)),
+        "lazy minibatch extension throughput",
+    ),
+    "serving": (
+        lambda a, steps: _m("bench_serving").run(fast=a.fast),
+        "continuous-batching engine vs lock-step loop (Poisson traffic) + "
+        "online linear predict/learn service; writes BENCH_serving.json",
+    ),
+    "sweeps": (
+        lambda a, steps: _m("bench_sweeps").run(fast=a.fast),
+        "vmap-batched 16-point (lam1, lam2) grid vs sequential fits; "
+        "writes BENCH_sweeps.json",
+    ),
+    "solvers": (
+        lambda a, steps: _m("bench_solvers").run(fast=a.fast),
+        "per-solver steady-state step time + sparsity at convergence; "
+        "writes BENCH_solvers.json",
+    ),
+}
+
+
+def _m(name):
+    import importlib
+
+    return importlib.import_module(f"benchmarks.{name}")
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma-separated subset")
+    suite_lines = "\n".join(f"  {n:<12s}{desc}" for n, (_, desc) in SUITES.items())
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=f"suites:\n{suite_lines}",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        metavar="SUITE[,SUITE...]",
+        help=f"comma-separated subset of: {', '.join(SUITES)}",
+    )
     ap.add_argument("--fast", action="store_true", help="smaller step counts")
     args = ap.parse_args()
 
-    from benchmarks import (
-        bench_dp_overhead,
-        bench_kernels,
-        bench_lazy_vs_dense,
-        bench_minibatch,
-        bench_scaling,
-        bench_serving,
-        bench_solvers,
-        bench_sweeps,
-    )
+    only = None
+    if args.only:
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in only if s not in SUITES]
+        if unknown:
+            ap.error(
+                f"unknown suite(s) {', '.join(unknown)}; choose from: {', '.join(SUITES)}"
+            )
 
     steps = 128 if args.fast else 512
-    suites = {
-        "table1": lambda: bench_lazy_vs_dense.run(steps=steps),
-        "scaling": lambda: bench_scaling.run(),
-        "dp_overhead": lambda: bench_dp_overhead.run(steps=steps),
-        "kernels": lambda: bench_kernels.run(fast=args.fast),
-        "minibatch": lambda: bench_minibatch.run(steps=min(steps, 256)),
-        "serving": lambda: bench_serving.run(fast=args.fast),
-        "sweeps": lambda: bench_sweeps.run(fast=args.fast),
-        "solvers": lambda: bench_solvers.run(fast=args.fast),
-    }
-    only = set(args.only.split(",")) if args.only else None
-
     print("name,us_per_call,derived")
-    for name, fn in suites.items():
-        if only and name not in only:
+    for name, (fn, _) in SUITES.items():
+        if only is not None and name not in only:
             continue
         try:
-            for row_name, us, derived in fn():
+            for row_name, us, derived in fn(args, steps):
                 print(f"{row_name},{us:.2f},{derived}")
                 sys.stdout.flush()
         except Exception as e:  # report and continue: one table failing

@@ -72,6 +72,28 @@ class KernelBackend:
         off-boundary) or broadcastable to ``w``."""
         raise NotImplementedError
 
+    def fused_step(self, w, ratio, shift, val, y, b, eta, *, loss, use_bias):
+        """ONE whole lazy step for the cache-based solvers (sgd/fobos/trunc
+        — they differ only in how the DP caches extend, which stays outside
+        in O(1)): closed-form catch-up of the gathered ``[B, p]`` weight
+        slab with pre-derived per-element ``(ratio, shift)`` factors, sparse
+        predict ``z = sum_p(w_cur * val) [+ b]``, the loss gradient, and the
+        SGD update delta ``-eta * gz * val`` — a single tile pass instead of
+        one dispatch per op (DESIGN.md §13).  Returns ``(w_cur [B, p],
+        delta [B, p], gz [B], loss [B])``; the caller keeps the gather and
+        the scatter-SET/scatter-ADD pair in XLA (duplicate-index semantics).
+        ``b``/``eta`` and the factors may be traced; ``loss``/``use_bias``
+        are trace-static structure."""
+        raise NotImplementedError
+
+    def ftrl_fused_step(self, z, n, val, y, b, alpha, beta, lam1, lam2, *, loss, use_bias):
+        """ONE whole lazy step for FTRL-Proximal: apply-at-read weights from
+        the gathered ``[B, p]`` ``(z, n)`` slab, sparse predict, loss
+        gradient, and the per-coordinate AdaGrad deltas, in one tile pass.
+        Returns ``(w_cur [B, p], dz [B, p], dn [B, p], gz [B], loss [B])``;
+        deltas scatter-ADD outside.  All hypers may be traced scalars."""
+        raise NotImplementedError
+
     def ftrl_read(self, z, n, alpha, beta, lam1, lam2):
         """FTRL-Proximal apply-at-read weights from flat ``(z, n)`` state:
         ``0`` where ``|z| <= lam1``, else ``(sgn(z)*lam1 - z) / ((beta +

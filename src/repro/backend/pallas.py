@@ -14,8 +14,10 @@ import jax.numpy as jnp
 from repro.core.dp_caches import FOBOS, SGD
 from repro.kernels import (
     catchup_update,
+    dp_fused_step,
     enet_apply,
     enet_prox,
+    ftrl_fused_step,
     ftrl_read,
     ftrl_update,
     lazy_enet_update,
@@ -66,6 +68,14 @@ class PallasBackend(KernelBackend):
         if shift.ndim:
             shift = jnp.broadcast_to(shift, w.shape).reshape(-1)
         return enet_apply(w.reshape(-1), jnp.ones((), jnp.float32), shift).reshape(w.shape)
+
+    def fused_step(self, w, ratio, shift, val, y, b, eta, *, loss, use_bias):
+        return dp_fused_step(w, ratio, shift, val, y, b, eta, loss=loss, use_bias=use_bias)
+
+    def ftrl_fused_step(self, z, n, val, y, b, alpha, beta, lam1, lam2, *, loss, use_bias):
+        return ftrl_fused_step(
+            z, n, val, y, b, alpha, beta, lam1, lam2, loss=loss, use_bias=use_bias
+        )
 
     def ftrl_read(self, z, n, alpha, beta, lam1, lam2):
         return ftrl_read(z, n, alpha, beta, lam1, lam2)

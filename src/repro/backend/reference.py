@@ -42,6 +42,33 @@ class ReferenceBackend(KernelBackend):
     def trunc_shrink(self, w, shift):
         return jnp.sign(w) * jnp.maximum(jnp.abs(w) - shift, 0.0)
 
+    def fused_step(self, w, ratio, shift, val, y, b, eta, *, loss, use_bias):
+        # the exact op sequence of the pre-fusion multi-op step, on the
+        # same [B, p] shapes — the solver's fused default stays BITWISE
+        # equal to the inlined pre-refactor closure (tests/solvers)
+        from repro.core import linear_trainer as lt
+
+        mag = jnp.abs(w) * ratio - shift
+        w_cur = jnp.sign(w) * jnp.maximum(mag, 0.0)
+        z = jnp.sum(w_cur * val, axis=-1)
+        if use_bias:
+            z = z + b
+        loss_v, gz = lt.loss_and_grad_z(loss, z, y)
+        delta = -eta * (gz[:, None] * val)
+        return w_cur, delta, gz, loss_v
+
+    def ftrl_fused_step(self, z, n, val, y, b, alpha, beta, lam1, lam2, *, loss, use_bias):
+        from repro.core import linear_trainer as lt
+
+        w_cur = self.ftrl_read(z, n, alpha, beta, lam1, lam2)
+        zlin = jnp.sum(w_cur * val, axis=-1)
+        if use_bias:
+            zlin = zlin + b
+        loss_v, gz = lt.loss_and_grad_z(loss, zlin, y)
+        g = gz[:, None] * val
+        dz, dn = self.ftrl_update(w_cur, n, g, alpha)
+        return w_cur, dz, dn, gz, loss_v
+
     def ftrl_read(self, z, n, alpha, beta, lam1, lam2):
         # alpha enters via an explicit reciprocal so the arithmetic is the
         # same ops whether alpha is a baked constant or a traced per-config

@@ -64,6 +64,8 @@ class ArchConfig:
     # None defers to $REPRO_SOLVER and then reg_flavor.
     reg_solver: "str | None" = None
     reg_trunc_k: int = 16  # truncation period when reg_solver == "trunc"
+    reg_fused: bool = True  # one-pass fused catchup+SGD on the touched row
+    #   slab (optim.lazy_rows.finish); False = split catchup-then-step A/B path
     lam1: float = 1e-6
     lam2: float = 1e-7
     reg_round_len: int = 1024
@@ -73,6 +75,11 @@ class ArchConfig:
     remat: bool = True
     remat_policy: str = "full"  # full | dots (save dot outputs: no attention
     #   or TP-collective recompute in backward, at higher activation memory)
+    # pin the TRAINING forward to the reference einsum attention (the
+    # pre-backward-kernel behavior).  Default off: flash attention has a
+    # custom-vjp backward (kernels/flash_attn.py), so training dispatches
+    # through the session backend like inference does.
+    train_attn_reference: bool = False
     ce_chunks: int = 1  # >1: chunk the CE loss over tokens so [tokens, vocab]
     #   logits never materialize (python-unrolled; keeps cost calibration exact)
     seq_parallel: bool = False  # Megatron-SP: residual stream sharded over the

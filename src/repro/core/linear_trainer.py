@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -106,12 +107,23 @@ class LinearConfig:
     # kernel backend for the regularization hot paths (repro.backend):
     # None defers to use_backend()/$REPRO_BACKEND/platform default
     backend: Optional[str] = None
+    # fused whole-step kernel path (backend.fused_step, DESIGN.md §13):
+    # None defers to $REPRO_FUSED and then to True (fused is the default
+    # compute substrate); False keeps the multi-op reference step
+    fused: Optional[bool] = None
+    # storage grid for the non-weight state columns (psi / FTRL z, n):
+    # f32 (exact), bf16, or int8 shared-scale (core.state_compress —
+    # DESIGN.md §13 documents the error bounds and round_len limits)
+    state_dtype: str = "f32"
 
     def __post_init__(self):
         assert self.flavor in FLAVORS, self.flavor
         assert self.loss in (LOGISTIC, SQUARED), self.loss
         assert self.lam1 >= 0.0 and self.lam2 >= 0.0
         assert self.round_len < 2**24  # psi lives exactly in f32
+        from .state_compress import STATE_DTYPES
+
+        assert self.state_dtype in STATE_DTYPES, self.state_dtype
         if self.solver is not None:
             _solver(self)  # fail fast on unknown names
         if self.backend is not None:
@@ -172,16 +184,37 @@ def init_state(cfg: LinearConfig, w0: Optional[jnp.ndarray] = None, mode: str = 
     )
 
 
-def _grad_z(cfg: LinearConfig, z: jnp.ndarray, y: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-example loss and dLoss/dz."""
-    if cfg.loss == LOGISTIC:
+def loss_and_grad_z(loss: str, z: jnp.ndarray, y: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-example loss and dLoss/dz for a loss kind — the single home of
+    the loss arithmetic, shared by the multi-op step, the backends' fused
+    whole-step ops, and the dense baseline (bitwise across all of them)."""
+    if loss == LOGISTIC:
         # numerically stable BCE-with-logits
-        loss = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        loss_v = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
         gz = jax.nn.sigmoid(z) - y
     else:
-        loss = 0.5 * (z - y) ** 2
+        loss_v = 0.5 * (z - y) ** 2
         gz = z - y
-    return loss, gz
+    return loss_v, gz
+
+
+def _grad_z(cfg: LinearConfig, z: jnp.ndarray, y: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-example loss and dLoss/dz (cfg-keyed form of loss_and_grad_z)."""
+    return loss_and_grad_z(cfg.loss, z, y)
+
+
+def fused_enabled(cfg: LinearConfig) -> bool:
+    """Whether the solver step routes through the backend's fused whole-step
+    op (trace-static, like backend/solver resolution): ``cfg.fused`` >
+    ``$REPRO_FUSED`` > True.  The fused reference path is bitwise-equal to
+    the multi-op path (tests/solvers pins it), so the default flips only
+    the program structure, never the arithmetic."""
+    if cfg.fused is not None:
+        return cfg.fused
+    env = os.environ.get("REPRO_FUSED")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return True
 
 
 def _predict_current(cfg, w, b, batch: SparseBatch):

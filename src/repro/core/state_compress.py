@@ -1,0 +1,117 @@
+"""Compressed storage for the non-weight solver state columns.
+
+The packed ``[d, state_cols]`` solver state (DESIGN.md §8) carries, besides
+the f32 weight column, bookkeeping columns whose precision demands are far
+below f32: the DP solvers' ``psi`` (a round-local integer step stamp) and
+FTRL's ``(z, n)`` accumulators.  Storing them on a narrower grid halves (or
+quarters) the per-coordinate state bandwidth — the term that dominates the
+HBM-bound sharded regime the fused kernels leave behind.
+
+Storage grids (``LinearConfig.state_dtype``):
+
+* ``"f32"``  — identity.  The default; bitwise path, zero overhead.
+* ``"bf16"`` — round-to-nearest bf16.  8 significand bits (7 stored +
+  implicit leading one): relative error <= 2^-8 per element (half ULP),
+  and every integer <= 256 is EXACT — so ``psi`` is stored losslessly whenever ``round_len <= 256``
+  (validated eagerly by the cache-based solvers).
+* ``"int8"`` — two sub-grids, mirroring :mod:`repro.dist.compress`:
+  - integer columns (``psi``): direct int8 storage, exact for values in
+    [-128, 127] — hence the validated ``round_len <= 127`` bound.  A
+    degenerate shared scale of 1.
+  - float columns (``z``, ``n``): shared-scale quantization per
+    :data:`CHUNK`-element chunk (the quantized_psum grid): ``scale =
+    max_chunk|x| / 127``, per-element absolute error <= ``scale / 2 =
+    max_chunk|x| / 254``.  The ragged tail quantizes as its own chunk.
+
+Simulation note (DESIGN.md §13): this reproduction keeps the live buffer
+f32 and *round-trips every write through the storage grid* (compress on
+write, decompress on read collapses to a write-side round-trip when the
+decoded image is what the buffer holds).  Reads — catch-up, FTRL
+apply-at-read, the round-boundary flush — therefore always see exactly the
+values a true compressed store would decode, and the documented error bounds
+are what the property tests (tests/fused) assert.  On hardware the decode
+would run inside the fused/flush kernels instead.
+
+Everything here is elementwise or fixed-shape reshape/slice/concat, so the
+round-trips vmap cleanly under the batched-sweep config axis.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+STATE_DTYPES = ("f32", "bf16", "int8")
+
+#: shared-scale quantization group (same grid as dist.compress.CHUNK)
+CHUNK = 256
+
+
+def roundtrip_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    """bf16 storage round-trip: relative error <= 2^-8; integers <= 256
+    (and all powers of two in range) are exact."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def roundtrip_int8_int(x: jnp.ndarray) -> jnp.ndarray:
+    """Direct int8 storage for integer-valued columns (psi): exact for
+    values in [-128, 127] — the cache-based solvers validate
+    ``round_len <= 127`` before selecting this grid."""
+    return jnp.clip(jnp.round(x), -128.0, 127.0).astype(jnp.int8).astype(jnp.float32)
+
+
+def _qchunk(x: jnp.ndarray, amax: jnp.ndarray) -> jnp.ndarray:
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale
+
+
+def roundtrip_int8_shared_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """int8 shared-scale storage round-trip for a flat ``[n]`` float column
+    (FTRL z / n): per-element error <= max_chunk|x| / 254.  Chunking (and
+    the ragged-tail-as-own-chunk rule) mirror dist.compress.quantized_psum."""
+    assert x.ndim == 1, x.shape
+    n = x.shape[0]
+    n_full = (n // CHUNK) * CHUNK
+    parts = []
+    if n_full:
+        bulk = x[:n_full].reshape(-1, CHUNK)
+        parts.append(_qchunk(bulk, jnp.max(jnp.abs(bulk), axis=1, keepdims=True)).reshape(-1))
+    if n != n_full:
+        tail = x[n_full:]
+        parts.append(_qchunk(tail, jnp.max(jnp.abs(tail))))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def roundtrip(x: jnp.ndarray, state_dtype: str, *, integer: bool = False) -> jnp.ndarray:
+    """Round-trip one flat state column through its storage grid.
+    ``integer`` marks columns whose values are integral (psi), which int8
+    stores exactly via the direct grid.  ``state_dtype`` is trace-static
+    (LinearConfig structure): the f32 default compiles to nothing."""
+    if state_dtype == "f32":
+        return x
+    x = x.astype(jnp.float32)
+    if state_dtype == "bf16":
+        return roundtrip_bf16(x)
+    assert state_dtype == "int8", state_dtype
+    if integer:
+        return roundtrip_int8_int(x)
+    return roundtrip_int8_shared_scale(x.reshape(-1)).reshape(x.shape)
+
+
+def validate_state_dtype(state_dtype: str, round_len: int, *, has_psi: bool) -> None:
+    """Eager per-config check that the psi column survives its storage grid
+    exactly (a rounded psi would index the wrong DP-cache slot).  Solvers
+    without a psi column (ftrl) have no round_len constraint."""
+    if state_dtype not in STATE_DTYPES:
+        raise ValueError(f"unknown state_dtype {state_dtype!r}, want one of {STATE_DTYPES}")
+    if not has_psi:
+        return
+    if state_dtype == "bf16" and round_len > 256:
+        raise ValueError(
+            f"state_dtype='bf16' stores psi exactly only for round_len <= 256 "
+            f"(8-bit mantissa), got round_len={round_len}"
+        )
+    if state_dtype == "int8" and round_len > 127:
+        raise ValueError(
+            f"state_dtype='int8' stores psi exactly only for round_len <= 127 "
+            f"(direct int8 grid), got round_len={round_len}"
+        )

@@ -3,15 +3,19 @@ substrate (`repro.backend`), not standalone scaffolding: every regularization
 and attention hot path dispatches here when the pallas backend is selected
 (interpret mode on CPU, compiled on TPU).
 
+* fused_step — ONE whole lazy training step (catch-up / FTRL read ->
+  predict -> loss gradient -> update deltas) per tile pass, for every
+  solver; the `fused_step` backend op (DESIGN.md §13)
 * lazy_enet — fused lazy catch-up + gradient update on gathered rows
   (the paper's hot spot: 2 reads + 1 write per element vs the 3 + 2 of a
   split catchup-then-update), plus the gradient-free apply used by flushes
 * enet_prox — dense elastic-net shrink sweep (dense baseline / flush shrink)
 * ftrl — FTRL-Proximal apply-at-read + per-coordinate AdaGrad update deltas
   (the `ftrl` solver's elementwise hot paths, repro.solvers.ftrl)
-* flash_attn — forward flash attention, the serving engine's attention path
-  (training / chunked prefill / per-slot continuous-batching decode via
-  absolute q offsets)
+* flash_attn — flash attention (forward + custom-vjp backward), the serving
+  engine's and the training loss's attention path (chunked prefill /
+  per-slot continuous-batching decode via absolute q offsets)
+* common — the shared dynamic-hyper operand plumbing every kernel uses
 
 ops.py holds the padded/jit'd public wrappers (all hyperparameters are
 dynamic operands — sweeping lam1 must not recompile); ref.py the pure-jnp
@@ -22,8 +26,10 @@ this package directly.
 from .flash_attn import flash_attention
 from .ops import (
     catchup_update,
+    dp_fused_step,
     enet_apply,
     enet_prox,
+    ftrl_fused_step,
     ftrl_read,
     ftrl_update,
     lazy_enet_update,
@@ -32,9 +38,11 @@ from . import ref
 
 __all__ = [
     "catchup_update",
+    "dp_fused_step",
     "enet_apply",
     "enet_prox",
     "flash_attention",
+    "ftrl_fused_step",
     "ftrl_read",
     "ftrl_update",
     "lazy_enet_update",

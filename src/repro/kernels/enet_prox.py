@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import SCALAR_SPEC, dynamic_hypers, tile_spec
+
 
 def _kernel(w_ref, a_ref, s_ref, out_ref):
     w = w_ref[...].astype(jnp.float32)
@@ -43,11 +45,11 @@ def enet_prox_kernel(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            tile_spec(block_rows, block_cols),
+            SCALAR_SPEC,
+            SCALAR_SPEC,
         ],
-        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_specs=tile_spec(block_rows, block_cols),
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,
-    )(w, a.reshape(1, 1).astype(jnp.float32), s.reshape(1, 1).astype(jnp.float32))
+    )(w, *dynamic_hypers(a, s))

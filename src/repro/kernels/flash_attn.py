@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: forward flash attention (online softmax), GQA-aware.
+"""Pallas TPU kernel: flash attention (online softmax), GQA-aware, with a
+custom-vjp backward pass.
 
 Motivation (DESIGN.md §8): after sharding fixes,
 the dominant roofline term on dense-attention archs is the materialized
@@ -24,10 +25,25 @@ TPU mapping:
   training (offset 0), chunked prefill, and single-token decode
   (Sq=1, offset=pos).
 
-Forward-only by design: serving (prefill_32k / decode_32k / long_500k
-cells) has no backward; training keeps the einsum path (remat-friendly).
+Backward (the standard flash recomputation scheme): the forward kernel
+additionally emits the per-row log-sum-exp ``lse = m + log(den)``, from
+which the backward kernels rebuild each probability tile as
+``p = exp(s - lse)`` instead of storing the [Sq, Skv] matrix.  With
+``delta = rowsum(do * out)`` (a cheap XLA reduction):
+
+    ds = p * (do @ v^T - delta);   dq = scale * ds @ k
+    dv = p^T @ do;                 dk = scale * ds^T @ q
+
+Two kernels mirror the forward's tiling: dq over (batch*head, q-block)
+programs streaming k/v blocks, dk/dv over (batch*head, kv-block) programs
+streaming q/do blocks; per-q-head dk/dv partials reduce over the GQA group
+in XLA.  Zero-padded ``do`` rows make padded-q contributions exactly zero;
+padded/masked kv columns are re-masked before the exp.  ``q_offset`` is an
+integer input, so its cotangent is the symbolic float0 zero.
+
 Validated under interpret=True against the pure-jnp GQA oracle across
-shape/dtype/causality sweeps (tests/kernels/test_flash_attn.py).
+shape/dtype/causality sweeps, and the vjp against jax.grad of that oracle
+(tests/kernels/test_flash_attn.py).
 """
 from __future__ import annotations
 
@@ -36,13 +52,20 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
 
 
-def _kernel(
-    q_ref, k_ref, v_ref, qoff_ref, out_ref, *, bk: int, causal: bool, scale: float, skv_real: int
+def _kv_index_map(KV: int, G: int):
+    # grid dim 0 is bh = batch * H + head; the program's kv-head slab is
+    # batch * KV + head // G
+    return lambda bh, nq: ((bh // (G * KV)) * KV + (bh % (G * KV)) // G, 0, 0)
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, qoff_ref, out_ref, lse_ref, *, bk: int, causal: bool, scale: float, skv_real: int
 ):
     q = q_ref[0].astype(jnp.float32) * scale  # [BQ, hd]
     BQ = q.shape[0]
@@ -77,6 +100,225 @@ def _kernel(
     acc, m, den = jax.lax.fori_loop(0, Skv // bk, body, (acc0, m0, den0))
     out = acc / jnp.maximum(den, 1e-30)[:, None]
     out_ref[0] = out.astype(out_ref.dtype)
+    # log-sum-exp of the (scaled, masked) scores — the backward's residual
+    lse_ref[0] = m + jnp.log(jnp.maximum(den, 1e-30))
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qoff_ref, dq_ref,
+    *, bk: int, causal: bool, scale: float, skv_real: int,
+):
+    q = q_ref[0].astype(jnp.float32) * scale  # [BQ, hd] (scaled like forward)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]  # [BQ]
+    delta = delta_ref[0]  # [BQ]
+    BQ = q.shape[0]
+    Skv = k_ref.shape[1]
+    nq = pl.program_id(1)
+    q_pos = qoff_ref[0, 0] + nq * BQ + jax.lax.iota(jnp.int32, BQ)
+
+    def body(i, dq):
+        k = k_ref[0, pl.dslice(i * bk, bk)].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(i * bk, bk)].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        kv_pos = i * bk + jax.lax.iota(jnp.int32, bk)
+        mask = (kv_pos < skv_real)[None, :]
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)  # [BQ, BK]
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[:, None])
+        return dq + jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    dq0 = jnp.zeros((BQ, q.shape[1]), jnp.float32)
+    dq = jax.lax.fori_loop(0, Skv // bk, body, dq0)
+    dq_ref[0] = (dq * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, qoff_ref, dk_ref, dv_ref,
+    *, bq: int, causal: bool, scale: float, skv_real: int,
+):
+    k = k_ref[0].astype(jnp.float32)  # [BK, hd] — this program's kv tile
+    v = v_ref[0].astype(jnp.float32)
+    BK = k.shape[0]
+    Sq = q_ref.shape[1]
+    nk = pl.program_id(1)
+    kv_pos = nk * BK + jax.lax.iota(jnp.int32, BK)
+    qoff = qoff_ref[0, 0]
+
+    def body(i, carry):
+        dk, dv = carry
+        q = q_ref[0, pl.dslice(i * bq, bq)].astype(jnp.float32) * scale  # [BQ, hd]
+        do = do_ref[0, pl.dslice(i * bq, bq)].astype(jnp.float32)
+        lse = lse_ref[0, pl.dslice(i * bq, bq)]
+        delta = delta_ref[0, pl.dslice(i * bq, bq)]
+        q_pos = qoff + i * bq + jax.lax.iota(jnp.int32, bq)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [BQ, BK]
+        mask = (kv_pos < skv_real)[None, :]
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        # dv += p^T @ do  (padded q rows: do = 0 -> zero contribution)
+        dv_new = dv + jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[:, None])
+        # dk += ds^T @ (q * scale) — q is pre-scaled, so scale is included
+        dk_new = dk + jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return dk_new, dv_new
+
+    dk0 = jnp.zeros((BK, k.shape[1]), jnp.float32)
+    dv0 = jnp.zeros((BK, v.shape[1]), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, Sq // bq, body, (dk0, dv0))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _pad_qkv(q, k, v, block_q, block_k):
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    # padded kv rows are masked off inside the kernels (kv_pos >= Skv)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    q2 = qp.reshape(B * H, Sq + pq, hd)
+    k2 = kp.reshape(B * KV, Skv + pk, hd)
+    v2 = vp.reshape(B * KV, Skv + pk, hd)
+    return q2, k2, v2
+
+
+def _fwd_impl(q, k, v, q_offset, causal, block_q, block_k, interpret):
+    """Padded forward; returns (out [B,H,Sq,hd], lse [B*H, Sq_p])."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q2, k2, v2 = _pad_qkv(q, k, v, block_q, block_k)
+    Sq_p, Skv_p = q2.shape[1], k2.shape[1]
+    offs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B * H,)).reshape(B * H, 1)
+    grid = (B * H, Sq_p // block_q)
+    kv_map = _kv_index_map(KV, G)
+
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, bk=block_k, causal=causal, scale=scale, skv_real=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, nq: (bh, nq, 0)),  # q tile
+            pl.BlockSpec((1, Skv_p, hd), kv_map),
+            pl.BlockSpec((1, Skv_p, hd), kv_map),
+            pl.BlockSpec((1, 1), lambda bh, nq: (bh, 0)),  # q_offset scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, nq: (bh, nq, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, nq: (bh, nq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sq_p, hd), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Sq_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q2, k2, v2, offs)
+
+    return out.reshape(B, H, Sq_p, hd)[:, :, :Sq], lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, q_offset, causal, block_q, block_k, interpret):
+    out, _ = _fwd_impl(q, k, v, q_offset, causal, block_q, block_k, interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, q_offset, causal, block_q, block_k, interpret):
+    out, lse = _fwd_impl(q, k, v, q_offset, causal, block_q, block_k, interpret)
+    return out, (q, k, v, q_offset, out, lse)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, do):
+    q, k, v, q_offset, out, lse = res
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q2, k2, v2 = _pad_qkv(q, k, v, block_q, block_k)
+    Sq_p, Skv_p = q2.shape[1], k2.shape[1]
+    # delta = rowsum(do * out): a cheap XLA reduction over the unpadded
+    # arrays; zero-padding do/delta keeps padded q rows inert in-kernel
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # [B, H, Sq]
+    delta2 = jnp.pad(delta, ((0, 0), (0, 0), (0, Sq_p - Sq))).reshape(B * H, Sq_p)
+    do2 = jnp.pad(do, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0))).reshape(B * H, Sq_p, hd)
+    offs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B * H,)).reshape(B * H, 1)
+    kv_map = _kv_index_map(KV, G)
+    qmap = lambda bh, nq: (bh, nq, 0)
+    rowmap = lambda bh, nq: (bh, nq)
+    slabmap = lambda bh, nk: (bh, 0, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, bk=block_k, causal=causal, scale=scale, skv_real=Skv),
+        grid=(B * H, Sq_p // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), qmap),  # q tile
+            pl.BlockSpec((1, Skv_p, hd), kv_map),
+            pl.BlockSpec((1, Skv_p, hd), kv_map),
+            pl.BlockSpec((1, block_q, hd), qmap),  # do tile
+            pl.BlockSpec((1, block_q), rowmap),  # lse tile
+            pl.BlockSpec((1, block_q), rowmap),  # delta tile
+            pl.BlockSpec((1, 1), lambda bh, nq: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), qmap),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, hd), q.dtype),
+        interpret=interpret,
+    )(q2, k2, v2, do2, lse, delta2, offs)
+
+    kv_tile = lambda bh, nk, KV=KV, G=G: ((bh // (G * KV)) * KV + (bh % (G * KV)) // G, nk, 0)
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, bq=block_q, causal=causal, scale=scale, skv_real=Skv),
+        grid=(B * H, Skv_p // block_k),
+        in_specs=[
+            pl.BlockSpec((1, Sq_p, hd), slabmap),  # q slab
+            pl.BlockSpec((1, block_k, hd), kv_tile),  # k tile
+            pl.BlockSpec((1, block_k, hd), kv_tile),  # v tile
+            pl.BlockSpec((1, Sq_p, hd), slabmap),  # do slab
+            pl.BlockSpec((1, Sq_p), lambda bh, nk: (bh, 0)),  # lse slab
+            pl.BlockSpec((1, Sq_p), lambda bh, nk: (bh, 0)),  # delta slab
+            pl.BlockSpec((1, 1), lambda bh, nk: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, hd), lambda bh, nk: (bh, nk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, nk: (bh, nk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Skv_p, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, Skv_p, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q2, k2, v2, do2, lse, delta2, offs)
+
+    dq = dq.reshape(B, H, Sq_p, hd)[:, :, :Sq]
+    # GQA: per-q-head dk/dv partials reduce over the group of G q-heads
+    dk = dk_h.reshape(B, KV, G, Skv_p, hd).sum(axis=2)[:, :, :Skv].astype(k.dtype)
+    dv = dv_h.reshape(B, KV, G, Skv_p, hd).sum(axis=2)[:, :, :Skv].astype(v.dtype)
+    # integer positions carry no gradient: symbolic float0 zero cotangent
+    doff = np.zeros(jnp.shape(jnp.asarray(q_offset)), jax.dtypes.float0)
+    return dq, dk, dv, doff
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 @functools.partial(
@@ -94,38 +336,8 @@ def flash_attention(
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns [B, H, Sq, hd].  Sq is padded to block_q and Skv to block_k
-    internally (padded kv is masked off by causality or zero-prob rows)."""
-    B, H, Sq, hd = q.shape
-    KV, Skv = k.shape[1], k.shape[2]
-    G = H // KV
-    scale = 1.0 / math.sqrt(hd)
-
-    pq = (-Sq) % block_q
-    pk = (-Skv) % block_k
-    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
-    # padded kv rows are masked off inside the kernel (kv_pos >= Skv)
-    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
-    Sq_p, Skv_p = Sq + pq, Skv + pk
-
-    # flatten (B, H) -> grid dim 0; GQA: kv head for q-head h is h // G
-    q2 = qp.reshape(B * H, Sq_p, hd)
-    offs = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B * H,)).reshape(B * H, 1)
-
-    grid = (B * H, Sq_p // block_q)
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, bk=block_k, causal=causal, scale=scale, skv_real=Skv),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, hd), lambda bh, nq: (bh, nq, 0)),  # q tile
-            pl.BlockSpec((1, Skv_p, hd), lambda bh, nq, KV=KV, G=G, B=B: ((bh // (G * KV)) * KV + (bh % (G * KV)) // G, 0, 0)),
-            pl.BlockSpec((1, Skv_p, hd), lambda bh, nq, KV=KV, G=G, B=B: ((bh // (G * KV)) * KV + (bh % (G * KV)) // G, 0, 0)),
-            pl.BlockSpec((1, 1), lambda bh, nq: (bh, 0)),  # q_offset scalar
-        ],
-        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, nq: (bh, nq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, hd), q.dtype),
-        interpret=interpret,
-    )(q2, kp.reshape(B * KV, Skv_p, hd), vp.reshape(B * KV, Skv_p, hd), offs)
-
-    return out.reshape(B, H, Sq_p, hd)[:, :, :Sq]
+    internally (padded kv is masked off by causality or zero-prob rows).
+    Differentiable w.r.t. q/k/v via the custom-vjp backward kernels."""
+    return _flash(
+        q, k, v, jnp.asarray(q_offset, jnp.int32), causal, block_q, block_k, interpret
+    )

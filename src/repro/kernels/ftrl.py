@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import SCALAR_SPEC, dynamic_hypers, tile_spec
+
 
 def _read_kernel(z_ref, n_ref, alpha_ref, beta_ref, lam1_ref, lam2_ref, out_ref):
     z = z_ref[...].astype(jnp.float32)
@@ -57,17 +59,6 @@ def _update_kernel(w_ref, n_ref, g_ref, alpha_ref, dz_ref, dn_ref):
     dn_ref[...] = g2.astype(dn_ref.dtype)
 
 
-def _scalar(x) -> jnp.ndarray:
-    return jnp.asarray(x, jnp.float32).reshape(1, 1)
-
-
-def _tile(br: int, bc: int) -> pl.BlockSpec:
-    return pl.BlockSpec((br, bc), lambda i, j: (i, j))
-
-
-_SCAL = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
-
-
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
 def ftrl_read_rows_kernel(
     z: jnp.ndarray,  # [R, D]
@@ -89,11 +80,11 @@ def ftrl_read_rows_kernel(
     return pl.pallas_call(
         _read_kernel,
         grid=grid,
-        in_specs=[_tile(block_rows, block_cols)] * 2 + [_SCAL] * 4,
-        out_specs=_tile(block_rows, block_cols),
+        in_specs=[tile_spec(block_rows, block_cols)] * 2 + [SCALAR_SPEC] * 4,
+        out_specs=tile_spec(block_rows, block_cols),
         out_shape=jax.ShapeDtypeStruct(z.shape, jnp.float32),
         interpret=interpret,
-    )(z, n, _scalar(alpha), _scalar(beta), _scalar(lam1), _scalar(lam2))
+    )(z, n, *dynamic_hypers(alpha, beta, lam1, lam2))
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
@@ -115,11 +106,11 @@ def ftrl_update_rows_kernel(
     return pl.pallas_call(
         _update_kernel,
         grid=grid,
-        in_specs=[_tile(block_rows, block_cols)] * 3 + [_SCAL],
-        out_specs=(_tile(block_rows, block_cols), _tile(block_rows, block_cols)),
+        in_specs=[tile_spec(block_rows, block_cols)] * 3 + [SCALAR_SPEC],
+        out_specs=(tile_spec(block_rows, block_cols), tile_spec(block_rows, block_cols)),
         out_shape=(
             jax.ShapeDtypeStruct(w.shape, jnp.float32),
             jax.ShapeDtypeStruct(w.shape, jnp.float32),
         ),
         interpret=interpret,
-    )(w, n, g, _scalar(alpha))
+    )(w, n, g, *dynamic_hypers(alpha))

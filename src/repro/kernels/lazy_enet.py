@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import SCALAR_SPEC, dynamic_hypers, row_tile_spec, tile_spec
+
 
 def _kernel(w_ref, g_ref, ratio_ref, shift_ref, eta_ref, out_ref):
     w = w_ref[...].astype(jnp.float32)
@@ -62,9 +64,9 @@ def _factor_operand(f: jnp.ndarray, R: int, D: int, block_rows: int, block_cols:
     factors ([R, D], the linear trainer's gathered flat slab reshaped to
     tiles) get full (block_rows, block_cols) tiles."""
     if f.shape == (R, D) and D != 1:
-        return f.astype(jnp.float32), pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))
+        return f.astype(jnp.float32), tile_spec(block_rows, block_cols)
     assert f.shape in ((R,), (R, 1)), (f.shape, (R, D))
-    return f.reshape(R, 1).astype(jnp.float32), pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0))
+    return f.reshape(R, 1).astype(jnp.float32), row_tile_spec(block_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
@@ -91,16 +93,16 @@ def lazy_enet_rows_kernel(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),  # w
-            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),  # grad
+            tile_spec(block_rows, block_cols),  # w
+            tile_spec(block_rows, block_cols),  # grad
             ratio_spec,
             shift_spec,
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # eta
+            SCALAR_SPEC,  # eta
         ],
-        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_specs=tile_spec(block_rows, block_cols),
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,
-    )(w, grad, ratio, shift, eta.reshape(1, 1).astype(jnp.float32))
+    )(w, grad, ratio, shift, *dynamic_hypers(eta))
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
@@ -125,11 +127,11 @@ def enet_apply_rows_kernel(
         _apply_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),  # w
+            tile_spec(block_rows, block_cols),  # w
             ratio_spec,
             shift_spec,
         ],
-        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_specs=tile_spec(block_rows, block_cols),
         out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,
     )(w, ratio, shift)

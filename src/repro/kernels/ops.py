@@ -7,7 +7,10 @@ and interpret-mode fallback on CPU (this container) vs compiled mode on TPU.
 Hyperparameters (``lam1``, ``eta``, the prox ``a``/``s``) are DYNAMIC f32
 operands, never static: they only enter through the catch-up factors / shift
 scalars computed outside the kernels, so a new value must not recompile, and
-``repro.sweeps`` passes them as traced per-config scalars under vmap.
+``repro.sweeps`` passes them as traced per-config scalars under vmap.  All
+hyper normalization runs through :func:`repro.kernels.common.dynamic_hypers`
+inside the raw kernels — one shared helper instead of per-op
+``jnp.asarray(..., jnp.float32).reshape(1, 1)`` copies.
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ from repro.core.lazy_enet import catchup_factors
 
 from .enet_prox import enet_prox_kernel
 from .ftrl import ftrl_read_rows_kernel, ftrl_update_rows_kernel
+from .fused_step import dp_fused_step_kernel, ftrl_fused_step_kernel
 from .lazy_enet import enet_apply_rows_kernel, lazy_enet_rows_kernel
 
 
@@ -76,7 +80,7 @@ def lazy_enet_update(
         ratio = jnp.pad(ratio, (0, pr))
         shift = jnp.pad(shift, (0, pr))
     out = lazy_enet_rows_kernel(
-        wp, gp, ratio, shift, jnp.asarray(eta, jnp.float32),
+        wp, gp, ratio, shift, eta,
         block_rows=block_rows, block_cols=block_cols, interpret=interpret,
     )
     return out[:R, :D]
@@ -178,9 +182,7 @@ def ftrl_read(
     z2 = _tile_flat(z, block_rows, block_cols)
     n2 = _tile_flat(n, block_rows, block_cols)
     out = ftrl_read_rows_kernel(
-        z2, n2,
-        jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32),
-        jnp.asarray(lam1, jnp.float32), jnp.asarray(lam2, jnp.float32),
+        z2, n2, alpha, beta, lam1, lam2,
         block_rows=block_rows, block_cols=block_cols, interpret=interpret,
     )
     return out.reshape(-1)[:cnt]
@@ -207,7 +209,7 @@ def ftrl_update(
     n2 = _tile_flat(n, block_rows, block_cols)
     g2 = _tile_flat(g, block_rows, block_cols)
     dz, dn = ftrl_update_rows_kernel(
-        w2, n2, g2, jnp.asarray(alpha, jnp.float32),
+        w2, n2, g2, alpha,
         block_rows=block_rows, block_cols=block_cols, interpret=interpret,
     )
     return dz.reshape(-1)[:cnt], dn.reshape(-1)[:cnt]
@@ -231,7 +233,88 @@ def enet_prox(
     n = flat.shape[0]
     w2 = _tile_flat(flat, block_rows, block_cols)
     out = enet_prox_kernel(
-        w2, jnp.asarray(a, jnp.float32), jnp.asarray(s, jnp.float32),
+        w2, a, s,
         block_rows=block_rows, block_cols=block_cols, interpret=interpret,
     )
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def _pad_step_slab(x: jnp.ndarray, Bp: int, P: int) -> jnp.ndarray:
+    B, p = x.shape
+    if Bp != B or P != p:
+        x = jnp.pad(x, ((0, Bp - B), (0, P - p)))
+    return x
+
+
+def _step_dims(B: int, p: int, block_rows: int):
+    """Pad example rows to the sublane multiple and the feature axis to a
+    full 128-lane-aligned width (the fused kernels reduce over it, so it
+    must be one resident tile)."""
+    return -(-B // block_rows) * block_rows, max(128, -(-p // 128) * 128)
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "use_bias", "block_rows", "interpret"))
+def dp_fused_step(
+    w: jnp.ndarray,  # [B, p] gathered weights
+    ratio: jnp.ndarray,  # [B, p] per-element catch-up factors
+    shift: jnp.ndarray,  # [B, p]
+    val: jnp.ndarray,  # [B, p] feature values
+    y: jnp.ndarray,  # [B] labels
+    b,  # dynamic f32 bias (may be traced per-config)
+    eta,  # dynamic f32 learning rate
+    *,
+    loss: str,
+    use_bias: bool,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+):
+    """Fused whole step for the cache-based solvers: catch-up + predict +
+    loss gradient + update delta in one tile pass.  Padding is safe: padded
+    feature columns (w = val = 0) contribute exactly 0 everywhere, and
+    padded example rows are sliced off here.  Returns
+    ``(w_cur [B, p], delta [B, p], gz [B], loss [B])``."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, p = w.shape
+    Bp, P = _step_dims(B, p, block_rows)
+    y2 = jnp.pad(y.reshape(B, 1).astype(jnp.float32), ((0, Bp - B), (0, 0)))
+    w_cur, delta, gz, loss_v = dp_fused_step_kernel(
+        _pad_step_slab(w, Bp, P), _pad_step_slab(ratio, Bp, P),
+        _pad_step_slab(shift, Bp, P), _pad_step_slab(val, Bp, P), y2, b, eta,
+        loss=loss, use_bias=use_bias, block_rows=block_rows, interpret=interpret,
+    )
+    return w_cur[:B, :p], delta[:B, :p], gz[:B, 0], loss_v[:B, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "use_bias", "block_rows", "interpret"))
+def ftrl_fused_step(
+    z: jnp.ndarray,  # [B, p] gathered FTRL accumulators
+    n: jnp.ndarray,  # [B, p] gathered AdaGrad sums
+    val: jnp.ndarray,  # [B, p] feature values
+    y: jnp.ndarray,  # [B] labels
+    b,  # dynamic f32 scalars (may be traced per-config)
+    alpha,
+    beta,
+    lam1,
+    lam2,
+    *,
+    loss: str,
+    use_bias: bool,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+):
+    """Fused whole step for FTRL-Proximal: apply-at-read + predict + loss
+    gradient + AdaGrad deltas in one tile pass.  Padded columns carry
+    z = n = val = 0 and produce w_cur = dz = dn = 0 exactly.  Returns
+    ``(w_cur [B, p], dz [B, p], dn [B, p], gz [B], loss [B])``."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, p = z.shape
+    Bp, P = _step_dims(B, p, block_rows)
+    y2 = jnp.pad(y.reshape(B, 1).astype(jnp.float32), ((0, Bp - B), (0, 0)))
+    w_cur, dz, dn, gz, loss_v = ftrl_fused_step_kernel(
+        _pad_step_slab(z, Bp, P), _pad_step_slab(n, Bp, P),
+        _pad_step_slab(val, Bp, P), y2, b, alpha, beta, lam1, lam2,
+        loss=loss, use_bias=use_bias, block_rows=block_rows, interpret=interpret,
+    )
+    return w_cur[:B, :p], dz[:B, :p], dn[:B, :p], gz[:B, 0], loss_v[:B, 0]

@@ -110,7 +110,7 @@ def serve_engine(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
 
 
 def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch=8,
-                 requests=256, round_len=256, seed=0):
+                 requests=256, round_len=256, seed=0, fused=None, state_dtype="f32"):
     """Online learn/predict smoke over the LinearService: warm the complete
     jit set (every power-of-two bucket x {learn, predict} + the round
     flush), then stream ``requests`` examples and assert zero recompiles."""
@@ -121,6 +121,7 @@ def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch
     cfg = LinearConfig(
         dim=dim, round_len=round_len, lam1=1e-5, lam2=1e-6,
         schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+        fused=fused, state_dtype=state_dtype,
     )
     svc = LinearService(cfg, p_max=p_max, micro_batch=micro_batch,
                         backend=backend, solver=solver)
@@ -246,10 +247,21 @@ def main():
         help="kernel backend for the attention hot path "
              "(default: $REPRO_BACKEND or platform default)",
     )
+    ap.add_argument(
+        "--fused", action=argparse.BooleanOptionalAction, default=None,
+        help="--linear: fused whole-step solver kernels (--no-fused: "
+             "multi-op step; default: $REPRO_FUSED, then fused)",
+    )
+    ap.add_argument(
+        "--state-dtype", default="f32", choices=("f32", "bf16", "int8"),
+        help="--linear: storage grid for the non-weight state columns "
+             "(DESIGN.md §13)",
+    )
     args = ap.parse_args()
     if args.linear:
         serve_linear(solver=args.solver, backend=args.backend, dim=args.dim,
-                     requests=args.requests or 256, seed=args.seed)
+                     requests=args.requests or 256, seed=args.seed,
+                     fused=args.fused, state_dtype=args.state_dtype)
         return
     if not args.arch:
         ap.error("--arch is required unless --linear")

@@ -21,6 +21,7 @@ import time
 import numpy as np
 
 from repro import backend as kernel_backend
+from repro import core as lt_core
 from repro import solvers as solver_registry
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.data import BowConfig, SyntheticBow
@@ -81,6 +82,20 @@ def main() -> None:
         help="kernel backend for the vmapped lazy/flush hot paths "
         "(default: $REPRO_BACKEND or platform default)",
     )
+    ap.add_argument(
+        "--fused",
+        action=argparse.BooleanOptionalAction,
+        default=None,
+        help="fused whole-step solver kernels (--no-fused: multi-op step; "
+        "default: $REPRO_FUSED, then fused)",
+    )
+    ap.add_argument(
+        "--state-dtype",
+        default="f32",
+        choices=lt_core.STATE_DTYPES,
+        help="storage grid for the non-weight state columns (psi / ftrl z,n);"
+        " bf16/int8 bound round_len for cache-based solvers (DESIGN.md §13)",
+    )
     args = ap.parse_args()
 
     n1, n2 = parse_grid(args.grid)
@@ -97,6 +112,8 @@ def main() -> None:
         round_len=args.round_len,
         schedule=ScheduleConfig(kind="inv_sqrt", eta0=args.eta0, t0=100.0),
         backend=args.backend,
+        fused=args.fused,
+        state_dtype=args.state_dtype,
     )
     grid = make_grid(
         base,

@@ -78,6 +78,7 @@ def train(
     log_every: int = 10,
     mesh_shape: str | None = None,
     solver: str | None = None,
+    reg_fused: bool | None = None,
 ):
     cfg = get_arch(arch)
     if reduced:
@@ -89,6 +90,10 @@ def train(
         import dataclasses as _dc
 
         cfg = _dc.replace(cfg, reg_solver=solver)
+    if reg_fused is not None:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, reg_fused=reg_fused)
     model = build(cfg)
 
     # Optional data x model mesh over the visible devices ("2x2", "4x1", …).
@@ -194,6 +199,12 @@ def main():
              "(cache-based solvers only; default: $REPRO_SOLVER or the "
              "arch's reg_flavor)",
     )
+    ap.add_argument(
+        "--reg-fused", action=argparse.BooleanOptionalAction, default=None,
+        help="one-pass fused catchup+SGD on the embedding row slab "
+             "(--no-reg-fused: split catchup-then-step; default: the arch's "
+             "reg_fused)",
+    )
     args = ap.parse_args()
     with kernel_backend.use_backend(args.backend):
         _, losses = train(
@@ -208,6 +219,7 @@ def main():
             seed=args.seed,
             mesh_shape=args.mesh,
             solver=args.solver,
+            reg_fused=args.reg_fused,
         )
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 

@@ -106,10 +106,14 @@ def decode_train(cfg: ArchConfig, params, tokens, enc_out, *, collect=False):
 
 
 def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    # training keeps the reference einsum attention: flash is forward-only
-    # (DESIGN.md §8/§11) and autodiff runs backward through this trace
-    with kb.use_backend("reference"):
-        return _loss_fn(cfg, params, batch)
+    # the training forward dispatches attention (causal self + non-causal
+    # cross) through the session backend — flash carries a custom-vjp
+    # backward; ``train_attn_reference`` pins the reference einsum for A/B
+    # parity runs (see models.transformer.loss_fn)
+    if cfg.train_attn_reference:
+        with kb.use_backend("reference"):
+            return _loss_fn(cfg, params, batch)
+    return _loss_fn(cfg, params, batch)
 
 
 def _loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:

@@ -260,12 +260,16 @@ def _ce_from_logits(logits, labels):
 
 
 def loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    # flash attention is forward-only (DESIGN.md §8/§11): the training
-    # forward — which autodiff runs backward through — always traces the
-    # reference einsum attention, whatever backend the session selected.
-    # Inference entrypoints (prefill/prefill_at/decode*) stay dispatched.
-    with kb.use_backend("reference"):
-        return _loss_fn(cfg, params, batch)
+    # The training forward dispatches attention through the session backend:
+    # flash attention carries a custom-vjp backward (kernels/flash_attn.py),
+    # so autodiff streams the [S, S] probability tiles in both directions
+    # instead of materializing them.  ``train_attn_reference`` pins the
+    # pre-backward-kernel behavior (reference einsum under autodiff) for
+    # A/B parity runs — tests/kernels pins flash-vs-einsum gradients.
+    if cfg.train_attn_reference:
+        with kb.use_backend("reference"):
+            return _loss_fn(cfg, params, batch)
+    return _loss_fn(cfg, params, batch)
 
 
 def _loss_fn(cfg: ArchConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:

@@ -116,18 +116,22 @@ def finish(
     *,
     lam1: float = 0.0,
     backend: Optional[str] = None,
+    fused: bool = True,
 ) -> Tuple[jnp.ndarray, LazyRowState]:
     """SGD step on the touched (already-current) rows; advances the round.
-    Routed through the backend's fused kernel with psi == k == i — begin()
-    just marked the rows current, so the catch-up factors are exactly
-    (ratio=1, shift=0) and the fused op reduces to the gradient step in one
-    pass over the slab."""
+    ``fused=True`` (the default) routes through the backend's fused kernel
+    with psi == k == i — begin() just marked the rows current, so the
+    catch-up factors are exactly (ratio=1, shift=0) and the fused op reduces
+    to the gradient step in one pass over the slab.  ``fused=False`` keeps
+    the unfused two-op form (catch-up, then the gradient step) — the
+    debugging / A-B comparison path (``ArchConfig.reg_fused``)."""
     bk = kb.resolve(backend)
     g_rows = grad[idx].astype(jnp.float32)
-    new_rows = bk.fused_catchup_sgd(
-        table_cur[idx].astype(jnp.float32), g_rows, state.i, state.i, state.caches,
-        lam1, eta,
-    )
+    rows = table_cur[idx].astype(jnp.float32)
+    if fused:
+        new_rows = bk.fused_catchup_sgd(rows, g_rows, state.i, state.i, state.caches, lam1, eta)
+    else:
+        new_rows = bk.catchup_rows(rows, state.i, state.i, state.caches, lam1) - eta * g_rows
     new_table = table_cur.at[idx].set(new_rows.astype(table_cur.dtype))
     return new_table, LazyRowState(psi=state.psi, caches=state.caches, i=state.i + 1)
 

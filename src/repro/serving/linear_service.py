@@ -74,6 +74,10 @@ class LinearService:
             cfg = dataclasses.replace(
                 cfg, solver=(solver or solver_registry.for_config(cfg).name)
             )
+        if cfg.fused is None:
+            # and for the fused-step routing: resolve $REPRO_FUSED once at
+            # construction so later rebuilds trace the same program shape
+            cfg = dataclasses.replace(cfg, fused=lt.fused_enabled(cfg))
         self.cfg = cfg
         self.p_max = p_max
         self.micro_batch = micro_batch

@@ -22,7 +22,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.core import dp_caches, lazy_enet
+from repro.core import dp_caches, lazy_enet, state_compress
 from repro.core.dp_caches import FOBOS, SGD
 from repro.core.schedules import validate_schedule
 
@@ -36,6 +36,11 @@ class LazyCacheSolver(Solver):
     state_cols = 2
     caches_based = True
     has_dense = True
+
+    def validate(self, cfg) -> None:
+        # psi must survive its storage grid EXACTLY (a rounded psi indexes
+        # the wrong DP-cache slot): bf16 -> round_len <= 256, int8 -> <= 127
+        state_compress.validate_state_dtype(cfg.state_dtype, cfg.round_len, has_psi=True)
 
     # subclass hook: the truncation period (0 = regularize every step)
     def k_period(self, cfg) -> int:
@@ -63,17 +68,44 @@ class LazyCacheSolver(Solver):
         g2 = state.wpsi[idx_f]  # [B*p, 2]
         w_g = g2[:, 0]
         psi_g = g2[:, 1].astype(jnp.int32)
-        # --- lazy catch-up of touched weights: reg for tau in [psi, i) ---
-        w_cur = bk.catchup_rows(w_g, psi_g, state.i, caches, hp.lam1)
-        # --- predict with current weights, loss gradient ---
-        z = lt._predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
-        loss, gz = lt._grad_z(cfg, z, batch.y)
-        g_w = (gz[:, None] * batch.val).reshape(-1)  # [B*p]
+        shape = batch.idx.shape
+        if lt.fused_enabled(cfg):
+            # (ratio, shift) from the caches in XLA — tiny O(B*p) gathers +
+            # exps, and where a traced per-config lam1 enters — then ONE
+            # whole-step tile pass: catch-up, predict, gradient, update delta
+            ratio, shift = lazy_enet.catchup_factors(psi_g, state.i, caches, hp.lam1)
+            w_cur2, delta, gz, loss = bk.fused_step(
+                w_g.reshape(shape),
+                ratio.reshape(shape),
+                jnp.broadcast_to(shift, ratio.shape).reshape(shape),
+                batch.val,
+                batch.y,
+                state.b,
+                eta,
+                loss=cfg.loss,
+                use_bias=cfg.use_bias,
+            )
+            w_cur = w_cur2.reshape(-1)
+            neg_eta_g = delta.reshape(-1)  # [B*p]
+        else:
+            # --- lazy catch-up of touched weights: reg for tau in [psi, i) ---
+            w_cur = bk.catchup_rows(w_g, psi_g, state.i, caches, hp.lam1)
+            # --- predict with current weights, loss gradient ---
+            z = lt._predict_current(cfg, w_cur.reshape(shape), state.b, batch)
+            loss, gz = lt._grad_z(cfg, z, batch.y)
+            neg_eta_g = -eta * (gz[:, None] * batch.val).reshape(-1)  # [B*p]
         # --- write back: set (caught-up w, psi=i) — duplicates identical —
         # then scatter-ADD the loss-gradient step (duplicates accumulate) ---
-        upd = jnp.stack([w_cur, jnp.broadcast_to(state.i.astype(jnp.float32), w_cur.shape)], axis=1)
+        # psi round-trips its storage grid on write (exact by validate();
+        # the f32 default is the identity)
+        psi_new = state_compress.roundtrip(
+            jnp.broadcast_to(state.i.astype(jnp.float32), w_cur.shape),
+            cfg.state_dtype,
+            integer=True,
+        )
+        upd = jnp.stack([w_cur, psi_new], axis=1)
         wpsi = state.wpsi.at[idx_f].set(upd)
-        wpsi = wpsi.at[idx_f, 0].add(-eta * g_w)
+        wpsi = wpsi.at[idx_f, 0].add(neg_eta_g)
         b = state.b - eta * jnp.sum(gz) if cfg.use_bias else state.b
         # reg for step i itself stays pending (applied at next touch / flush)
         new = lt.LinearState(wpsi=wpsi, b=b, caches=caches, i=state.i + 1, t=state.t + 1)
@@ -113,6 +145,7 @@ class DPSolver(LazyCacheSolver):
         self.name = flavor
 
     def validate(self, cfg) -> None:
+        super().validate(cfg)  # psi storage-grid bound (state_dtype)
         # the eta*lam2 < 1 divergence check is SGD-specific; FoBoS is
         # unconditionally valid (validate_schedule returns early for it)
         validate_schedule(cfg.schedule.make(), cfg.lam2, self.name, horizon=10_000_000)

@@ -175,7 +175,7 @@ def make_train_step(cfg: ArchConfig, model: ModelFns, mesh=None, rules=None):
 
         if use_lazy:
             new_emb, new_lazy = lazy_rows.finish(
-                emb_p, emb_g, idx, mid_lazy, eta_emb, lam1=cfg.lam1
+                emb_p, emb_g, idx, mid_lazy, eta_emb, lam1=cfg.lam1, fused=cfg.reg_fused
             )
             new_params = {**new_trunk, "embedding": new_emb}
         else:

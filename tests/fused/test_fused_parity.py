@@ -1,0 +1,128 @@
+"""Fused whole-step solver kernels vs the multi-op unfused step.
+
+The acceptance property for the fused path: an end-to-end fit + flush +
+predict through ``core.make_round_fn`` with ``fused=True`` matches the
+``fused=False`` multi-op step for every solver x backend x schedule —
+BITWISE on the reference backend (the fused reference op is the same jnp
+arithmetic, only regrouped into shapes XLA computes identically) and to
+<= 1e-5 on the pallas backend (interpret mode on CPU; tile-local f32
+accumulation may differ in the last ulps).
+
+The vmapped sweep runner goes through the same ``make_lazy_step_hp`` body,
+so a grid fit with fused on/off must also agree bitwise on reference.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.core import (
+    LinearConfig,
+    ScheduleConfig,
+    SparseBatch,
+    init_state,
+    make_round_fn,
+    predict_proba_sparse,
+)
+from repro.sweeps import log_ladder, make_grid, run_grid
+
+DIM = 64
+ROUND_LEN = 8
+B, P = 2, 3
+
+SCHEDULES = {
+    "constant": ScheduleConfig(kind="constant", eta0=0.1),
+    "inv_sqrt": ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+}
+
+
+def _cfg(solver, backend, sched, fused):
+    return LinearConfig(
+        dim=DIM,
+        solver=solver,
+        lam1=1e-3,
+        lam2=1e-4,
+        round_len=ROUND_LEN,
+        trunc_k=4,
+        schedule=SCHEDULES[sched],
+        backend=backend,
+        fused=fused,
+    )
+
+
+def _mk_rounds(rng, n_rounds):
+    out = []
+    for _ in range(n_rounds):
+        idx = rng.randint(0, DIM, size=(ROUND_LEN, B, P)).astype(np.int32)
+        val = rng.uniform(-2.0, 2.0, size=(ROUND_LEN, B, P)).astype(np.float32)
+        y = (rng.uniform(size=(ROUND_LEN, B)) > 0.5).astype(np.float32)
+        out.append(SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y)))
+    return out
+
+
+def _fit(cfg, rounds, test_batch):
+    round_fn = make_round_fn(cfg, "lazy")
+    state = init_state(cfg)
+    losses = []
+    for rb in rounds:
+        state, step_losses = round_fn(state, rb)
+        losses.append(np.asarray(step_losses))
+    proba = np.asarray(predict_proba_sparse(cfg, state, test_batch))
+    return (
+        np.concatenate(losses),
+        np.asarray(state.wpsi),
+        np.asarray(state.b),
+        proba,
+    )
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULES))
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("solver", ["sgd", "fobos", "trunc", "ftrl"])
+def test_fused_matches_unfused_end_to_end(solver, backend, sched, rng):
+    rounds = _mk_rounds(rng, 2)
+    test_batch = SparseBatch(
+        idx=jnp.asarray(rng.randint(0, DIM, size=(4, P)).astype(np.int32)),
+        val=jnp.asarray(rng.uniform(-2.0, 2.0, size=(4, P)).astype(np.float32)),
+        y=jnp.asarray((rng.uniform(size=4) > 0.5).astype(np.float32)),
+    )
+    got = _fit(_cfg(solver, backend, sched, fused=True), rounds, test_batch)
+    want = _fit(_cfg(solver, backend, sched, fused=False), rounds, test_batch)
+    for g, w, name in zip(got, want, ("losses", "wpsi", "b", "proba")):
+        if backend == "reference":
+            np.testing.assert_array_equal(g, w, err_msg=name)
+        else:
+            np.testing.assert_allclose(g, w, rtol=0, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("solver", ["fobos", "ftrl"])
+def test_vmapped_grid_fused_parity(solver, rng):
+    """The batched sweep runner threads the same solver.touched_update body
+    under vmap; fused on/off must agree bitwise on the reference backend."""
+    rounds = _mk_rounds(rng, 2)
+
+    def grid_for(fused):
+        base = _cfg(solver, "reference", "inv_sqrt", fused)
+        return make_grid(base, log_ladder(1e-3, 1e-5, 2), log_ladder(1e-4, 1e-6, 2))
+
+    st_on, loss_on = run_grid(grid_for(True), rounds)
+    st_off, loss_off = run_grid(grid_for(False), rounds)
+    np.testing.assert_array_equal(np.asarray(loss_on), np.asarray(loss_off))
+    np.testing.assert_array_equal(np.asarray(st_on.wpsi), np.asarray(st_off.wpsi))
+    np.testing.assert_array_equal(np.asarray(st_on.b), np.asarray(st_off.b))
+
+
+def test_fused_env_default(monkeypatch):
+    """$REPRO_FUSED drives the default only when cfg.fused is None."""
+    from repro.core import fused_enabled
+
+    cfg = _cfg("fobos", "reference", "constant", fused=None)
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    assert fused_enabled(cfg) is True
+    monkeypatch.setenv("REPRO_FUSED", "0")
+    assert fused_enabled(cfg) is False
+    assert fused_enabled(dataclasses.replace(cfg, fused=True)) is True
+    monkeypatch.setenv("REPRO_FUSED", "on")
+    assert fused_enabled(cfg) is True
+    assert fused_enabled(dataclasses.replace(cfg, fused=False)) is False

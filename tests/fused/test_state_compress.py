@@ -1,0 +1,201 @@
+"""Property tests for the compressed non-weight state columns (DESIGN.md
+§13): round-trip error bounds per storage grid, exactness of the integer
+grids that make the psi column lossless, and the end-to-end consequences —
+DP solvers are bitwise invariant to ``state_dtype`` (psi is the only
+compressed column and it is exact within the validated round_len bound),
+and ftrl's compress-on-write equals a post-hoc round-trip of the f32 run.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from repro.core import (
+    LinearConfig,
+    ScheduleConfig,
+    SparseBatch,
+    init_state,
+    make_round_fn,
+    state_compress,
+    validate_state_dtype,
+)
+from repro.core.linear_trainer import make_lazy_step
+
+DIM = 53
+ROUND_LEN = 8
+
+
+# ---------------------------------------------------------------- round-trips
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    scale=st.floats(1e-3, 1e3),
+    n=st.integers(1, 700),
+    seed=st.integers(0, 2**16),
+)
+def test_bf16_relative_bound(scale, n, seed):
+    """bf16 has 8 significand bits: relative round-trip error <= 2^-8
+    (half an ULP under round-to-nearest)."""
+    x = np.random.RandomState(seed).randn(n).astype(np.float32) * scale
+    rt = np.asarray(state_compress.roundtrip(jnp.asarray(x), "bf16"))
+    assert np.all(np.abs(rt - x) <= np.abs(x) * 2.0**-8 + 1e-30)
+
+
+@settings(max_examples=20, deadline=None)
+@given(hi=st.integers(1, 256), seed=st.integers(0, 2**16))
+def test_bf16_small_integers_exact(hi, seed):
+    """Integers up to 256 are exactly representable in bf16 — the basis of
+    the round_len <= 256 bound for a bf16 psi column."""
+    x = np.random.RandomState(seed).randint(0, hi + 1, size=300).astype(np.float32)
+    rt = np.asarray(state_compress.roundtrip(jnp.asarray(x), "bf16", integer=True))
+    np.testing.assert_array_equal(rt, x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(hi=st.integers(1, 127), seed=st.integers(0, 2**16))
+def test_int8_integers_exact(hi, seed):
+    x = np.random.RandomState(seed).randint(0, hi + 1, size=300).astype(np.float32)
+    rt = np.asarray(state_compress.roundtrip(jnp.asarray(x), "int8", integer=True))
+    np.testing.assert_array_equal(rt, x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    scale=st.floats(1e-6, 1e4),
+    n=st.integers(1, 1000),
+    seed=st.integers(0, 2**16),
+)
+def test_int8_shared_scale_chunk_bound(scale, n, seed):
+    """Shared-scale int8: per-element error <= max_chunk|x| / 254 within
+    each 256-wide chunk (the ragged tail is its own chunk)."""
+    x = np.random.RandomState(seed).randn(n).astype(np.float32) * scale
+    rt = np.asarray(state_compress.roundtrip(jnp.asarray(x), "int8"))
+    C = state_compress.CHUNK
+    for lo in range(0, n, C):
+        xc, rc = x[lo : lo + C], rt[lo : lo + C]
+        bound = np.max(np.abs(xc)) / 254.0
+        assert np.all(np.abs(rc - xc) <= bound * (1 + 1e-6) + 1e-30), (lo, n)
+
+
+def test_f32_is_identity(rng):
+    x = jnp.asarray(rng.randn(257).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(state_compress.roundtrip(x, "f32")), np.asarray(x))
+
+
+# ----------------------------------------------------------------- validation
+
+
+@pytest.mark.parametrize(
+    "state_dtype,round_len,has_psi,ok",
+    [
+        ("f32", 100_000, True, True),
+        ("bf16", 256, True, True),
+        ("bf16", 257, True, False),
+        ("int8", 127, True, True),
+        ("int8", 128, True, False),
+        ("int8", 100_000, False, True),  # no psi column -> no grid bound
+        ("fp4", 8, True, False),  # unknown grid
+    ],
+)
+def test_validate_state_dtype(state_dtype, round_len, has_psi, ok):
+    if ok:
+        validate_state_dtype(state_dtype, round_len, has_psi=has_psi)
+    else:
+        with pytest.raises(ValueError):
+            validate_state_dtype(state_dtype, round_len, has_psi=has_psi)
+
+
+def test_config_rejects_out_of_grid_round_len():
+    """Solver.validate runs eagerly when the step function is built."""
+    cfg = LinearConfig(dim=16, solver="fobos", round_len=300, state_dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        make_round_fn(cfg, "lazy")
+
+
+# ----------------------------------------------------- end-to-end consequences
+
+
+def _cfg(solver, state_dtype, fused=True):
+    return LinearConfig(
+        dim=DIM,
+        solver=solver,
+        lam1=1e-3,
+        lam2=1e-4,
+        round_len=ROUND_LEN,
+        trunc_k=4,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+        backend="reference",
+        fused=fused,
+        state_dtype=state_dtype,
+    )
+
+
+def _mk_rounds(rng, n_rounds, B=2, p=3):
+    out = []
+    for _ in range(n_rounds):
+        idx = rng.randint(0, DIM, size=(ROUND_LEN, B, p)).astype(np.int32)
+        val = rng.uniform(-2.0, 2.0, size=(ROUND_LEN, B, p)).astype(np.float32)
+        y = (rng.uniform(size=(ROUND_LEN, B)) > 0.5).astype(np.float32)
+        out.append(SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y)))
+    return out
+
+
+def _fit(cfg, rounds):
+    round_fn = make_round_fn(cfg, "lazy")
+    state = init_state(cfg)
+    losses = []
+    for rb in rounds:
+        state, step_losses = round_fn(state, rb)
+        losses.append(np.asarray(step_losses))
+    return state, np.concatenate(losses)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+@pytest.mark.parametrize("solver", ["sgd", "fobos", "trunc"])
+@pytest.mark.parametrize("state_dtype", ["bf16", "int8"])
+def test_dp_solvers_bitwise_invariant_to_state_dtype(solver, state_dtype, fused, rng):
+    """psi holds integers in [0, round_len] and round_len passes the grid's
+    validation bound, so compressing the psi column is lossless — the whole
+    fit is bitwise identical to f32 state."""
+    rounds = _mk_rounds(rng, 2)
+    st_c, loss_c = _fit(_cfg(solver, state_dtype, fused), rounds)
+    st_f, loss_f = _fit(_cfg(solver, "f32", fused), rounds)
+    np.testing.assert_array_equal(loss_c, loss_f)
+    np.testing.assert_array_equal(np.asarray(st_c.wpsi), np.asarray(st_f.wpsi))
+    np.testing.assert_array_equal(np.asarray(st_c.b), np.asarray(st_f.b))
+
+
+@pytest.mark.parametrize("state_dtype", ["bf16", "int8"])
+def test_ftrl_single_step_compress_on_write(state_dtype, rng):
+    """From identical state, one compressed ftrl step stores exactly
+    roundtrip(state_dtype) of what the f32 step stores in the z/n columns
+    (compression happens on write; the in-flight arithmetic is f32)."""
+    cfg_c, cfg_f = _cfg("ftrl", state_dtype), _cfg("ftrl", "f32")
+    batch = SparseBatch(
+        idx=jnp.asarray(rng.randint(0, DIM, size=(2, 3)).astype(np.int32)),
+        val=jnp.asarray(rng.uniform(-2.0, 2.0, size=(2, 3)).astype(np.float32)),
+        y=jnp.asarray(np.array([1.0, 0.0], np.float32)),
+    )
+    s_c, _ = make_lazy_step(cfg_c)(init_state(cfg_c), batch)
+    s_f, _ = make_lazy_step(cfg_f)(init_state(cfg_f), batch)
+    for col in (1, 2):  # z, n
+        want = np.asarray(state_compress.roundtrip(jnp.asarray(s_f.wpsi[:, col]), state_dtype))
+        np.testing.assert_array_equal(np.asarray(s_c.wpsi[:, col]), want)
+    # the weight column is never compressed
+    np.testing.assert_array_equal(np.asarray(s_c.wpsi[:, 0]), np.asarray(s_f.wpsi[:, 0]))
+
+
+@pytest.mark.parametrize("state_dtype", ["bf16", "int8"])
+def test_ftrl_multi_round_compressed_stays_close(state_dtype, rng):
+    """Multi-round compressed ftrl stays finite and tracks the f32 run —
+    a sanity bound, not bitwise (z/n quantization error accumulates)."""
+    rounds = _mk_rounds(rng, 3)
+    st_c, loss_c = _fit(_cfg("ftrl", state_dtype), rounds)
+    st_f, loss_f = _fit(_cfg("ftrl", "f32"), rounds)
+    assert np.all(np.isfinite(loss_c))
+    assert np.all(np.isfinite(np.asarray(st_c.wpsi)))
+    np.testing.assert_allclose(loss_c, loss_f, rtol=0, atol=5e-2)
+    np.testing.assert_allclose(
+        np.asarray(st_c.wpsi[:, 0]), np.asarray(st_f.wpsi[:, 0]), rtol=0, atol=5e-2
+    )

@@ -1,6 +1,8 @@
 """Flash-attention Pallas kernel vs the pure-jnp GQA oracle: shape/dtype/
 causality/GQA-ratio sweeps in interpret mode, including the decode case
-(Sq=1 with a position offset)."""
+(Sq=1 with a position offset) and the custom-vjp backward vs jax.grad of
+the oracle."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -51,6 +53,61 @@ def test_flash_matches_oracle(case, dtype, rng):
         np.asarray(got, np.float32), np.asarray(want, np.float32), **tol
     )
     assert got.dtype == dtype and got.shape == (B, H, Sq, hd)
+
+
+GRAD_CASES = [
+    # (B, H, KV, Sq, Skv, hd, causal)
+    (2, 4, 2, 32, 32, 16, True),  # GQA 2:1
+    (1, 4, 4, 24, 40, 32, True),  # ragged, prefill-tail offset
+    (2, 4, 1, 16, 16, 16, False),  # MQA, non-causal
+]
+
+
+@pytest.mark.parametrize("case", GRAD_CASES)
+def test_flash_backward_matches_oracle_grad(case, rng):
+    """The custom-vjp backward kernels vs jax.grad of the einsum oracle:
+    dq/dk/dv agree within float tolerance, including the GQA group-sum and
+    padded ragged shapes (satellite: models.loss_fn no longer pins the
+    reference einsum for training)."""
+    B, H, KV, Sq, Skv, hd, causal = case
+    q = jnp.asarray(rng.randn(B, H, Sq, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(B, KV, Skv, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, KV, Skv, hd), jnp.float32)
+    tang = jnp.asarray(rng.randn(B, H, Sq, hd), jnp.float32)
+    q_off = Skv - Sq if causal else 0
+
+    def f_flash(q, k, v):
+        out = flash_attention(
+            q, k, v, q_off, causal=causal, block_q=16, block_k=16, interpret=True
+        )
+        return jnp.sum(out * tang)
+
+    def f_ref(q, k, v):
+        return jnp.sum(_oracle(q, k, v, causal, q_off) * tang)
+
+    got = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for g, w, name in zip(got, want, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-5, err_msg=name
+        )
+
+
+def test_flash_backward_integer_offset_no_grad(rng):
+    """q_offset is an integer input: grad must flow through q/k/v without
+    demanding a float tangent for it (float0 cotangent)."""
+    q = jnp.asarray(rng.randn(1, 2, 8, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 24, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 24, 16), jnp.float32)
+
+    def f(q):
+        out = flash_attention(
+            q, k, v, 16, causal=True, block_q=8, block_k=8, interpret=True
+        )
+        return jnp.sum(out**2)
+
+    g = jax.grad(f)(q)
+    assert g.shape == q.shape and bool(jnp.all(jnp.isfinite(g)))
 
 
 def test_block_shape_invariance(rng):
