@@ -109,7 +109,10 @@ def main() -> int:
         shown = "absent" if fval is None else f"{fval:.4g}"
         print(f"  {verdict.upper():9s} {path}: baseline {bval:.4g}, fresh {shown}")
     if failures:
-        print(f"FAIL: {failures} gated metric(s) regressed beyond +-{args.tol:.0%}")
+        print(
+            f"FAIL: {failures} gated metric(s) regressed beyond +-{args.tol:.0%} "
+            f"vs baseline {base_path} (re-baseline a trusted run with --update)"
+        )
         return 1
     print("PASS")
     return 0

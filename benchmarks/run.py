@@ -85,6 +85,7 @@ def main() -> None:
             )
 
     steps = 128 if args.fast else 512
+    failed = []
     print("name,us_per_call,derived")
     for name, (fn, _) in SUITES.items():
         if only is not None and name not in only:
@@ -94,7 +95,12 @@ def main() -> None:
                 print(f"{row_name},{us:.2f},{derived}")
                 sys.stdout.flush()
         except Exception as e:  # report and continue: one table failing
+            # must not hide the rest — but the run as a whole still fails
             print(f"{name},ERROR,{type(e).__name__}: {e}")
+            failed.append(name)
+    if failed:
+        print(f"# FAILED suites: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -327,11 +327,22 @@ def current_weights(
     return _solver(cfg).read_weights(cfg, state, hp, _backend(cfg.backend))
 
 
-def make_round_fn(cfg: LinearConfig, mode: str):
+def make_round_fn(cfg: LinearConfig, mode: str, metrics: bool = False):
     """jit'd function running a whole round of steps via lax.scan and, in
     lazy mode, flushing at the boundary.  ``round_batches`` arrays are
-    [R, B, p] with R <= cfg.round_len."""
+    [R, B, p] with R <= cfg.round_len.
+
+    ``metrics=True`` (lazy mode only) returns the instrumented twin from
+    :mod:`repro.obs.instrument` whose carry is ``(LinearState,
+    obs.MetricsState)`` — same step arithmetic (bitwise on the reference
+    backend), plus in-scan lazy-work accounting.  Trace-time flag, deferred
+    import: core never depends on obs unless asked."""
     assert mode in ("lazy", "dense")
+    if metrics:
+        assert mode == "lazy", "metrics instrumentation targets the lazy trainer"
+        from repro.obs import instrument
+
+        return instrument.make_obs_round_fn(cfg)
     step = make_lazy_step(cfg) if mode == "lazy" else make_dense_step(cfg)
 
     @functools.partial(jax.jit, donate_argnums=0)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backend as kernel_backend
+from repro import obs
 from repro.configs import get_arch
 from repro.dist import api as dist_api
 from repro.dist import sharding as dist_sharding
@@ -84,24 +85,26 @@ def serve_engine(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
         ),
         metrics=metrics,
     )
-    engine.warmup()
-    warm_compiles = engine.compile_counts()
+    with obs.span("serve.warmup", tracker=engine.compiles):
+        engine.warmup()
     prompts = rng.randint(0, cfg.vocab_size, size=(requests, prompt_len)).astype(np.int32)
     t0 = time.monotonic()
-    futs = [engine.submit(p, max_new_tokens=new_tokens, arrival=t0) for p in prompts]
-    engine.run()
+    # the engine's core invariant, backend-independent: warmup is the
+    # complete compile set.  Kernel-backend choice is trace-static
+    # (repro.backend), so CI runs this under --backend pallas to prove the
+    # non-default backend adds zero recompiles.
+    with obs.span("serve.traffic", tracker=engine.compiles, requests=requests), \
+            engine.compiles.assert_no_new_compiles("engine steady state"):
+        futs = [engine.submit(p, max_new_tokens=new_tokens, arrival=t0) for p in prompts]
+        engine.run()
     elapsed = time.monotonic() - t0
     snap = metrics.snapshot()
     lat = snap.get("latency_request", {})
     toks = snap["counters"]["tokens_out"]
     run_compiles = engine.compile_counts()
-    # the engine's core invariant, backend-independent: warmup is the
-    # complete compile set.  Kernel-backend choice is trace-static
-    # (repro.backend), so CI runs this under --backend pallas to prove the
-    # non-default backend adds zero recompiles.
-    assert run_compiles == warm_compiles, (
-        f"serving recompiled after warmup: {warm_compiles} -> {run_compiles}"
-    )
+    logger = obs.active_logger()
+    if logger is not None:
+        logger.registry_snapshot(metrics)
     print(f"{cfg.name} [engine]: {requests} reqs x ({prompt_len}+{new_tokens}) over "
           f"{n_slots} slots -> {toks / max(elapsed, 1e-9):.1f} tok/s; "
           f"latency p50 {lat.get('p50_ms', 0):.1f}ms p99 {lat.get('p99_ms', 0):.1f}ms; "
@@ -136,38 +139,40 @@ def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch
 
     # --- warmup: one learn + one predict per bucket shape, plus the flush —
     # after this the compile set is COMPLETE for any traffic mix
-    warm = bow.sample_round(10_000, 1, micro_batch)
-    for b in svc.buckets:
-        svc.learn(flat_batch(warm, b))
-        svc.predict(flat_batch(warm, b))
-    svc.state = svc._flush(svc.state)
-    warm_compiles = svc.compile_counts()
+    with obs.span("serve.warmup", tracker=svc.compiles):
+        warm = bow.sample_round(10_000, 1, micro_batch)
+        for b in svc.buckets:
+            svc.learn(flat_batch(warm, b))
+            svc.predict(flat_batch(warm, b))
+        svc.state = svc._flush(svc.state)
 
     # --- steady state: Poisson-ish online traffic through the queue ---
+    # the LinearService invariant the LM engine also holds: warmup is the
+    # complete compile set — solver and backend choices are trace-static
+    # (repro.solvers / repro.backend), so steady state never recompiles
     rng = np.random.RandomState(seed)
     t0 = time.monotonic()
     served = 0
     chunk_id = 0
-    while served < requests:
-        n = int(rng.randint(1, micro_batch + 1))
-        chunk = bow.sample_round(20_000 + chunk_id, 1, micro_batch)
-        chunk_id += 1
-        for r in range(n):
-            idx, val, y = np.asarray(chunk.idx[0][r]), np.asarray(chunk.val[0][r]), float(chunk.y[0][r])
-            svc.submit_learn(idx, val, y, arrival=0.0)
-        svc.poll(now=1.0, force=True)
-        svc.predict(flat_batch(chunk, n))
-        served += n
+    with obs.span("serve.traffic", tracker=svc.compiles, requests=requests), \
+            svc.compiles.assert_no_new_compiles("linear steady state"):
+        while served < requests:
+            n = int(rng.randint(1, micro_batch + 1))
+            chunk = bow.sample_round(20_000 + chunk_id, 1, micro_batch)
+            chunk_id += 1
+            for r in range(n):
+                idx, val, y = np.asarray(chunk.idx[0][r]), np.asarray(chunk.val[0][r]), float(chunk.y[0][r])
+                svc.submit_learn(idx, val, y, arrival=0.0)
+            svc.poll(now=1.0, force=True)
+            svc.predict(flat_batch(chunk, n))
+            served += n
     elapsed = time.monotonic() - t0
 
     run_compiles = svc.compile_counts()
-    # the LinearService invariant the LM engine also holds: warmup is the
-    # complete compile set — solver and backend choices are trace-static
-    # (repro.solvers / repro.backend), so steady state never recompiles
-    assert run_compiles == warm_compiles, (
-        f"linear service recompiled after warmup: {warm_compiles} -> {run_compiles}"
-    )
     snap = svc.metrics.snapshot()
+    logger = obs.active_logger()
+    if logger is not None:
+        logger.registry_snapshot(svc.metrics)
     print(f"linear[{svc.cfg.solver}/{svc.cfg.backend}]: {served} learn + {served} predict "
           f"examples in {elapsed:.2f}s ({served / max(elapsed, 1e-9):.0f} ex/s each way); "
           f"counters {snap['counters']}; compiles {run_compiles} (unchanged since warmup)")
@@ -257,18 +262,35 @@ def main():
         help="--linear: storage grid for the non-weight state columns "
              "(DESIGN.md §13)",
     )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="RUN.jsonl",
+        help="write a structured JSONL run log (summarize with "
+             "`python -m repro.obs.report`)",
+    )
+    ap.add_argument(
+        "--profile", default=None, metavar="DIR",
+        help="collect a jax profiler trace of the run into DIR",
+    )
     args = ap.parse_args()
     if args.linear:
-        serve_linear(solver=args.solver, backend=args.backend, dim=args.dim,
-                     requests=args.requests or 256, seed=args.seed,
-                     fused=args.fused, state_dtype=args.state_dtype)
+        with obs.run_logger(
+            args.metrics_out, "serve", d=args.dim,
+            linear=True, solver=args.solver, backend=args.backend,
+        ), obs.profile_to(args.profile):
+            serve_linear(solver=args.solver, backend=args.backend, dim=args.dim,
+                         requests=args.requests or 256, seed=args.seed,
+                         fused=args.fused, state_dtype=args.state_dtype)
         return
     if not args.arch:
         ap.error("--arch is required unless --linear")
-    serve(args.arch, reduced=args.reduced, batch=args.batch,
-          prompt_len=args.prompt_len, new_tokens=args.new_tokens, seed=args.seed,
-          mesh_shape=args.mesh, temperature=args.temperature, static=args.static,
-          n_slots=args.slots, requests=args.requests, backend=args.backend)
+    with obs.run_logger(
+        args.metrics_out, "serve",
+        arch=args.arch, static=args.static, backend=args.backend,
+    ), obs.profile_to(args.profile):
+        serve(args.arch, reduced=args.reduced, batch=args.batch,
+              prompt_len=args.prompt_len, new_tokens=args.new_tokens, seed=args.seed,
+              mesh_shape=args.mesh, temperature=args.temperature, static=args.static,
+              n_slots=args.slots, requests=args.requests, backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro import backend as kernel_backend
 from repro import core as lt_core
+from repro import obs
 from repro import solvers as solver_registry
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.data import BowConfig, SyntheticBow
@@ -96,6 +97,19 @@ def main() -> None:
         help="storage grid for the non-weight state columns (psi / ftrl z,n);"
         " bf16/int8 bound round_len for cache-based solvers (DESIGN.md §13)",
     )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="RUN.jsonl",
+        help="write a structured JSONL run log (per-stage spans + compile "
+        "deltas; summarize with `python -m repro.obs.report`)",
+    )
+    ap.add_argument(
+        "--profile",
+        default=None,
+        metavar="DIR",
+        help="collect a jax profiler trace of the sweep into DIR",
+    )
     args = ap.parse_args()
 
     n1, n2 = parse_grid(args.grid)
@@ -137,14 +151,29 @@ def main() -> None:
         f"{args.rounds}x{args.round_len} steps/fold, warm_start={args.warm_start}"
     )
     t0 = time.monotonic()
-    res = kfold_cv(
-        grid,
-        bow,
-        folds=args.folds,
-        rounds_per_fold=args.rounds,
-        batch=args.batch,
-        warm_start=args.warm_start,
-    )
+    # run_path's per-stage spans (compile deltas included) land in the run
+    # log through the active logger run_logger() installs
+    with (
+        obs.run_logger(
+            args.metrics_out,
+            "sweep",
+            d=args.dim,
+            grid=args.grid,
+            folds=args.folds,
+            warm_start=args.warm_start,
+            solvers=",".join(solvers) if solvers else args.flavor,
+        ),
+        obs.profile_to(args.profile),
+        obs.span("sweep.kfold_cv"),
+    ):
+        res = kfold_cv(
+            grid,
+            bow,
+            folds=args.folds,
+            rounds_per_fold=args.rounds,
+            batch=args.batch,
+            warm_start=args.warm_start,
+        )
     elapsed = time.monotonic() - t0
     # k fits on (k-1) chunks each + the final whole-stream refit on k chunks
     steps = args.folds**2 * args.rounds * args.round_len * grid.n_cfg

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backend as kernel_backend
+from repro import obs
 from repro import solvers
 from repro.checkpoint import checkpointer
 from repro.configs import get_arch
@@ -79,6 +80,8 @@ def train(
     mesh_shape: str | None = None,
     solver: str | None = None,
     reg_fused: bool | None = None,
+    metrics_interval: int = 50,
+    profile: str | None = None,
 ):
     cfg = get_arch(arch)
     if reduced:
@@ -149,20 +152,61 @@ def train(
 
     losses = []
     t0 = time.time()
-    for t in range(start, steps):
-        state, metrics = step_fn(state, batch_fn(t))
-        losses.append(float(metrics["loss"]))
-        if state.lazy is not None and int(state.lazy.i) >= cfg.reg_round_len:
-            state = flush_fn(state)
-        if log_every and (t + 1) % log_every == 0:
-            rate = (t + 1 - start) / (time.time() - t0)
-            print(f"step {t+1}/{steps} loss={losses[-1]:.4f} "
-                  f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.2f} "
-                  f"({rate:.1f} steps/s)", flush=True)
-        if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
-            state = flush_fn(state)  # no cross-round debt inside checkpoints
-            checkpointer.save(ckpt_dir, t + 1, state, extra_meta={"next_step": t + 1, "seed": seed})
-            checkpointer.keep_last(ckpt_dir, 3)
+    # host-side lazy-work accounting for the embedding regularizer: each
+    # token slot touches one embedding row per step vs. the dense baseline's
+    # vocab_size rows — the LM-trainer analogue of the linear trainer's
+    # in-graph MetricsState (tokens are host-visible, so no device pull)
+    touched = examples = flushes = 0
+
+    def lazy_summary(steps_done: int, nnz: int) -> dict:
+        return {
+            "steps": steps_done,
+            "examples": examples,
+            "touched_coords": touched,
+            "flushes": flushes,
+            "nnz": nnz,
+            "d": int(cfg.vocab_size),
+            "work_ratio": touched / (cfg.vocab_size * max(steps_done, 1)),
+            "loss_ema": float(np.mean(losses[-20:])) if losses else 0.0,
+            "solver": cfg.reg_solver or cfg.reg_flavor,
+        }
+
+    def emb_nnz(st) -> int:
+        if st.lazy is None:
+            return 0
+        from repro.optim import lazy_rows
+
+        return int(lazy_rows.row_nnz(st.params["embedding"], st.lazy, lam1=cfg.lam1))
+
+    logger = obs.active_logger()
+    with obs.profile_to(profile):
+        for t in range(start, steps):
+            with obs.step_annotation(t):
+                state, metrics = step_fn(state, batch_fn(t))
+            losses.append(float(metrics["loss"]))
+            if state.lazy is not None:
+                touched += batch_size * seq_len
+                examples += batch_size
+            if state.lazy is not None and int(state.lazy.i) >= cfg.reg_round_len:
+                state = flush_fn(state)
+                flushes += 1
+                if logger is not None:
+                    logger.event("flush", step=t + 1, flushes=flushes, nnz=emb_nnz(state))
+            if log_every and (t + 1) % log_every == 0:
+                rate = (t + 1 - start) / (time.time() - t0)
+                print(f"step {t+1}/{steps} loss={losses[-1]:.4f} "
+                      f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.2f} "
+                      f"({rate:.1f} steps/s)", flush=True)
+            if logger is not None and metrics_interval and (t + 1) % metrics_interval == 0:
+                logger.metrics(lazy_summary(t + 1 - start, emb_nnz(state)), step=t + 1)
+            if ckpt_dir and ckpt_every and (t + 1) % ckpt_every == 0:
+                state = flush_fn(state)  # no cross-round debt inside checkpoints
+                checkpointer.save(ckpt_dir, t + 1, state, extra_meta={"next_step": t + 1, "seed": seed})
+                checkpointer.keep_last(ckpt_dir, 3)
+    if logger is not None and steps > start and (
+        not metrics_interval or (steps - start) % metrics_interval
+    ):  # final cumulative line, unless the periodic one just covered it
+        logger.metrics(lazy_summary(steps - start, emb_nnz(state)), step=steps)
     return state, losses
 
 
@@ -205,8 +249,27 @@ def main():
              "(--no-reg-fused: split catchup-then-step; default: the arch's "
              "reg_fused)",
     )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="RUN.jsonl",
+        help="write a structured JSONL run log (summarize with "
+             "`python -m repro.obs.report`)",
+    )
+    ap.add_argument(
+        "--metrics-interval", type=int, default=50, metavar="N",
+        help="steps between periodic metrics lines in the run log",
+    )
+    ap.add_argument(
+        "--profile", default=None, metavar="DIR",
+        help="collect a jax profiler trace of the run into DIR",
+    )
     args = ap.parse_args()
-    with kernel_backend.use_backend(args.backend):
+    d = get_arch(args.arch)
+    if args.reduced:
+        d = d.reduced()
+    with obs.run_logger(
+        args.metrics_out, "train", d=d.vocab_size,
+        arch=args.arch, reduced=args.reduced, steps=args.steps,
+    ), kernel_backend.use_backend(args.backend), obs.span("train.run"):
         _, losses = train(
             args.arch,
             reduced=args.reduced,
@@ -220,6 +283,8 @@ def main():
             mesh_shape=args.mesh,
             solver=args.solver,
             reg_fused=args.reg_fused,
+            metrics_interval=args.metrics_interval,
+            profile=args.profile,
         )
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
 

@@ -1,0 +1,81 @@
+"""Compile-cache introspection: the zero-recompile invariant as a reusable
+primitive.
+
+``ServeEngine.compile_counts()`` proved the pattern — after warmup, the jit
+cache sizes of the serving step functions must never grow, whatever traffic
+arrives.  The same property holds (and is asserted) for the LinearService
+jits, the warm-started sweep path's shared round program, the fused-step
+kernels, and the metrics-instrumented trainer; this module lifts the
+mechanism out of the engine so any layer can state it:
+
+    tracker = CompileTracker({"step": jitted_step, "flush": jitted_flush})
+    ... warmup ...
+    with tracker.assert_no_new_compiles("steady-state traffic"):
+        ... serve ...
+
+A violated budget raises :class:`RecompileError` naming the tag and the
+per-function before/after counts — the failure mode it catches (a shape or
+trace-time constant leaking into a hot path) is otherwise a silent 100x
+slowdown.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Dict, Mapping, Optional
+
+
+class RecompileError(AssertionError):
+    """A compile budget was exceeded (new jit cache entries appeared)."""
+
+
+def cache_size(fn) -> int:
+    """jit-cache entry count of one jitted callable (0 when untraceable —
+    a plain function or a jax version without the private hook)."""
+    try:
+        return int(fn._cache_size())
+    except (AttributeError, TypeError):
+        return 0
+
+
+def compile_counts(fns: Mapping[str, Callable]) -> Dict[str, int]:
+    """Name -> jit-cache entry count for a dict of jitted functions."""
+    return {name: cache_size(fn) for name, fn in fns.items()}
+
+
+class CompileTracker:
+    """A named set of jitted functions whose compile counts can be
+    snapshotted and asserted against."""
+
+    def __init__(self, fns: Optional[Mapping[str, Callable]] = None):
+        self._fns: Dict[str, Callable] = dict(fns or {})
+
+    def register(self, name: str, fn: Callable) -> Callable:
+        """Track ``fn`` under ``name`` (replacing any previous entry — how
+        a rebuilt jit, e.g. after swap_weights, re-registers).  Returns the
+        function so registration can wrap a jit call site."""
+        self._fns[name] = fn
+        return fn
+
+    def counts(self) -> Dict[str, int]:
+        return compile_counts(self._fns)
+
+    @contextlib.contextmanager
+    def assert_no_new_compiles(self, tag: str = ""):
+        """Context manager: the tracked functions must not gain jit cache
+        entries inside the block."""
+        before = self.counts()
+        yield before
+        after = self.counts()
+        if after != before:
+            grew = {k: (before.get(k, 0), after[k]) for k in after if after[k] != before.get(k, 0)}
+            raise RecompileError(
+                f"recompile budget violated{f' ({tag})' if tag else ''}: "
+                f"{grew} (before -> after jit cache entries)"
+            )
+
+
+@contextlib.contextmanager
+def assert_no_new_compiles(fns: Mapping[str, Callable], tag: str = ""):
+    """One-shot form over a plain dict of jitted functions."""
+    with CompileTracker(fns).assert_no_new_compiles(tag) as before:
+        yield before

@@ -1,0 +1,47 @@
+"""In-graph event tap for *rare* events: flush, round boundary, weight
+swap — anything worth a timestamped JSONL line but far too infrequent to
+justify a device pull.
+
+The periodic counters ride the scan carry (:mod:`repro.obs.metrics_state`)
+because they fire every step; a flush fires once per ``round_len`` steps,
+so it can afford an ``io_callback`` hop to the host, where the handler
+forwards it to the active RunLogger as an ``event`` line with the live
+scalar payload (global step, round step, nnz ...).
+
+``tap`` is trace-static in *whether* it exists (the instrumented round
+factory decides at build time) and dynamic in its payload; the callback is
+ordered so flush events interleave correctly with host-side emits.  With
+no active logger at fire time the event is dropped on the host — the
+device side is identical either way, preserving the zero-recompile and
+bitwise-parity properties of the instrumented program.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from . import sinks
+
+
+def _dispatch(name: str, keys, values) -> np.ndarray:
+    logger = sinks.active_logger()
+    if logger is not None:
+        logger.event(name, **{k: v.item() for k, v in zip(keys, values)})
+    return np.zeros((), np.int32)
+
+
+def tap(name: str, payload: Dict[str, jnp.ndarray]) -> None:
+    """Emit a rare event from inside a jitted program.  ``payload`` maps
+    field names to scalar arrays; delivery targets whatever RunLogger is
+    active when the compiled program *runs* (not when it traces)."""
+    keys = tuple(sorted(payload))
+    values = [jnp.asarray(payload[k]) for k in keys]
+    io_callback(
+        lambda *vs: _dispatch(name, keys, vs),
+        jnp.zeros((), jnp.int32),  # dummy result keeps the call ordered-able
+        *values,
+        ordered=True,
+    )

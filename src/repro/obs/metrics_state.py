@@ -1,0 +1,154 @@
+"""Jit-safe in-graph metrics: a fixed-shape pytree of counters threaded
+through the compiled training scan.
+
+The paper's headline claim is about *work avoided* — touched coordinates
+vs. ``d`` per step — which is only observable from inside the step (the
+host never sees individual scan iterations).  ``MetricsState`` rides the
+scan carry next to the solver state: every field is a fixed-shape jnp
+array, every update is pure arithmetic on values the step already
+computes, so enabling metrics adds zero recompiles and (because nothing
+feeds back into the solver arithmetic) leaves the fit bitwise unchanged
+on the reference backend (pinned by tests/obs).
+
+What accumulates per step:
+
+* ``touched`` / ``padded`` — real (val != 0) vs padding feature slots; the
+  numerator of the lazy-vs-dense work ratio ``touched / (d * steps)``.
+* ``span_hist`` — log2-bucketed histogram of catch-up span lengths: how
+  stale each touched row was when this step brought it current
+  (:meth:`repro.solvers.api.Solver.touch_spans`; apply-at-read solvers owe
+  nothing and report zeros).  Bucket 0 is span == 0; bucket k >= 1 holds
+  spans in ``[2^(k-1), 2^k)``; the last bucket absorbs the tail.
+* ``updates`` — scatter-update slots written (per-solver update count; the
+  solver itself is trace-static, so the host labels it at export).
+* ``loss_sum`` / ``loss_ema`` — training-loss trajectory (EMA coefficient
+  is a trace-time constant).
+* ``flushes`` / ``nnz`` — round-boundary count and the weight nnz gauge
+  recorded at each flush (the only O(d) statistic, measured exactly where
+  the trainer already pays O(d)).
+
+Device -> host: :func:`summarize` turns a pulled state into the flat dict
+:meth:`repro.obs.registry.MetricsRegistry.pull` and the JSONL sinks absorb.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: log2 span buckets: 0, [1,2), [2,4), ... — 26 buckets cover every legal
+#: round_len (< 2^24, the psi-exactness bound), trace-time constant.
+SPAN_BUCKETS = 26
+
+#: EMA coefficient for the loss trajectory (trace-time constant).
+LOSS_EMA_COEF = 0.02
+
+
+class MetricsState(NamedTuple):
+    steps: jnp.ndarray  # scalar i32: steps accumulated since init
+    examples: jnp.ndarray  # scalar i32
+    touched: jnp.ndarray  # scalar i32: real (val != 0) feature slots
+    padded: jnp.ndarray  # scalar i32: padding slots carried by the batches
+    updates: jnp.ndarray  # scalar i32: scatter-update slots written
+    span_hist: jnp.ndarray  # [SPAN_BUCKETS] i32
+    loss_sum: jnp.ndarray  # scalar f32
+    loss_ema: jnp.ndarray  # scalar f32
+    flushes: jnp.ndarray  # scalar i32
+    nnz: jnp.ndarray  # scalar i32: |w| > 0 count at the last flush
+
+
+def init_metrics() -> MetricsState:
+    # distinct buffers per field: the round fn donates its carry, and a
+    # shared zeros() buffer would be donated twice
+    def z32():
+        return jnp.zeros((), jnp.int32)
+
+    def zf():
+        return jnp.zeros((), jnp.float32)
+
+    return MetricsState(
+        steps=z32(),
+        examples=z32(),
+        touched=z32(),
+        padded=z32(),
+        updates=z32(),
+        span_hist=jnp.zeros((SPAN_BUCKETS,), jnp.int32),
+        loss_sum=zf(),
+        loss_ema=zf(),
+        flushes=z32(),
+        nnz=z32(),
+    )
+
+
+def span_bucket(spans: jnp.ndarray) -> jnp.ndarray:
+    """Bucket index per span: 0 for span <= 0, else floor(log2(span)) + 1,
+    clipped to the last bucket.  Exact for every span < 2^24 (log2 of an
+    exactly-representable f32 power of two is exact; between powers the
+    floor is unaffected by the last-ulp error)."""
+    s = jnp.maximum(spans.astype(jnp.float32), 1.0)
+    b = jnp.floor(jnp.log2(s)).astype(jnp.int32) + 1
+    return jnp.where(spans <= 0, 0, jnp.minimum(b, SPAN_BUCKETS - 1))
+
+
+def record_step(m: MetricsState, spans: jnp.ndarray, batch, loss: jnp.ndarray) -> MetricsState:
+    """Accumulate one step's observations: ``spans`` is the per-slot
+    catch-up debt (``Solver.touch_spans``, flat [B*p]), ``batch`` the
+    SparseBatch the step consumed, ``loss`` its mean loss.  Pure — called
+    next to the step inside the scan; never feeds back into it."""
+    val = batch.val.reshape(-1)
+    real = (val != 0.0).astype(jnp.int32)
+    n_real = jnp.sum(real)
+    n_slots = jnp.asarray(val.shape[0], jnp.int32)
+    # histogram only the real slots (padding rows are touched but inert)
+    hist = m.span_hist.at[span_bucket(spans.reshape(-1))].add(real)
+    loss = jnp.asarray(loss, jnp.float32)
+    c = jnp.float32(LOSS_EMA_COEF)
+    ema = jnp.where(m.steps == 0, loss, (1.0 - c) * m.loss_ema + c * loss)
+    return m._replace(
+        steps=m.steps + 1,
+        examples=m.examples + jnp.asarray(batch.y.shape[0], jnp.int32),
+        touched=m.touched + n_real,
+        padded=m.padded + (n_slots - n_real),
+        updates=m.updates + n_slots,
+        span_hist=hist,
+        loss_sum=m.loss_sum + loss,
+        loss_ema=ema,
+    )
+
+
+def record_flush(m: MetricsState, weights: jnp.ndarray) -> MetricsState:
+    """Round-boundary observation: count the flush and gauge the nnz of
+    the (just brought current) weights — O(d) exactly where the trainer
+    already pays O(d)."""
+    return m._replace(
+        flushes=m.flushes + 1,
+        nnz=jnp.sum(jnp.abs(weights) > 0.0).astype(jnp.int32),
+    )
+
+
+def summarize(m: MetricsState, dim: int, solver: str = "") -> Dict[str, object]:
+    """Flat host dict of a pulled MetricsState: counters as Python ints,
+    derived gauges (work ratio, loss mean/EMA) as floats — the shape
+    ``MetricsRegistry.pull`` and the JSONL metrics events absorb.  ``dim``
+    is the dense coordinate count the ratio divides by."""
+    steps = int(np.asarray(m.steps))
+    touched = int(np.asarray(m.touched))
+    dense = dim * max(steps, 1)
+    out: Dict[str, object] = {
+        "steps": steps,
+        "examples": int(np.asarray(m.examples)),
+        "touched_coords": touched,
+        "padded_slots": int(np.asarray(m.padded)),
+        "update_slots": int(np.asarray(m.updates)),
+        "flushes": int(np.asarray(m.flushes)),
+        "nnz": int(np.asarray(m.nnz)),
+        "d": int(dim),
+        "work_ratio": touched / dense,
+        "loss_mean": float(np.asarray(m.loss_sum)) / max(steps, 1),
+        "loss_ema": float(np.asarray(m.loss_ema)),
+        "span_hist": [int(v) for v in np.asarray(m.span_hist)],
+    }
+    if solver:
+        out["solver"] = solver
+    return out

@@ -1,0 +1,137 @@
+"""Host-side metrics registry: counters, gauges, and histograms with
+p50/p99 summaries — the single accumulator every layer reports into
+(serving request latencies, device pulls of the in-graph
+:class:`~repro.obs.metrics_state.MetricsState`, benchmark counters).
+
+Plain in-process Python; nothing here touches jax.  The jit-safe
+counterpart that lives *inside* compiled programs is
+:mod:`repro.obs.metrics_state`; the bridge between the two is
+:meth:`MetricsRegistry.pull` (absolute device counters -> registry).
+
+``repro.serving.metrics.ServingMetrics`` is a thin backwards-compat shim
+over this class (it adds the latency/queue-depth vocabulary and the
+BENCH_serving snapshot schema); new code should talk to the registry
+directly.
+"""
+from __future__ import annotations
+
+import re
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class MetricsRegistry:
+    """Counters (monotonic), gauges (last value), histograms (observations
+    summarized as count/mean/p50/p99/max)."""
+
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self.t_start = clock()
+        self.counters: Dict[str, int] = defaultdict(int)
+        self.gauges: Dict[str, float] = {}
+        self._hist: Dict[str, List[float]] = defaultdict(list)
+
+    # -- recording ----------------------------------------------------------
+
+    def inc(self, name: str, n: int = 1) -> None:
+        self.counters[name] += n
+
+    def set_counter(self, name: str, total: int) -> None:
+        """Absolute cumulative value — how device pulls land: the in-graph
+        counters are already running totals, so a pull *replaces* rather
+        than increments (pulling twice must not double-count)."""
+        self.counters[name] = int(total)
+
+    def gauge(self, name: str, value: float) -> None:
+        self.gauges[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        self._hist[name].append(float(value))
+
+    def pull(self, scalars: Dict[str, float], prefix: str = "") -> None:
+        """Absorb a flat dict of device-pulled scalars: int-valued entries
+        become absolute counters, float-valued entries gauges."""
+        for key, v in scalars.items():
+            name = f"{prefix}{key}"
+            if isinstance(v, bool):
+                continue
+            if isinstance(v, (int, np.integer)):
+                self.set_counter(name, int(v))
+            elif isinstance(v, (float, np.floating)):
+                self.gauge(name, float(v))
+            # non-scalars (lists, strings, nested dicts) belong to the
+            # JSONL sinks, not the registry
+
+    def reset_clock(self, now: Optional[float] = None) -> None:
+        """Restart the rate window (e.g. after warmup compiles, which would
+        otherwise dominate elapsed_s and every *_per_s rate)."""
+        self.t_start = now if now is not None else self._clock()
+
+    # -- reading ------------------------------------------------------------
+
+    def elapsed(self, now: Optional[float] = None) -> float:
+        return (now if now is not None else self._clock()) - self.t_start
+
+    def hist_summary(self, name: str, scale: float = 1.0) -> Dict[str, float]:
+        """count/mean/p50/p99/max of a histogram (empty dict when unseen).
+        ``scale`` converts units at read (e.g. 1e3: seconds -> ms)."""
+        xs = self._hist.get(name)
+        if not xs:
+            return {}
+        arr = np.asarray(xs, dtype=np.float64) * scale
+        return {
+            "count": int(arr.size),
+            "mean": float(arr.mean()),
+            "p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "max": float(arr.max()),
+        }
+
+    def histogram_names(self) -> tuple:
+        return tuple(sorted(self._hist))
+
+    def snapshot(self, now: Optional[float] = None) -> Dict[str, object]:
+        """Everything at once, JSON-serializable: counters + their rates
+        over the window, gauges, histogram summaries."""
+        elapsed = max(self.elapsed(now), 1e-9)
+        out: Dict[str, object] = {
+            "elapsed_s": elapsed,
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+        }
+        for name, total in self.counters.items():
+            out[f"{name}_per_s"] = total / elapsed
+        for name in self._hist:
+            out[f"hist_{name}"] = self.hist_summary(name)
+        return out
+
+    # -- export -------------------------------------------------------------
+
+    def to_prometheus(self, prefix: str = "repro") -> str:
+        """Prometheus text exposition: counters as ``*_total``, gauges
+        plain, histograms as quantile-labelled summaries."""
+        lines: List[str] = []
+
+        def _name(*parts):
+            return re.sub(r"[^a-zA-Z0-9_]", "_", "_".join(p for p in parts if p))
+
+        for name in sorted(self.counters):
+            m = _name(prefix, name, "total")
+            lines.append(f"# TYPE {m} counter")
+            lines.append(f"{m} {self.counters[name]}")
+        for name in sorted(self.gauges):
+            m = _name(prefix, name)
+            lines.append(f"# TYPE {m} gauge")
+            lines.append(f"{m} {self.gauges[name]}")
+        for name in sorted(self._hist):
+            m = _name(prefix, name)
+            s = self.hist_summary(name)
+            lines.append(f"# TYPE {m} summary")
+            lines.append(f'{m}{{quantile="0.5"}} {s["p50"]}')
+            lines.append(f'{m}{{quantile="0.99"}} {s["p99"]}')
+            lines.append(f"{m}_sum {s['mean'] * s['count']}")
+            lines.append(f"{m}_count {s['count']}")
+        return "\n".join(lines) + "\n"

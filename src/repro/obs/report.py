@@ -1,0 +1,186 @@
+"""``python -m repro.obs.report RUN.jsonl`` — turn a run's JSONL event log
+into the paper-style lazy-work table: touched vs. dense coordinate work,
+the effective update speedup, the catch-up span histogram, and the weight
+nnz trajectory across flushes.
+
+``--check`` validates the file against :mod:`repro.obs.schema` and exits
+nonzero on any violation (CI's obs-smoke step runs this against the logs
+the launch CLIs emit).  ``--json`` prints the summary dict instead of the
+table, for scripted consumers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+from . import schema
+
+
+def _metrics_events(events: List[dict]) -> List[dict]:
+    return [e for e in events if e.get("kind") == "metrics" and isinstance(e.get("data"), dict)]
+
+
+def _last_lazy_metrics(events: List[dict]) -> Optional[dict]:
+    """The final metrics event carrying in-graph lazy-work counters (the
+    cumulative MetricsState summary — identified by touched_coords)."""
+    for e in reversed(_metrics_events(events)):
+        if "touched_coords" in e["data"]:
+            return e
+    return None
+
+
+def nnz_trajectory(events: List[dict]) -> List[Dict[str, int]]:
+    """(step, nnz) points in file order, from flush events and periodic
+    metrics pulls (whichever the run emitted)."""
+    points: List[Dict[str, int]] = []
+    for e in events:
+        kind = e.get("kind")
+        data = e.get("data") if isinstance(e.get("data"), dict) else {}
+        if kind == "event" and e.get("name") == "flush" and "nnz" in data:
+            points.append({"step": int(data.get("step", -1)), "nnz": int(data["nnz"])})
+        elif kind == "metrics" and "nnz" in data and "touched_coords" in data:
+            points.append(
+                {"step": int(e.get("step", data.get("steps", -1))), "nnz": int(data["nnz"])}
+            )
+    return points
+
+
+def span_summary(events: List[dict]) -> Dict[str, Dict[str, float]]:
+    """Per span name: call count and total wall seconds."""
+    out: Dict[str, Dict[str, float]] = {}
+    for e in events:
+        if e.get("kind") != "span":
+            continue
+        s = out.setdefault(e["name"], {"count": 0, "total_s": 0.0})
+        s["count"] += 1
+        s["total_s"] += float(e["dur_s"])
+    return out
+
+
+def summarize_run(events: List[dict]) -> Dict[str, object]:
+    """The report's data model: run identity, lazy-work accounting, nnz
+    trajectory, span totals.  Degrades to partial output when a run never
+    emitted lazy counters (e.g. a serve-only log)."""
+    meta = events[0] if events and events[0].get("kind") == "run_meta" else {}
+    out: Dict[str, object] = {
+        "program": meta.get("program", "?"),
+        "meta": meta.get("meta", {}),
+        "spans": span_summary(events),
+        "nnz_trajectory": nnz_trajectory(events),
+    }
+    last = _last_lazy_metrics(events)
+    if last is not None:
+        data = last["data"]
+        d = int(data.get("d") or meta.get("d") or 0)
+        steps = int(data.get("steps", 0))
+        touched = int(data.get("touched_coords", 0))
+        dense = d * max(steps, 1)
+        out["lazy_work"] = {
+            "d": d,
+            "steps": steps,
+            "examples": int(data.get("examples", 0)),
+            "touched_coords": touched,
+            "dense_coords": dense,
+            "work_ratio": touched / dense if dense else float("nan"),
+            "effective_speedup": dense / touched if touched else float("inf"),
+            "flushes": int(data.get("flushes", 0)),
+            "nnz": int(data.get("nnz", 0)),
+            "loss_mean": data.get("loss_mean"),
+            "loss_ema": data.get("loss_ema"),
+            "solver": data.get("solver", ""),
+            "span_hist": data.get("span_hist", []),
+        }
+    return out
+
+
+def _fmt_hist(hist: List[int]) -> List[str]:
+    """Readable nonzero span buckets: 'span 0', '[1,2)', '[2,4)', ..."""
+    rows = []
+    for k, n in enumerate(hist):
+        if not n:
+            continue
+        label = "span 0" if k == 0 else f"[{2 ** (k - 1)},{2 ** k})"
+        rows.append(f"  {label:>14}  {n}")
+    return rows
+
+
+def render(summary: Dict[str, object]) -> str:
+    lines = [f"run: {summary['program']}"]
+    for k, v in sorted(summary.get("meta", {}).items()):
+        lines.append(f"  {k}: {v}")
+    lw = summary.get("lazy_work")
+    if lw:
+        lines.append("")
+        lines.append("lazy-work accounting" + (f" ({lw['solver']})" if lw.get("solver") else ""))
+        lines.append(f"  {'steps':<22}{lw['steps']}")
+        lines.append(f"  {'examples':<22}{lw['examples']}")
+        lines.append(f"  {'d':<22}{lw['d']}")
+        lines.append(f"  {'touched coords':<22}{lw['touched_coords']}")
+        lines.append(f"  {'dense coords (d*T)':<22}{lw['dense_coords']}")
+        lines.append(f"  {'work ratio':<22}{lw['work_ratio']:.6f}")
+        lines.append(f"  {'effective speedup':<22}{lw['effective_speedup']:.1f}x")
+        lines.append(f"  {'flushes':<22}{lw['flushes']}")
+        lines.append(f"  {'weight nnz':<22}{lw['nnz']}")
+        if lw.get("loss_mean") is not None:
+            lines.append(f"  {'loss mean / ema':<22}{lw['loss_mean']:.6f} / {lw['loss_ema']:.6f}")
+        hist_rows = _fmt_hist(lw.get("span_hist", []))
+        if hist_rows:
+            lines.append("")
+            lines.append("catch-up span histogram (touched slots per span bucket)")
+            lines.extend(hist_rows)
+    traj = summary.get("nnz_trajectory", [])
+    if traj:
+        lines.append("")
+        lines.append("nnz trajectory")
+        for p in traj:
+            step = p["step"]
+            lines.append(f"  step {step if step >= 0 else '?':>8}  nnz {p['nnz']}")
+    spans = summary.get("spans", {})
+    if spans:
+        lines.append("")
+        lines.append("spans")
+        for name in sorted(spans):
+            s = spans[name]
+            lines.append(f"  {name:<28} x{s['count']:<6} {s['total_s']:.3f}s")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize a repro.obs JSONL run log (paper-style lazy-work table).",
+    )
+    ap.add_argument("path", help="JSONL run log (launch CLIs' --metrics-out)")
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate against the event schema; exit 1 on any violation",
+    )
+    ap.add_argument(
+        "--json", action="store_true", help="print the summary as JSON instead of the table"
+    )
+    args = ap.parse_args(argv)
+
+    events, errors = schema.load(args.path)
+    if args.check:
+        if errors:
+            for e in errors:
+                print(f"SCHEMA: {e}", file=sys.stderr)
+            print(f"FAIL: {args.path}: {len(errors)} schema violation(s)", file=sys.stderr)
+            return 1
+        print(f"OK: {args.path}: {len(events)} events, schema clean")
+        return 0
+    for e in errors:
+        print(f"warning: {e}", file=sys.stderr)
+    summary = summarize_run(events)
+    if args.json:
+        print(json.dumps(summary, indent=2))
+    else:
+        print(render(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

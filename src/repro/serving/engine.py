@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import ModelFns
+from repro.obs.compile_tracker import CompileTracker
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import AdmissionQueue, Request, RequestFuture
 
@@ -134,20 +135,20 @@ class ServeEngine:
 
             return jax.tree.map(wr, cache, pcache)
 
-        self._prefill = jax.jit(prefill_fn)
-        self._insert = jax.jit(insert_fn, donate_argnums=0)
-        self._step = jax.jit(step_fn, donate_argnums=1)
+        self.compiles = CompileTracker()
+        self._prefill = self.compiles.register("prefill", jax.jit(prefill_fn))
+        self._insert = self.compiles.register("insert", jax.jit(insert_fn, donate_argnums=0))
+        self._step = self.compiles.register("step", jax.jit(step_fn, donate_argnums=1))
 
     # -- introspection ------------------------------------------------------
 
     def compile_counts(self) -> Dict[str, int]:
         """jit-cache entry counts: after warmup these must not grow no
-        matter what traffic is served (the zero-recompile property)."""
-        return {
-            "prefill": self._prefill._cache_size(),
-            "insert": self._insert._cache_size(),
-            "step": self._step._cache_size(),
-        }
+        matter what traffic is served (the zero-recompile property).
+        ``self.compiles`` is the obs tracker behind it —
+        ``engine.compiles.assert_no_new_compiles("serve")`` wraps a traffic
+        window in the invariant directly."""
+        return self.compiles.counts()
 
     def active_count(self) -> int:
         return int(self._active.sum())

@@ -30,6 +30,7 @@ from repro import backend as kernel_backend
 from repro import solvers as solver_registry
 from repro.core import linear_trainer as lt
 from repro.core.linear_trainer import LinearConfig, SparseBatch
+from repro.obs.compile_tracker import CompileTracker
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import AdmissionQueue
 
@@ -92,19 +93,24 @@ class LinearService:
         from __init__ and from a cfg-changing swap_weights.  self.cfg.backend
         is always concrete here (__init__ pins it), so all three jits route
         through the same kernel backend; it is never a jit argument, so the
-        compile-count bound below is backend-independent."""
-        self._step = jax.jit(lt.make_lazy_step(self.cfg), donate_argnums=0)
-        self._flush = jax.jit(functools.partial(lt.flush, self.cfg), donate_argnums=0)
-        self._predict = jax.jit(functools.partial(lt.predict_proba_sparse, self.cfg))
+        compile-count bound below is backend-independent.  A fresh tracker
+        per build: a swap_weights rebuild deliberately resets the baseline
+        (it costs one compile per function, by design)."""
+        self.compiles = CompileTracker()
+        self._step = self.compiles.register(
+            "step", jax.jit(lt.make_lazy_step(self.cfg), donate_argnums=0)
+        )
+        self._flush = self.compiles.register(
+            "flush", jax.jit(functools.partial(lt.flush, self.cfg), donate_argnums=0)
+        )
+        self._predict = self.compiles.register(
+            "predict", jax.jit(functools.partial(lt.predict_proba_sparse, self.cfg))
+        )
 
     # -- introspection ------------------------------------------------------
 
     def compile_counts(self) -> dict:
-        return {
-            "step": self._step._cache_size(),
-            "flush": self._flush._cache_size(),
-            "predict": self._predict._cache_size(),
-        }
+        return self.compiles.counts()
 
     def current_weights(self) -> np.ndarray:
         return np.asarray(lt.current_weights(self.cfg, self.state))

@@ -1,60 +1,60 @@
-"""Serving counters shared by every endpoint: throughput, queue depth, and
-request-latency percentiles.  Plain in-process accumulators — the snapshot
-dict is what benchmarks serialize (BENCH_serving.json) and what the CLI
-prints after a run; nothing here touches jax.
+"""Serving counters shared by every endpoint — now a thin vocabulary shim
+over :class:`repro.obs.MetricsRegistry`.
+
+The registry owns the accumulators (counters / gauges / histograms with
+p50-p99); this class keeps the serving-flavored surface the engines and
+benchmarks speak — ``count`` / ``record_latency`` / ``sample_queue_depth``
+— and the exact snapshot schema BENCH_serving.json is baselined on
+(``latency_{kind}`` with ``*_ms`` keys, ``queue_depth.{mean,max}``):
+``benchmarks/check_regression.py`` gates on those keys, so the shim must
+keep emitting them bit-for-bit shaped.  New code should talk to a
+``MetricsRegistry`` directly.
 """
 from __future__ import annotations
 
 import time
-from collections import defaultdict
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-import numpy as np
+from repro.obs.registry import MetricsRegistry
+
+#: histogram-name prefix separating latency kinds from other observations
+_LAT = "latency_"
+_DEPTH = "queue_depth"
 
 
-class ServingMetrics:
+class ServingMetrics(MetricsRegistry):
     def __init__(self, clock=time.monotonic):
-        self._clock = clock
-        self.t_start = clock()
-        self.counters: Dict[str, int] = defaultdict(int)
-        self._latencies: Dict[str, List[float]] = defaultdict(list)
-        self._depth_samples: List[int] = []
+        super().__init__(clock=clock)
 
-    def reset_clock(self, now: Optional[float] = None) -> None:
-        """Restart the throughput window (e.g. after warmup compiles, which
-        would otherwise dominate elapsed_s and every *_per_s rate)."""
-        self.t_start = now if now is not None else self._clock()
-
-    # -- recording ----------------------------------------------------------
+    # -- the serving vocabulary (backwards-compat surface) -------------------
 
     def count(self, name: str, n: int = 1) -> None:
-        self.counters[name] += n
+        self.inc(name, n)
 
     def record_latency(self, kind: str, seconds: float) -> None:
-        self._latencies[kind].append(float(seconds))
+        self.observe(_LAT + kind, float(seconds))
 
     def sample_queue_depth(self, depth: int) -> None:
-        self._depth_samples.append(int(depth))
-
-    # -- reading ------------------------------------------------------------
-
-    def elapsed(self, now: Optional[float] = None) -> float:
-        return (now if now is not None else self._clock()) - self.t_start
+        self.observe(_DEPTH, int(depth))
 
     def percentiles(self, kind: str) -> Dict[str, float]:
-        xs = self._latencies.get(kind)
-        if not xs:
+        """Latency summary in the historical ms-suffixed shape."""
+        s = self.hist_summary(_LAT + kind, scale=1e3)
+        if not s:
             return {}
-        arr = np.asarray(xs)
         return {
-            "count": int(arr.size),
-            "mean_ms": float(arr.mean() * 1e3),
-            "p50_ms": float(np.percentile(arr, 50) * 1e3),
-            "p99_ms": float(np.percentile(arr, 99) * 1e3),
-            "max_ms": float(arr.max() * 1e3),
+            "count": s["count"],
+            "mean_ms": s["mean"],
+            "p50_ms": s["p50"],
+            "p99_ms": s["p99"],
+            "max_ms": s["max"],
         }
 
     def snapshot(self, now: Optional[float] = None) -> Dict[str, object]:
+        """The BENCH_serving.json schema: elapsed_s, counters, per-counter
+        rates, ``latency_{kind}`` percentile blocks, queue_depth mean/max.
+        (Deliberately NOT the registry's generic snapshot — the regression
+        gate diffs these exact keys against a committed baseline.)"""
         elapsed = max(self.elapsed(now), 1e-9)
         out: Dict[str, object] = {
             "elapsed_s": elapsed,
@@ -62,12 +62,10 @@ class ServingMetrics:
         }
         for name, total in self.counters.items():
             out[f"{name}_per_s"] = total / elapsed
-        for kind in self._latencies:
-            out[f"latency_{kind}"] = self.percentiles(kind)
-        if self._depth_samples:
-            arr = np.asarray(self._depth_samples)
-            out["queue_depth"] = {
-                "mean": float(arr.mean()),
-                "max": int(arr.max()),
-            }
+        for name in self.histogram_names():
+            if name.startswith(_LAT):
+                out[name] = self.percentiles(name[len(_LAT):])
+        depth = self.hist_summary(_DEPTH)
+        if depth:
+            out[_DEPTH] = {"mean": depth["mean"], "max": int(depth["max"])}
         return out

@@ -114,6 +114,18 @@ class Solver:
         caches here; apply-at-read solvers materialize the weight column."""
         raise NotImplementedError
 
+    # -- observability -------------------------------------------------------
+
+    def touch_spans(self, cfg, state, idx_f: jnp.ndarray) -> jnp.ndarray:
+        """Per-slot catch-up debt the next ``touched_update`` over ``idx_f``
+        (flat ``[B*p]`` feature ids) is about to pay — cache-based solvers
+        report how many round-local steps each touched row is behind (trunc:
+        how many truncation boundaries it missed); apply-at-read solvers owe
+        nothing and keep this zero.  Pure, read-only, and computed from the
+        *pre-step* state: :mod:`repro.obs` histograms it beside the step
+        without perturbing the update arithmetic."""
+        return jnp.zeros(idx_f.shape, jnp.int32)
+
     # -- dense baseline ------------------------------------------------------
 
     def dense_reg(self, cfg, wpsi, eta, t, bk) -> jnp.ndarray:

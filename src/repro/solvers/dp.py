@@ -111,6 +111,11 @@ class LazyCacheSolver(Solver):
         new = lt.LinearState(wpsi=wpsi, b=b, caches=caches, i=state.i + 1, t=state.t + 1)
         return new, jnp.mean(loss)
 
+    def touch_spans(self, cfg, state, idx_f: jnp.ndarray) -> jnp.ndarray:
+        # the debt touched_update replays: reg for tau in [psi, i)
+        psi = state.wpsi[idx_f, 1].astype(jnp.int32)
+        return state.i - psi
+
     def read_rows(self, cfg, rows, state, hp, bk) -> jnp.ndarray:
         return bk.catchup_rows(
             rows[:, 0], rows[:, 1].astype(jnp.int32), state.i, state.caches, hp.lam1

@@ -69,6 +69,12 @@ class FTRLSolver(Solver):
         # deliberately NO eta*lam2 constraint: regularization is applied at
         # read, never as a multiplicative per-step factor
 
+    def touch_spans(self, cfg, state, idx_f: jnp.ndarray) -> jnp.ndarray:
+        # apply-at-read: an absent coordinate owes nothing when it returns,
+        # so the catch-up debt is identically zero (obs histograms land in
+        # bucket 0 — itself a useful signature of the solver family)
+        return jnp.zeros(idx_f.shape, jnp.int32)
+
     def seed_cols(self, cfg, w0, hp) -> jnp.ndarray:
         """Invert the read at ``n = 0`` so a freshly-seeded state reads back
         exactly ``w0`` (warm starts / swap_weights).  Shape-polymorphic:

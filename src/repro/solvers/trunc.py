@@ -74,6 +74,14 @@ class TruncSolver(LazyCacheSolver):
             S=caches.S.at[i + 1].set(caches.S[i] + eta),
         )
 
+    def touch_spans(self, cfg, state, idx_f: jnp.ndarray) -> jnp.ndarray:
+        # debt = truncation boundaries missed over [psi, i): boundaries are
+        # the steps tau with (tau+1) % K == 0, and the count of those below
+        # x is x // K — so spans are i//K - psi//K (0 between boundaries)
+        psi = state.wpsi[idx_f, 1].astype(jnp.int32)
+        k = cfg.trunc_k
+        return state.i // k - psi // k
+
     def dense_reg(self, cfg, wpsi, eta, t, bk) -> jnp.ndarray:
         # per-step l2^2 decay (lam1=0 makes prox_sweep a pure decay) ...
         wpsi = bk.prox_sweep(wpsi, eta, 0.0, cfg.lam2, SGD)

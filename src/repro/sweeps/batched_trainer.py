@@ -81,13 +81,41 @@ def init_batched_state(
     )
 
 
-def make_batched_round_fn(base: LinearConfig):
+def make_batched_round_fn(base: LinearConfig, metrics: bool = False):
     """jit'd ``round_fn(bstate, hp, round_batches) -> (bstate, losses)``
     scanning a whole round for every config lane at once, then applying the
     batch-uniform flush + DP-cache rebase at the boundary.  ``round_batches``
     is an UNBATCHED [R, B, p] SparseBatch — every config sees the same data;
-    ``losses`` comes back [n_cfg, R]."""
+    ``losses`` comes back [n_cfg, R].
+
+    ``metrics=True`` threads a per-lane :class:`repro.obs.MetricsState`
+    through the vmapped scan: the carry becomes ``(bstate, bmetrics)``
+    (init via ``obs.init_batched_metrics(n_cfg)``), every MetricsState
+    field gaining a leading config lane.  Same step arithmetic — the
+    instrumented step wraps the one built here — so losses and final
+    states match the uninstrumented program bitwise on the reference
+    backend."""
     step_hp = lt.make_lazy_step_hp(base)
+
+    if metrics:
+        from repro.obs import instrument, metrics_state
+
+        ostep_hp = instrument.make_obs_step_hp(base)
+
+        def cfg_round_m(carry, hp: Hypers, round_batches: SparseBatch):
+            carry, losses = jax.lax.scan(lambda c, rb: ostep_hp(c, rb, hp), carry, round_batches)
+            state, m = carry
+            state = lt.flush(base, state, hp=hp)
+            m = metrics_state.record_flush(m, state.wpsi[:, 0])
+            return (state, m), losses
+
+        maxes = instrument.metrics_axes()
+        vround_m = jax.vmap(
+            cfg_round_m,
+            in_axes=((STATE_AXES, maxes), HYPER_AXES, None),
+            out_axes=((STATE_AXES, maxes), 0),
+        )
+        return jax.jit(vround_m, donate_argnums=0)
 
     def cfg_round(state: LinearState, hp: Hypers, round_batches: SparseBatch):
         state, losses = jax.lax.scan(lambda s, rb: step_hp(s, rb, hp), state, round_batches)
@@ -144,12 +172,15 @@ def run_grid(
     rounds: Sequence[SparseBatch],
     w0: Optional[np.ndarray] = None,
     b0: Optional[np.ndarray] = None,
-) -> Tuple[LinearState, np.ndarray]:
+    metrics: bool = False,
+) -> Tuple:
     """Train every grid point on ``rounds`` (a list of [R, B, p] round
     batches, identical shapes) — one vmapped program per solver-axis entry
     (a solver is a program change; within a solver the whole sub-grid is
     one vmap).  Returns the final batched state (flushed: weights current)
-    and losses [n_cfg, n_rounds*R], both flat solver-major."""
+    and losses [n_cfg, n_rounds*R], both flat solver-major; with
+    ``metrics=True`` a third element: the per-lane batched
+    :class:`repro.obs.MetricsState` (solver-major like everything else)."""
     subs = grid.per_solver()
     if len(subs) > 1:
         n = grid.sub_n
@@ -159,18 +190,32 @@ def run_grid(
                 rounds,
                 w0=None if w0 is None else w0[c * n : (c + 1) * n],
                 b0=None if b0 is None else b0[c * n : (c + 1) * n],
+                metrics=metrics,
             )
             for c, g in enumerate(subs)
         ]
-        return (
-            concat_batched_states([s for s, _ in outs]),
-            np.concatenate([ls for _, ls in outs], axis=0),
-        )
+        state = concat_batched_states([o[0] for o in outs])
+        losses = np.concatenate([o[1] for o in outs], axis=0)
+        if metrics:
+            bm = jax.tree.map(
+                lambda *leaves: jnp.concatenate(leaves, axis=0), *[o[2] for o in outs]
+            )
+            return state, losses, bm
+        return state, losses
     grid = subs[0]  # base with the axis' solver pinned (base may carry None)
-    round_fn = make_batched_round_fn(grid.base)
+    round_fn = make_batched_round_fn(grid.base, metrics=metrics)
     bstate = init_batched_state(grid.base, grid.n_cfg, w0=w0, b0=b0, hp=grid.hypers())
     hp = grid.hypers()
     losses = []
+    if metrics:
+        from repro.obs import instrument
+
+        carry = (bstate, instrument.init_batched_metrics(grid.n_cfg))
+        for rb in rounds:
+            carry, ls = round_fn(carry, hp, rb)
+            losses.append(np.asarray(ls))
+        bstate, bm = carry
+        return bstate, np.concatenate(losses, axis=1), bm
     for rb in rounds:
         bstate, ls = round_fn(bstate, hp, rb)
         losses.append(np.asarray(ls))

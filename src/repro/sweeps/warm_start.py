@@ -17,12 +17,15 @@ grid fit, which is the oracle tests/sweeps checks it against.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Sequence
 
 import numpy as np
 
 from repro.core.linear_trainer import SparseBatch
+from repro.obs import trace
+from repro.obs.compile_tracker import CompileTracker
 
 from .batched_trainer import init_batched_state, make_batched_round_fn
 from .grid import Grid
@@ -63,6 +66,11 @@ def run_path(
     grid = subs[0]  # base with the axis' solver pinned (base may carry None)
     if round_fn is None:
         round_fn = make_batched_round_fn(grid.base)
+    # a lam1 stage only changes *values* (traced hypers), never shapes, so
+    # stage 0 compiles the shared round program and stages >= 1 must reuse
+    # it — asserted per stage, and surfaced per stage as an obs span
+    tracker = CompileTracker()
+    tracker.register("round", round_fn)
     n1 = len(grid.lam1)
     w_prev = b_prev = None
     weights, biases, losses = [], [], []
@@ -72,9 +80,21 @@ def run_path(
         seed_b = b_prev if warm_start else None
         bstate = init_batched_state(grid.base, grid.stage_size, w0=seed_w, b0=seed_b, hp=hp)
         stage_losses = []
-        for rb in rounds:
-            bstate, ls = round_fn(bstate, hp, rb)
-            stage_losses.append(np.asarray(ls))
+        with contextlib.ExitStack() as stack:
+            stack.enter_context(
+                trace.span(
+                    "sweep.stage",
+                    tracker=tracker,
+                    stage=s,
+                    lam1=grid.lam1[s],
+                    warm=bool(warm_start and s),
+                )
+            )
+            if s > 0:
+                stack.enter_context(tracker.assert_no_new_compiles(f"lam1 stage {s}"))
+            for rb in rounds:
+                bstate, ls = round_fn(bstate, hp, rb)
+                stage_losses.append(np.asarray(ls))
         # post-flush state: psi == 0, caches rebased => wpsi[:, :, 0] current
         w_prev = np.asarray(bstate.wpsi[:, :, 0])
         b_prev = np.asarray(bstate.b)

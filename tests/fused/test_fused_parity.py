@@ -113,6 +113,25 @@ def test_vmapped_grid_fused_parity(solver, rng):
     np.testing.assert_array_equal(np.asarray(st_on.b), np.asarray(st_off.b))
 
 
+@pytest.mark.parametrize("solver", ["fobos", "ftrl"])
+def test_fused_round_zero_recompiles(solver, rng):
+    """The fused round program compiles once; steady-state rounds must hold
+    the compile budget (obs.CompileTracker — the same invariant serving and
+    the warm-started sweep path assert)."""
+    from repro.obs import CompileTracker, cache_size
+
+    cfg = _cfg(solver, "reference", "inv_sqrt", fused=True)
+    round_fn = make_round_fn(cfg, "lazy")
+    rounds = _mk_rounds(rng, 4)
+    state = init_state(cfg)
+    state, _ = round_fn(state, rounds[0])  # warmup: the one compile
+    assert cache_size(round_fn) == 1
+    tracker = CompileTracker({"round": round_fn})
+    with tracker.assert_no_new_compiles(f"fused {solver} steady state"):
+        for rb in rounds[1:]:
+            state, _ = round_fn(state, rb)
+
+
 def test_fused_env_default(monkeypatch):
     """$REPRO_FUSED drives the default only when cfg.fused is None."""
     from repro.core import fused_enabled

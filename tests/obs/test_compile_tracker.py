@@ -1,0 +1,88 @@
+"""CompileTracker: jit-cache introspection and the zero-recompile budget
+(the reusable form of the invariant ServeEngine pioneered and serving /
+sweeps / the instrumented trainer now all assert)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from repro.obs import (
+    CompileTracker,
+    RecompileError,
+    assert_no_new_compiles,
+    cache_size,
+    compile_counts,
+)
+
+
+def _jit_double():
+    return jax.jit(lambda x: x * 2)
+
+
+def test_cache_size_counts_traces():
+    fn = _jit_double()
+    assert cache_size(fn) == 0
+    fn(jnp.ones((4,)))
+    assert cache_size(fn) == 1
+    fn(jnp.ones((4,)))  # same shape: cache hit
+    assert cache_size(fn) == 1
+    fn(jnp.ones((8,)))  # new shape: new entry
+    assert cache_size(fn) == 2
+
+
+def test_cache_size_untraceable_is_zero():
+    assert cache_size(lambda x: x) == 0
+    assert cache_size(np.sin) == 0
+
+
+def test_compile_counts_dict():
+    a, b = _jit_double(), _jit_double()
+    a(jnp.ones((2,)))
+    assert compile_counts({"a": a, "b": b}) == {"a": 1, "b": 0}
+
+
+def test_tracker_register_returns_fn():
+    tracker = CompileTracker()
+    fn = tracker.register("step", _jit_double())
+    fn(jnp.ones((2,)))
+    assert tracker.counts() == {"step": 1}
+    # re-registration replaces (the swap_weights rebuild pattern)
+    tracker.register("step", _jit_double())
+    assert tracker.counts() == {"step": 0}
+
+
+def test_assert_no_new_compiles_passes_on_cache_hits():
+    fn = _jit_double()
+    fn(jnp.ones((4,)))
+    tracker = CompileTracker({"fn": fn})
+    with tracker.assert_no_new_compiles("steady state"):
+        for _ in range(3):
+            fn(jnp.ones((4,)))
+
+
+def test_assert_no_new_compiles_raises_on_growth():
+    fn = _jit_double()
+    fn(jnp.ones((4,)))
+    tracker = CompileTracker({"fn": fn})
+    with pytest.raises(RecompileError, match="shape leak"):
+        with tracker.assert_no_new_compiles("shape leak"):
+            fn(jnp.ones((8,)))
+    # the failure names the per-fn before -> after counts
+    with pytest.raises(RecompileError, match=r"'fn': \(2, 3\)"):
+        with tracker.assert_no_new_compiles():
+            fn(jnp.ones((16,)))
+
+
+def test_recompile_error_is_assertion_error():
+    assert issubclass(RecompileError, AssertionError)
+
+
+def test_module_level_one_shot():
+    fn = _jit_double()
+    fn(jnp.ones((4,)))
+    with assert_no_new_compiles({"fn": fn}, "one-shot") as before:
+        assert before == {"fn": 1}
+        fn(jnp.ones((4,)))
+    with pytest.raises(RecompileError):
+        with assert_no_new_compiles({"fn": fn}):
+            fn(jnp.ones((32,)))

@@ -1,0 +1,183 @@
+"""The two invariants the in-graph metrics promise (DESIGN.md §14):
+
+1. Metrics-on fits are BITWISE identical to metrics-off on the reference
+   backend (<= 1e-5 on pallas): the instrumented step wraps the exact step
+   ``core.make_lazy_step`` builds and nothing it computes feeds back.
+2. Enabling metrics adds ZERO recompiles: ``MetricsState`` is a fixed-shape
+   pytree riding the scan carry, so the instrumented round program compiles
+   once and never again, whatever traffic arrives.
+
+Both hold per solver — span observation dispatches through
+``Solver.touch_spans``, whose per-family semantics are also pinned here
+(cache-based: steps behind; trunc: boundaries missed; ftrl: zeros).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.core import (
+    LinearConfig,
+    ScheduleConfig,
+    SparseBatch,
+    init_state,
+    make_round_fn,
+)
+from repro.obs import (
+    SPAN_BUCKETS,
+    CompileTracker,
+    cache_size,
+    init_obs,
+    pull_metrics,
+)
+from repro.sweeps import log_ladder, make_grid, run_grid
+
+DIM = 64
+ROUND_LEN = 8
+B, P = 2, 3
+SOLVERS = ["sgd", "fobos", "trunc", "ftrl"]
+
+
+def _cfg(solver, backend="reference"):
+    return LinearConfig(
+        dim=DIM,
+        solver=solver,
+        lam1=1e-3,
+        lam2=1e-4,
+        round_len=ROUND_LEN,
+        trunc_k=4,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+        backend=backend,
+    )
+
+
+def _mk_rounds(rng, n_rounds):
+    out = []
+    for _ in range(n_rounds):
+        idx = rng.randint(0, DIM, size=(ROUND_LEN, B, P)).astype(np.int32)
+        val = rng.uniform(-2.0, 2.0, size=(ROUND_LEN, B, P)).astype(np.float32)
+        y = (rng.uniform(size=(ROUND_LEN, B)) > 0.5).astype(np.float32)
+        out.append(SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y)))
+    return out
+
+
+def _fit_plain(cfg, rounds):
+    round_fn = make_round_fn(cfg, "lazy")
+    state = init_state(cfg)
+    losses = []
+    for rb in rounds:
+        state, step_losses = round_fn(state, rb)
+        losses.append(np.asarray(step_losses))
+    return np.concatenate(losses), np.asarray(state.wpsi), np.asarray(state.b)
+
+
+def _fit_obs(cfg, rounds):
+    round_fn = make_round_fn(cfg, "lazy", metrics=True)
+    carry = init_obs(cfg)
+    losses = []
+    for rb in rounds:
+        carry, step_losses = round_fn(carry, rb)
+        losses.append(np.asarray(step_losses))
+    state, m = carry
+    return (np.concatenate(losses), np.asarray(state.wpsi), np.asarray(state.b)), m
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_metrics_on_matches_metrics_off(solver, backend, rng):
+    rounds = _mk_rounds(rng, 3)
+    want = _fit_plain(_cfg(solver, backend), rounds)
+    got, _ = _fit_obs(_cfg(solver, backend), rounds)
+    for g, w, name in zip(got, want, ("losses", "wpsi", "b")):
+        if backend == "reference":
+            np.testing.assert_array_equal(g, w, err_msg=name)
+        else:
+            np.testing.assert_allclose(g, w, rtol=0, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_metrics_counters(solver, rng):
+    n_rounds = 3
+    rounds = _mk_rounds(rng, n_rounds)
+    (_, wpsi, _), m = _fit_obs(_cfg(solver), rounds)
+    summary = pull_metrics(m, _cfg(solver))
+
+    steps = n_rounds * ROUND_LEN
+    assert summary["solver"] == solver
+    assert summary["steps"] == steps
+    assert summary["examples"] == steps * B
+    assert summary["flushes"] == n_rounds
+    assert summary["d"] == DIM
+    # every generated slot has val != 0 with probability 1
+    assert summary["touched_coords"] == steps * B * P
+    assert summary["padded_slots"] == 0
+    assert summary["update_slots"] == steps * B * P
+    assert summary["work_ratio"] == pytest.approx(B * P / DIM)
+    # the histogram accounts for exactly the real touched slots
+    hist = summary["span_hist"]
+    assert len(hist) == SPAN_BUCKETS
+    assert sum(hist) == summary["touched_coords"]
+    # nnz gauge matches the flushed weights
+    assert summary["nnz"] == int(np.sum(np.abs(wpsi[:, 0]) > 0))
+
+
+def test_span_hist_solver_signatures(rng):
+    """Per-family touch_spans semantics, observable in the histogram:
+    ftrl (apply-at-read) owes nothing — every touch lands in bucket 0;
+    cache-based solvers accumulate genuine positive spans (round-local
+    staleness), so buckets >= 1 must be populated."""
+    rounds = _mk_rounds(rng, 3)
+    hists = {}
+    for solver in SOLVERS:
+        _, m = _fit_obs(_cfg(solver), rounds)
+        hists[solver] = pull_metrics(m, _cfg(solver))["span_hist"]
+    assert sum(hists["ftrl"][1:]) == 0  # all in bucket 0
+    for solver in ("sgd", "fobos", "trunc"):
+        assert sum(hists[solver][1:]) > 0, solver
+    # trunc counts boundaries missed (spans // K-ish), so its mass sits in
+    # strictly lower buckets than fobos' raw step spans
+    def top(h):
+        return max(k for k, n in enumerate(h) if n)
+
+    assert top(hists["trunc"]) < top(hists["fobos"])
+
+
+@pytest.mark.parametrize("solver", ["fobos", "ftrl"])
+def test_zero_new_compiles_with_metrics(solver, rng):
+    """The instrumented round fn compiles exactly once: rounds 2..N reuse
+    the program (fixed shapes; MetricsState is part of the donated carry)."""
+    rounds = _mk_rounds(rng, 4)
+    cfg = _cfg(solver)
+    round_fn = make_round_fn(cfg, "lazy", metrics=True)
+    tracker = CompileTracker({"round": round_fn})
+    carry = init_obs(cfg)
+    carry, _ = round_fn(carry, rounds[0])  # warmup: the one compile
+    assert cache_size(round_fn) == 1
+    with tracker.assert_no_new_compiles(f"{solver} metrics rounds"):
+        for rb in rounds[1:]:
+            carry, _ = round_fn(carry, rb)
+    assert cache_size(round_fn) == 1
+
+
+def test_batched_grid_metrics_parity(rng):
+    """The vmapped sweep runner with metrics=True returns the same states
+    and losses bitwise, plus a per-lane MetricsState whose counters match
+    the shared data every lane consumes."""
+    rounds = _mk_rounds(rng, 2)
+    grid = make_grid(_cfg("fobos"), log_ladder(1e-3, 1e-5, 2), log_ladder(1e-4, 1e-6, 2))
+
+    st_off, loss_off = run_grid(grid, rounds)
+    st_on, loss_on, bm = run_grid(grid, rounds, metrics=True)
+    np.testing.assert_array_equal(np.asarray(loss_on), np.asarray(loss_off))
+    np.testing.assert_array_equal(np.asarray(st_on.wpsi), np.asarray(st_off.wpsi))
+    np.testing.assert_array_equal(np.asarray(st_on.b), np.asarray(st_off.b))
+
+    steps = np.asarray(bm.steps)
+    touched = np.asarray(bm.touched)
+    assert steps.shape == (grid.n_cfg,)
+    # all lanes see the same data: identical touch accounting per lane
+    assert np.all(steps == 2 * ROUND_LEN)
+    assert np.all(touched == touched[0])
+    assert np.all(np.asarray(bm.flushes) == 2)
+    # losses DO differ per lane (different hypers), and the per-lane
+    # loss_sum must equal the per-lane losses the runner returned
+    np.testing.assert_allclose(np.asarray(bm.loss_sum), np.asarray(loss_on).sum(axis=1), rtol=1e-5)

@@ -1,0 +1,138 @@
+"""MetricsRegistry (host-side counters/gauges/histograms) and the
+ServingMetrics backwards-compat shim riding on it."""
+import numpy as np
+import pytest
+
+from repro.obs import MetricsRegistry, prometheus_text
+from repro.serving.metrics import ServingMetrics
+
+
+def _fixed_clock(t=100.0):
+    return lambda: t
+
+
+class TestRegistry:
+    def test_counters_and_gauges(self):
+        r = MetricsRegistry()
+        r.inc("requests")
+        r.inc("requests", 4)
+        r.set_counter("steps", 17)
+        r.set_counter("steps", 19)  # absolute: replaces, never adds
+        r.gauge("nnz", 42.0)
+        assert r.counters["requests"] == 5
+        assert r.counters["steps"] == 19
+        assert r.gauges["nnz"] == 42.0
+
+    def test_hist_quantiles(self):
+        r = MetricsRegistry()
+        for v in range(1, 101):  # 1..100
+            r.observe("lat", float(v))
+        s = r.hist_summary("lat")
+        assert s["count"] == 100
+        assert s["mean"] == pytest.approx(50.5)
+        assert s["p50"] == pytest.approx(np.percentile(np.arange(1, 101), 50))
+        assert s["p99"] == pytest.approx(np.percentile(np.arange(1, 101), 99))
+        assert s["max"] == 100.0
+        # scale converts at read (seconds -> ms)
+        assert r.hist_summary("lat", scale=1e3)["max"] == pytest.approx(1e5)
+        assert r.hist_summary("never-seen") == {}
+        assert r.histogram_names() == ("lat",)
+
+    def test_pull_types(self):
+        """Device pulls: ints -> absolute counters, floats -> gauges,
+        everything else (bools, lists, strings) skipped — non-scalars
+        belong to the JSONL sinks."""
+        r = MetricsRegistry()
+        r.pull(
+            {
+                "steps": 24,
+                "touched_coords": np.int64(144),
+                "work_ratio": 0.09375,
+                "loss_ema": np.float32(0.5),
+                "span_hist": [1, 2, 3],
+                "solver": "fobos",
+                "flag": True,
+            },
+            prefix="train.",
+        )
+        assert r.counters == {"train.steps": 24, "train.touched_coords": 144}
+        assert r.gauges["train.work_ratio"] == pytest.approx(0.09375)
+        assert r.gauges["train.loss_ema"] == pytest.approx(0.5)
+        assert "train.span_hist" not in r.gauges
+        assert "train.flag" not in r.counters
+        # pulling again must not double-count (absolute semantics)
+        r.pull({"steps": 48}, prefix="train.")
+        assert r.counters["train.steps"] == 48
+
+    def test_snapshot_and_rates(self):
+        clock = iter([0.0, 10.0]).__next__
+        r = MetricsRegistry(clock=clock)
+        r.inc("served", 50)
+        r.gauge("depth", 3.0)
+        r.observe("lat", 1.0)
+        snap = r.snapshot()  # second clock() call -> elapsed 10s
+        assert snap["elapsed_s"] == pytest.approx(10.0)
+        assert snap["counters"]["served"] == 50
+        assert snap["served_per_s"] == pytest.approx(5.0)
+        assert snap["gauges"]["depth"] == 3.0
+        assert snap["hist_lat"]["count"] == 1
+
+    def test_reset_clock(self):
+        r = MetricsRegistry(clock=_fixed_clock(100.0))
+        r.reset_clock(now=95.0)
+        assert r.elapsed() == pytest.approx(5.0)
+
+    def test_prometheus_text(self):
+        r = MetricsRegistry()
+        r.inc("requests", 7)
+        r.gauge("work ratio", 0.5)  # name needs sanitizing
+        r.observe("lat", 2.0)
+        r.observe("lat", 4.0)
+        text = prometheus_text(r, prefix="repro")
+        assert "# TYPE repro_requests_total counter" in text
+        assert "repro_requests_total 7" in text
+        assert "repro_work_ratio 0.5" in text
+        assert "# TYPE repro_lat summary" in text
+        assert 'repro_lat{quantile="0.5"}' in text
+        assert 'repro_lat{quantile="0.99"}' in text
+        assert "repro_lat_count 2" in text
+        assert "repro_lat_sum 6.0" in text
+        assert text.endswith("\n")
+
+
+class TestServingShim:
+    """repro.serving.metrics.ServingMetrics must stay a MetricsRegistry
+    subclass AND keep the exact BENCH_serving snapshot schema — the
+    regression gate fails on missing keys."""
+
+    def test_is_registry(self):
+        assert issubclass(ServingMetrics, MetricsRegistry)
+
+    def test_percentiles_schema(self):
+        m = ServingMetrics()
+        for v in (0.001, 0.002, 0.004):  # seconds in, ms out
+            m.record_latency("predict", v)
+        p = m.percentiles("predict")
+        assert set(p) == {"count", "mean_ms", "p50_ms", "p99_ms", "max_ms"}
+        assert p["count"] == 3
+        assert p["p50_ms"] == pytest.approx(2.0)
+        assert p["max_ms"] == pytest.approx(4.0)
+        assert m.percentiles("never-seen") == {}
+
+    def test_snapshot_schema(self):
+        m = ServingMetrics(clock=_fixed_clock(0.0))
+        m.count("served", 10)
+        m.record_latency("predict", 0.002)
+        m.sample_queue_depth(3)
+        m.sample_queue_depth(5)
+        snap = m.snapshot(now=2.0)
+        assert snap["elapsed_s"] == pytest.approx(2.0)
+        assert snap["counters"] == {"served": 10}
+        assert snap["served_per_s"] == pytest.approx(5.0)
+        lat = snap["latency_predict"]
+        assert set(lat) == {"count", "mean_ms", "p50_ms", "p99_ms", "max_ms"}
+        assert lat["p50_ms"] == pytest.approx(2.0)
+        qd = snap["queue_depth"]
+        assert qd["mean"] == pytest.approx(4.0)
+        assert qd["max"] == 5
+        assert isinstance(qd["max"], int)
