@@ -1,0 +1,154 @@
+"""Multi-tenant serving benchmark: N tenant models learning through ONE
+vmapped dispatch per tick (MultiLinearService) vs N sequential
+LinearServices stepped one dispatch each.
+
+Every tenant receives the same traffic shape (micro_batch examples per
+tick), so both arms do identical model math; the aggregate-throughput gap
+is the dispatch story — the stacked service amortizes one program launch
+across all tenants where the sequential arm pays per-tenant launch + host
+overhead N times per tick.  Steady state only: both arms warm up first,
+and the stacked arm runs under ``assert_no_new_compiles`` (the zero-
+recompile acceptance is asserted here, not just reported).
+
+Writes BENCH_multitenant.json; the tenant-count keys {8, 64} are identical
+in --fast and full runs (fewer ticks, same schema) so the committed
+baseline gates both.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.serving import LinearService, MultiLinearService, ServiceConfig
+
+DIM = 20_000
+P = 32
+B = 8  # micro_batch == examples per tenant per tick
+ROUND_LEN = 256
+TENANT_COUNTS = (8, 64)
+
+
+def _cfg():
+    return LinearConfig(
+        dim=DIM, round_len=ROUND_LEN, lam1=1e-4, lam2=1e-5,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.2),
+    )
+
+
+def _traffic(rng, n_tenants, ticks):
+    """Per-tenant example streams: [tick][tenant] -> (idx [B,P], val, y)."""
+    out = []
+    for _ in range(ticks):
+        per = []
+        for _ in range(n_tenants):
+            ex = (
+                rng.randint(0, DIM, size=(B, P)).astype(np.int32),
+                rng.uniform(0, 1, size=(B, P)).astype(np.float32),
+                (rng.uniform(size=B) > 0.5).astype(np.float32),
+            )
+            per.append(ex)
+        out.append(per)
+    return out
+
+
+def _run_multi(n_tenants, traffic):
+    svc = MultiLinearService(
+        _cfg(),
+        n_slots=n_tenants,
+        service=ServiceConfig(p_max=P, micro_batch=B),
+    )
+    names = [f"t{i}" for i in range(n_tenants)]
+    for i, name in enumerate(names):
+        svc.add_tenant(name, lam1=float(1e-4 * (1 + i % 4)))
+    svc.warmup()
+    t0 = time.monotonic()
+    with svc.compiles.assert_no_new_compiles("multitenant bench steady state"):
+        for per in traffic:
+            for name, (idx, val, y) in zip(names, per):
+                for j in range(B):
+                    svc.submit_learn(name, idx[j], val[j], y[j])
+            svc.poll(now=0.0, force=True)
+    elapsed = time.monotonic() - t0
+    pl = svc.metrics.percentiles("learn")
+    return elapsed, pl, svc.compile_counts()
+
+
+def _run_sequential(n_tenants, traffic):
+    services = [
+        LinearService(_cfg(), ServiceConfig(p_max=P, micro_batch=B)) for _ in range(n_tenants)
+    ]
+    warm = traffic[0]
+    for svc, (idx, val, y) in zip(services, warm):  # compile outside the clock
+        svc.learn(SparseBatch(idx=idx, val=val, y=y))
+    t0 = time.monotonic()
+    for per in traffic:
+        for svc, (idx, val, y) in zip(services, per):
+            svc.learn(SparseBatch(idx=idx, val=val, y=y))
+    return time.monotonic() - t0
+
+
+def run(fast: bool = False, json_path: str = "BENCH_multitenant.json"):
+    ticks = 8 if fast else 24
+    rows = []
+    payload = {
+        "tenants": {},
+        "workload": {
+            "dim": DIM,
+            "p_max": P,
+            "micro_batch": B,
+            "ticks": ticks,
+            "round_len": ROUND_LEN,
+        },
+    }
+    for n in TENANT_COUNTS:
+        rng = np.random.RandomState(n)
+        traffic = _traffic(rng, n, ticks)
+        t_multi, lat, compiles = _run_multi(n, traffic)
+        t_seq = _run_sequential(n, traffic)
+        steps = ticks * n  # one per-tenant model step per tick in both arms
+        sps_multi = steps / t_multi
+        sps_seq = steps / t_seq
+        speedup = sps_multi / sps_seq
+        payload["tenants"][str(n)] = {
+            "multi": {
+                "steps_per_s": sps_multi,
+                "examples_per_s": sps_multi * B,
+                "elapsed_s": t_multi,
+                "learn_p99_ms": lat.get("p99_ms", 0.0),
+                "compile_counts": compiles,
+            },
+            "sequential": {
+                "steps_per_s": sps_seq,
+                "examples_per_s": sps_seq * B,
+                "elapsed_s": t_seq,
+            },
+            "speedup": speedup,
+        }
+        rows.append(
+            (f"multitenant/stacked_n{n}", 1e6 * t_multi / steps, f"steps_s={sps_multi:.0f}")
+        )
+        rows.append(
+            (f"multitenant/sequential_n{n}", 1e6 * t_seq / steps, f"steps_s={sps_seq:.0f}")
+        )
+        rows.append((f"multitenant/speedup_n{n}", 0.0, f"speedup={speedup:.2f}x"))
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="BENCH_multitenant.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(fast=args.fast, json_path=args.json):
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

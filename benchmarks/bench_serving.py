@@ -21,7 +21,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.models import build, init_params, transformer
-from repro.serving import EngineConfig, LinearService, ServeEngine, ServingMetrics
+from repro.serving import EngineConfig, LinearService, ServeEngine, ServiceConfig, ServingMetrics
 from repro.train import make_prefill_step, make_serve_step
 
 _PASSES = 3  # best-of: shared-CI CPUs jitter ±20% at the ~10ms/step scale
@@ -99,7 +99,7 @@ def _run_engine(cfg, model, params, reqs, n_slots, max_len, buckets, rate):
 def _bench_linear(fast):
     cfg = LinearConfig(dim=50_000, round_len=1024, lam1=1e-4, lam2=1e-5,
                        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.2))
-    svc = LinearService(cfg, p_max=128, micro_batch=8)
+    svc = LinearService(cfg, ServiceConfig(p_max=128, micro_batch=8))
     rng = np.random.RandomState(0)
     n = 64 if fast else 256
 

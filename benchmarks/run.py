@@ -50,6 +50,11 @@ SUITES = {
         "per-solver steady-state step time + sparsity at convergence; "
         "writes BENCH_solvers.json",
     ),
+    "multitenant": (
+        lambda a, steps: _m("bench_multitenant").run(fast=a.fast),
+        "N stacked tenant models per vmapped dispatch vs N sequential "
+        "LinearServices; writes BENCH_multitenant.json",
+    ),
 }
 
 

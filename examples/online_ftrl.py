@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.data import BowConfig, SyntheticBow
-from repro.serving import LinearService
+from repro.serving import LinearService, ServiceConfig
 
 
 def main() -> None:
@@ -28,7 +28,7 @@ def main() -> None:
         # scale; there is no eta*lam2 < 1 constraint to respect
         schedule=ScheduleConfig(kind="constant", eta0=0.2),
     )
-    service = LinearService(cfg, p_max=32, micro_batch=8, solver="ftrl")
+    service = LinearService(cfg, ServiceConfig(p_max=32, micro_batch=8, solver="ftrl"))
     print(f"service solver={service.cfg.solver} backend={service.cfg.backend}")
 
     bow = SyntheticBow(

@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.data import BowConfig, SyntheticBow
-from repro.serving import LinearService
+from repro.serving import LinearService, ServiceConfig
 from repro.sweeps import kfold_cv, log_ladder, make_grid
 
 
@@ -33,7 +33,7 @@ def main() -> None:
         print(f"lam1={cfg.lam1:.2e} lam2={cfg.lam2:.2e} cv_loss={result.cv_loss[c]:.4f}{mark}")
 
     # the winning model goes live without a restart
-    service = LinearService(result.best_config, p_max=32, micro_batch=8)
+    service = LinearService(result.best_config, ServiceConfig(p_max=32, micro_batch=8))
     service.swap_weights(result.best_weights, result.best_b, cfg=result.best_config)
     chunk = bow.sample_round(12_345, 1, 4)
     probs = service.predict(SparseBatch(idx=chunk.idx[0], val=chunk.val[0], y=chunk.y[0]))

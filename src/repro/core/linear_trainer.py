@@ -362,18 +362,24 @@ def predict_proba(cfg: LinearConfig, state: LinearState, batch: SparseBatch) -> 
     return jax.nn.sigmoid(z) if cfg.loss == LOGISTIC else z
 
 
-def predict_proba_sparse(cfg: LinearConfig, state: LinearState, batch: SparseBatch) -> jnp.ndarray:
+def predict_proba_sparse(
+    cfg: LinearConfig, state: LinearState, batch: SparseBatch, hp: Optional[Hypers] = None
+) -> jnp.ndarray:
     """Serving-path predictions in O(p) per example: gather only the touched
     (w, psi) rows and bring them current against the DP caches — the same
     catch-up the lazy step performs, minus the write-back (pure).  Agrees
     with predict_proba's O(d) full catch-up exactly; this is the form the
-    paper's per-request complexity claim describes."""
+    paper's per-request complexity claim describes.  ``hp`` overrides the
+    config's concrete hypers (possibly with traced per-tenant scalars — the
+    multi-tenant serving path, which vmaps this function per slot)."""
+    if hp is None:
+        hp = cfg.hypers()
     idx_f = batch.idx.reshape(-1)
     g2 = state.wpsi[idx_f]
     if state.wpsi.shape[1] == 1:  # dense layout: weights always current
         w_cur = g2[:, 0]
     else:
-        w_cur = _solver(cfg).read_rows(cfg, g2, state, cfg.hypers(), _backend(cfg.backend))
+        w_cur = _solver(cfg).read_rows(cfg, g2, state, hp, _backend(cfg.backend))
     z = _predict_current(cfg, w_cur.reshape(batch.idx.shape), state.b, batch)
     return jax.nn.sigmoid(z) if cfg.loss == LOGISTIC else z
 

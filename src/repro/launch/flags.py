@@ -1,0 +1,99 @@
+"""Shared CLI flag definitions for the launch drivers.
+
+``--backend``, ``--solver``, ``--fused``, ``--dim``, ``--state-dtype``,
+``--metrics-out`` and ``--profile`` mean the same thing in train.py,
+sweep.py and serve.py, but each driver used to define them independently —
+choices lists and help text drifted (train's fused flag was spelled
+``--reg-fused``, serve restricted nothing, sweep restricted state dtypes).
+Each flag now has ONE definition here; drivers customize only what
+genuinely differs (help-text focus, solver choices, extra aliases — train
+keeps ``--reg-fused`` as a documented alias of ``--fused``).
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Optional, Sequence, Tuple
+
+
+def add_backend(ap: argparse.ArgumentParser, help: Optional[str] = None) -> None:
+    from repro import backend as kernel_backend
+
+    if help is None:
+        help = "kernel backend for the hot paths (default: $REPRO_BACKEND or platform default)"
+    ap.add_argument(
+        "--backend",
+        default=None,
+        choices=kernel_backend.available_backends(),
+        help=help,
+    )
+
+
+def add_solver(
+    ap: argparse.ArgumentParser,
+    *,
+    choices: Optional[Tuple[str, ...]] = None,
+    metavar: Optional[str] = None,
+    help: Optional[str] = None,
+) -> None:
+    """``choices=None`` admits any registered solver name (validated by the
+    registry downstream); train passes the cache-based subset, sweep a
+    comma-list metavar."""
+    if help is None:
+        help = (
+            "update rule (repro.solvers: sgd | fobos | ftrl | trunc; "
+            "default: $REPRO_SOLVER or the config's flavor)"
+        )
+    ap.add_argument("--solver", default=None, choices=choices, metavar=metavar, help=help)
+
+
+def add_fused(
+    ap: argparse.ArgumentParser,
+    *,
+    aliases: Sequence[str] = (),
+    help: Optional[str] = None,
+) -> None:
+    """BooleanOptionalAction under dest ``fused``; every alias also gets its
+    ``--no-`` form (train's ``--reg-fused`` / ``--no-reg-fused``)."""
+    if help is None:
+        help = (
+            "fused whole-step solver kernels (--no-fused: multi-op step; "
+            "default: $REPRO_FUSED, then fused)"
+        )
+    ap.add_argument(
+        "--fused",
+        *aliases,
+        dest="fused",
+        action=argparse.BooleanOptionalAction,
+        default=None,
+        help=help,
+    )
+
+
+def add_dim(ap: argparse.ArgumentParser, default: int = 20_000, help: Optional[str] = None) -> None:
+    ap.add_argument("--dim", type=int, default=default, help=help or "feature-space size")
+
+
+def add_state_dtype(ap: argparse.ArgumentParser, help: Optional[str] = None) -> None:
+    from repro import core as lt_core
+
+    if help is None:
+        help = (
+            "storage grid for the non-weight state columns "
+            "(psi / ftrl z,n; DESIGN.md §13)"
+        )
+    ap.add_argument("--state-dtype", default="f32", choices=tuple(lt_core.STATE_DTYPES), help=help)
+
+
+def add_metrics_out(ap: argparse.ArgumentParser, help: Optional[str] = None) -> None:
+    if help is None:
+        help = (
+            "write a structured JSONL run log (summarize with "
+            "`python -m repro.obs.report`)"
+        )
+    ap.add_argument("--metrics-out", default=None, metavar="RUN.jsonl", help=help)
+
+
+def add_profile(ap: argparse.ArgumentParser, help: Optional[str] = None) -> None:
+    if help is None:
+        help = "collect a jax profiler trace of the run into DIR"
+    ap.add_argument("--profile", default=None, metavar="DIR", help=help)

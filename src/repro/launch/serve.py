@@ -10,7 +10,10 @@ LM: synthetic bag-of-words traffic streams through the admission queue
 (learn) and the O(p) sparse predictor, under any ``--solver``
 (repro.solvers) and ``--backend``.  After warmup the jit compile set is
 asserted frozen — fixed shapes, no per-solver recompiles at steady state —
-which is the line CI's serving-smoke job runs per solver.
+which is the line CI's serving-smoke job runs per solver.  ``--linear
+--tenants N`` serves N tenant models through one MultiLinearService
+instead: cross-tenant vmapped learn/predict with mid-traffic tenant
+add/evict/swap, under the same frozen-compile-set assertion.
 
 Reduced configs run on CPU; full configs lower onto the production mesh via
 the same decode fns the dry-run compiles.  With --mesh the params and KV
@@ -119,15 +122,16 @@ def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch
     flush), then stream ``requests`` examples and assert zero recompiles."""
     from repro.core import LinearConfig, ScheduleConfig, SparseBatch
     from repro.data import BowConfig, SyntheticBow
-    from repro.serving import LinearService
+    from repro.serving import LinearService, ServiceConfig
 
     cfg = LinearConfig(
         dim=dim, round_len=round_len, lam1=1e-5, lam2=1e-6,
         schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
         fused=fused, state_dtype=state_dtype,
     )
-    svc = LinearService(cfg, p_max=p_max, micro_batch=micro_batch,
-                        backend=backend, solver=solver)
+    svc = LinearService(cfg, ServiceConfig(
+        p_max=p_max, micro_batch=micro_batch, backend=backend, solver=solver,
+    ))
     bow = SyntheticBow(BowConfig(
         dim=dim, p_max=p_max, p_mean=p_max / 2.0,
         informative_pool=min(4096, dim // 2), n_informative=min(512, dim // 8),
@@ -179,6 +183,91 @@ def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch
     return svc
 
 
+def serve_multitenant(*, tenants=8, solver=None, backend=None, dim=20_000,
+                      p_max=32, micro_batch=8, requests=512, round_len=64,
+                      seed=0, fused=None, state_dtype="f32"):
+    """Multi-tenant smoke over MultiLinearService: warm the complete vmapped
+    program set, provision ``tenants`` tenants (a lam1 ladder — every lane
+    carries its own hypers), stream tenant-tagged traffic through the
+    admission queue, exercise the full lifecycle (evict / re-add / swap /
+    snapshot+restore) mid-traffic, and assert zero recompiles throughout."""
+    import tempfile
+
+    from repro.core import LinearConfig, ScheduleConfig
+    from repro.data import BowConfig, SyntheticBow
+    from repro.serving import MultiLinearService, ServiceConfig
+
+    cfg = LinearConfig(
+        dim=dim, round_len=round_len, lam1=1e-5, lam2=1e-6,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
+        fused=fused, state_dtype=state_dtype,
+    )
+    svc = MultiLinearService(cfg, n_slots=tenants, service=ServiceConfig(
+        p_max=p_max, micro_batch=micro_batch, backend=backend, solver=solver,
+        per_tenant_cap=4 * micro_batch,
+    ))
+    with obs.span("serve.warmup", tracker=svc.compiles):
+        svc.warmup()
+    lam1s = np.logspace(-6, -4, tenants)
+    names = [f"t{i}" for i in range(tenants)]
+    bow = SyntheticBow(BowConfig(
+        dim=dim, p_max=p_max, p_mean=p_max / 2.0,
+        informative_pool=min(4096, dim // 2), n_informative=min(512, dim // 8),
+        seed=seed,
+    ))
+    rng = np.random.RandomState(seed)
+    t0 = time.monotonic()
+    served = 0
+    chunk_id = 0
+    with obs.span("serve.traffic", tracker=svc.compiles, requests=requests,
+                  tenants=tenants), \
+            svc.compiles.assert_no_new_compiles("multi-tenant steady state"):
+        for name, lam1 in zip(names, lam1s):
+            svc.add_tenant(name, lam1=float(lam1))
+        while served < requests:
+            # a Poisson-ish cross-tenant mix: each tenant contributes a
+            # random number of examples, then one poll trains them all
+            chunk = bow.sample_round(20_000 + chunk_id, 1, micro_batch)
+            chunk_id += 1
+            preds = {}
+            for name in svc.tenants():
+                n = int(rng.randint(0, micro_batch // 2 + 1))
+                for r in range(n):
+                    svc.submit_learn(
+                        name, np.asarray(chunk.idx[0][r]),
+                        np.asarray(chunk.val[0][r]), float(chunk.y[0][r]),
+                    )
+                served += n
+                if n:
+                    preds[name] = (np.asarray(chunk.idx[0][:n]),
+                                   np.asarray(chunk.val[0][:n]))
+            svc.poll(now=1.0, force=True)
+            if preds:
+                svc.predict_many(preds)
+            if chunk_id == 3:  # mid-traffic lifecycle churn, same compile set
+                svc.evict_tenant(names[0])
+                svc.add_tenant(names[0], lam1=float(lam1s[0]), eta0=0.2)
+                svc.swap_tenant(names[1], w=svc.current_weights(names[2]))
+                with tempfile.TemporaryDirectory() as td:
+                    svc.snapshot_tenant(names[2], td)
+                    svc.evict_tenant(names[2])
+                    svc.restore_tenant(names[2], td)
+    elapsed = time.monotonic() - t0
+
+    run_compiles = svc.compile_counts()
+    snap = svc.metrics.snapshot()
+    logger = obs.active_logger()
+    if logger is not None:
+        logger.registry_snapshot(svc.metrics)
+    agg = {k: v for k, v in snap["counters"].items() if "{" not in k}
+    print(f"multitenant[{svc.cfg.solver}/{svc.cfg.backend}] x{tenants}: "
+          f"{served} learn examples in {elapsed:.2f}s "
+          f"({served / max(elapsed, 1e-9):.0f} ex/s); counters {agg}; "
+          f"compiles {run_compiles} (unchanged since warmup, incl. "
+          f"add/evict/swap/snapshot/restore)")
+    return svc
+
+
 def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, seed=0,
           mesh_shape: str | None = None, temperature: float = 0.0,
           static: bool = False, n_slots: int | None = None,
@@ -217,16 +306,17 @@ def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, new_tokens=32, see
 
 
 def main():
+    from repro.launch import flags
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="LM architecture (required unless --linear)")
     ap.add_argument("--linear", action="store_true",
                     help="serve the online elastic-net LinearService instead of an LM")
-    ap.add_argument(
-        "--solver", default=None,
-        help="update rule for --linear (repro.solvers: sgd | fobos | ftrl | "
-             "trunc; default: $REPRO_SOLVER or the config's flavor)",
-    )
-    ap.add_argument("--dim", type=int, default=20_000, help="--linear feature-space size")
+    ap.add_argument("--tenants", type=int, default=None, metavar="N",
+                    help="--linear: serve N tenant models through one "
+                         "MultiLinearService (cross-tenant vmapped dispatch)")
+    flags.add_solver(ap)
+    flags.add_dim(ap, help="--linear feature-space size")
     # BooleanOptionalAction: --no-reduced reaches the full-size config (the
     # old action="store_true" + default=True made it unreachable)
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction, default=True,
@@ -247,39 +337,31 @@ def main():
         "--mesh", default=None, metavar="DxM",
         help='data x model mesh over visible devices (e.g. "1x2")',
     )
-    ap.add_argument(
-        "--backend", default=None, choices=kernel_backend.available_backends(),
-        help="kernel backend for the attention hot path "
-             "(default: $REPRO_BACKEND or platform default)",
-    )
-    ap.add_argument(
-        "--fused", action=argparse.BooleanOptionalAction, default=None,
-        help="--linear: fused whole-step solver kernels (--no-fused: "
-             "multi-op step; default: $REPRO_FUSED, then fused)",
-    )
-    ap.add_argument(
-        "--state-dtype", default="f32", choices=("f32", "bf16", "int8"),
-        help="--linear: storage grid for the non-weight state columns "
-             "(DESIGN.md §13)",
-    )
-    ap.add_argument(
-        "--metrics-out", default=None, metavar="RUN.jsonl",
-        help="write a structured JSONL run log (summarize with "
-             "`python -m repro.obs.report`)",
-    )
-    ap.add_argument(
-        "--profile", default=None, metavar="DIR",
-        help="collect a jax profiler trace of the run into DIR",
-    )
+    flags.add_backend(ap, help="kernel backend for the attention / solver hot "
+                               "paths (default: $REPRO_BACKEND or platform default)")
+    flags.add_fused(ap, help="--linear: fused whole-step solver kernels "
+                             "(--no-fused: multi-op step; default: "
+                             "$REPRO_FUSED, then fused)")
+    flags.add_state_dtype(ap, help="--linear: storage grid for the non-weight "
+                                   "state columns (DESIGN.md §13)")
+    flags.add_metrics_out(ap)
+    flags.add_profile(ap)
     args = ap.parse_args()
     if args.linear:
         with obs.run_logger(
             args.metrics_out, "serve", d=args.dim,
             linear=True, solver=args.solver, backend=args.backend,
+            tenants=args.tenants,
         ), obs.profile_to(args.profile):
-            serve_linear(solver=args.solver, backend=args.backend, dim=args.dim,
-                         requests=args.requests or 256, seed=args.seed,
-                         fused=args.fused, state_dtype=args.state_dtype)
+            if args.tenants:
+                serve_multitenant(tenants=args.tenants, solver=args.solver,
+                                  backend=args.backend, dim=args.dim,
+                                  requests=args.requests or 512, seed=args.seed,
+                                  fused=args.fused, state_dtype=args.state_dtype)
+            else:
+                serve_linear(solver=args.solver, backend=args.backend, dim=args.dim,
+                             requests=args.requests or 256, seed=args.seed,
+                             fused=args.fused, state_dtype=args.state_dtype)
         return
     if not args.arch:
         ap.error("--arch is required unless --linear")

@@ -20,13 +20,12 @@ import time
 
 import numpy as np
 
-from repro import backend as kernel_backend
-from repro import core as lt_core
 from repro import obs
 from repro import solvers as solver_registry
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.data import BowConfig, SyntheticBow
-from repro.serving import LinearService
+from repro.launch import flags
+from repro.serving import LinearService, ServiceConfig
 from repro.sweeps import kfold_cv, log_ladder, make_grid
 
 
@@ -50,7 +49,7 @@ def main() -> None:
         default=True,
         help="chain each lam1 stage from its neighbor's flushed weights",
     )
-    ap.add_argument("--dim", type=int, default=20_000)
+    flags.add_dim(ap)
     ap.add_argument("--round-len", type=int, default=256)
     ap.add_argument("--rounds", type=int, default=1, help="rounds per fold")
     ap.add_argument("--batch", type=int, default=8)
@@ -61,9 +60,8 @@ def main() -> None:
     ap.add_argument("--lam2-lo", type=float, default=1e-7)
     ap.add_argument("--eta0", type=float, default=0.3)
     ap.add_argument("--flavor", default="fobos", choices=("sgd", "fobos"))
-    ap.add_argument(
-        "--solver",
-        default=None,
+    flags.add_solver(
+        ap,
         metavar="NAME[,NAME...]",
         help="solver(s) to sweep (repro.solvers: sgd | fobos | ftrl | trunc); "
         "a comma-separated list adds a solver axis to the grid — every "
@@ -76,40 +74,23 @@ def main() -> None:
         action="store_true",
         help="hot-swap the winner into a LinearService and serve a sample batch",
     )
-    ap.add_argument(
-        "--backend",
-        default=None,
-        choices=kernel_backend.available_backends(),
-        help="kernel backend for the vmapped lazy/flush hot paths "
-        "(default: $REPRO_BACKEND or platform default)",
+    flags.add_backend(
+        ap,
+        help="kernel backend for the vmapped lazy/flush hot "
+        "paths (default: $REPRO_BACKEND or platform default)",
     )
-    ap.add_argument(
-        "--fused",
-        action=argparse.BooleanOptionalAction,
-        default=None,
-        help="fused whole-step solver kernels (--no-fused: multi-op step; "
-        "default: $REPRO_FUSED, then fused)",
-    )
-    ap.add_argument(
-        "--state-dtype",
-        default="f32",
-        choices=lt_core.STATE_DTYPES,
+    flags.add_fused(ap)
+    flags.add_state_dtype(
+        ap,
         help="storage grid for the non-weight state columns (psi / ftrl z,n);"
         " bf16/int8 bound round_len for cache-based solvers (DESIGN.md §13)",
     )
-    ap.add_argument(
-        "--metrics-out",
-        default=None,
-        metavar="RUN.jsonl",
+    flags.add_metrics_out(
+        ap,
         help="write a structured JSONL run log (per-stage spans + compile "
         "deltas; summarize with `python -m repro.obs.report`)",
     )
-    ap.add_argument(
-        "--profile",
-        default=None,
-        metavar="DIR",
-        help="collect a jax profiler trace of the sweep into DIR",
-    )
+    flags.add_profile(ap, help="collect a jax profiler trace of the sweep into DIR")
     args = ap.parse_args()
 
     n1, n2 = parse_grid(args.grid)
@@ -195,7 +176,7 @@ def main() -> None:
 
     if args.swap_demo:
         print("\nswap demo: installing the winner into a live LinearService")
-        svc = LinearService(res.best_config, p_max=args.p_max, micro_batch=8)
+        svc = LinearService(res.best_config, ServiceConfig(p_max=args.p_max, micro_batch=8))
         svc.swap_weights(res.best_weights, res.best_b, cfg=res.best_config)
         chunk = bow.sample_round(10_007, 1, 8)
         batch = SparseBatch(idx=chunk.idx[0], val=chunk.val[0], y=chunk.y[0])

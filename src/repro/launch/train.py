@@ -34,6 +34,7 @@ from repro import backend as kernel_backend
 from repro import obs
 from repro import solvers
 from repro.checkpoint import checkpointer
+from repro.launch import flags
 from repro.configs import get_arch
 from repro.data import LMDataConfig, SyntheticLMData
 from repro.dist import sharding as dist_sharding
@@ -226,42 +227,33 @@ def main():
         help='data x model mesh over visible devices (e.g. "2x2"); '
              "default: single-device, no sharding",
     )
-    ap.add_argument(
-        "--backend", default=None, choices=kernel_backend.available_backends(),
-        help="kernel backend for attention + lazy-reg hot paths "
-             "(default: $REPRO_BACKEND or platform default)",
-    )
+    flags.add_backend(ap, help="kernel backend for attention + lazy-reg hot "
+                               "paths (default: $REPRO_BACKEND or platform default)")
     # only cache-based solvers can host the embedding row slab (one psi per
     # row; apply-at-read solvers keep per-coordinate state) — reject the
     # rest at argparse time, not after the model is built
     row_solvers = tuple(
         n for n in solvers.available_solvers() if solvers.get_solver(n).caches_based
     )
-    ap.add_argument(
-        "--solver", default=None, choices=row_solvers,
+    flags.add_solver(
+        ap, choices=row_solvers,
         help="update rule for the embedding's lazy regularizer "
              "(cache-based solvers only; default: $REPRO_SOLVER or the "
              "arch's reg_flavor)",
     )
-    ap.add_argument(
-        "--reg-fused", action=argparse.BooleanOptionalAction, default=None,
+    # --reg-fused / --no-reg-fused stay as documented aliases of --fused
+    flags.add_fused(
+        ap, aliases=("--reg-fused",),
         help="one-pass fused catchup+SGD on the embedding row slab "
-             "(--no-reg-fused: split catchup-then-step; default: the arch's "
-             "reg_fused)",
+             "(--no-fused / --no-reg-fused: split catchup-then-step; "
+             "default: the arch's reg_fused)",
     )
-    ap.add_argument(
-        "--metrics-out", default=None, metavar="RUN.jsonl",
-        help="write a structured JSONL run log (summarize with "
-             "`python -m repro.obs.report`)",
-    )
+    flags.add_metrics_out(ap)
     ap.add_argument(
         "--metrics-interval", type=int, default=50, metavar="N",
         help="steps between periodic metrics lines in the run log",
     )
-    ap.add_argument(
-        "--profile", default=None, metavar="DIR",
-        help="collect a jax profiler trace of the run into DIR",
-    )
+    flags.add_profile(ap)
     args = ap.parse_args()
     d = get_arch(args.arch)
     if args.reduced:
@@ -282,7 +274,7 @@ def main():
             seed=args.seed,
             mesh_shape=args.mesh,
             solver=args.solver,
-            reg_fused=args.reg_fused,
+            reg_fused=args.fused,
             metrics_interval=args.metrics_interval,
             profile=args.profile,
         )

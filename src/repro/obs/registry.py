@@ -23,6 +23,27 @@ from typing import Dict, List, Optional
 import numpy as np
 
 
+def label(name: str, **labels) -> str:
+    """Encode a labelled metric name in Prometheus series form:
+    ``label("learn_steps", tenant="u7") -> 'learn_steps{tenant="u7"}'``.
+    The registry treats the result as an ordinary (distinct) metric name —
+    labels are a *naming* convention, sorted for a canonical series key —
+    and ``to_prometheus`` re-emits the label block verbatim, so per-tenant
+    serving counters scrape as proper labelled series."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+def split_label(series: str) -> tuple:
+    """``'name{k="v"}' -> ("name", '{k="v"}')``; plain names -> (name, "")."""
+    i = series.find("{")
+    if i < 0:
+        return series, ""
+    return series[:i], series[i:]
+
+
 class MetricsRegistry:
     """Counters (monotonic), gauges (last value), histograms (observations
     summarized as count/mean/p50/p99/max)."""
@@ -112,26 +133,40 @@ class MetricsRegistry:
 
     def to_prometheus(self, prefix: str = "repro") -> str:
         """Prometheus text exposition: counters as ``*_total``, gauges
-        plain, histograms as quantile-labelled summaries."""
+        plain, histograms as quantile-labelled summaries.  Series recorded
+        under :func:`label`-encoded names keep their label block (only the
+        base name is mangled), so per-tenant counters scrape as labelled
+        series of one metric rather than N mangled metric names."""
         lines: List[str] = []
 
         def _name(*parts):
             return re.sub(r"[^a-zA-Z0-9_]", "_", "_".join(p for p in parts if p))
 
+        def _series(series, *suffix):
+            base, lbl = split_label(series)
+            return _name(prefix, base, *suffix) + lbl
+
         for name in sorted(self.counters):
-            m = _name(prefix, name, "total")
-            lines.append(f"# TYPE {m} counter")
+            m = _series(name, "total")
+            lines.append(f"# TYPE {split_label(m)[0]} counter")
             lines.append(f"{m} {self.counters[name]}")
         for name in sorted(self.gauges):
-            m = _name(prefix, name)
-            lines.append(f"# TYPE {m} gauge")
+            m = _series(name)
+            lines.append(f"# TYPE {split_label(m)[0]} gauge")
             lines.append(f"{m} {self.gauges[name]}")
+        def _quantile(m, q, v):
+            # labelled series merge the quantile into the existing block
+            if "{" in m:
+                return f'{m[:-1]},quantile="{q}"}} {v}'
+            return f'{m}{{quantile="{q}"}} {v}'
+
         for name in sorted(self._hist):
-            m = _name(prefix, name)
+            m = _series(name)
+            base = split_label(m)[0]
             s = self.hist_summary(name)
-            lines.append(f"# TYPE {m} summary")
-            lines.append(f'{m}{{quantile="0.5"}} {s["p50"]}')
-            lines.append(f'{m}{{quantile="0.99"}} {s["p99"]}')
-            lines.append(f"{m}_sum {s['mean'] * s['count']}")
-            lines.append(f"{m}_count {s['count']}")
+            lines.append(f"# TYPE {base} summary")
+            lines.append(_quantile(m, "0.5", s["p50"]))
+            lines.append(_quantile(m, "0.99", s["p99"]))
+            lines.append(f"{base}_sum {s['mean'] * s['count']}")
+            lines.append(f"{base}_count {s['count']}")
         return "\n".join(lines) + "\n"

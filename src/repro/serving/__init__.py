@@ -1,24 +1,31 @@
-"""repro.serving — the request-serving subsystem (DESIGN.md §9).
+"""repro.serving — the request-serving subsystem (DESIGN.md §9, §15).
 
 ``ServeEngine`` is slot-based continuous batching for LM decode (fixed
 shapes, zero recompiles after warmup); ``LinearService`` is the online
-predict/learn frontend over the paper's lazy elastic-net trainer; both sit
-behind ``AdmissionQueue`` micro-batching and report through
-``ServingMetrics``.
+predict/learn frontend over the paper's lazy elastic-net trainer;
+``MultiLinearService`` stacks N tenant models into one vmapped program set
+per solver.  All sit behind ``AdmissionQueue`` micro-batching, share the
+``ServiceConfig`` knob surface, and report through ``ServingMetrics``.
 """
 from .engine import EngineConfig, ServeEngine, VirtualClock, WallClock
 from .linear_service import LinearService
 from .metrics import ServingMetrics
+from .multi_service import MultiLinearService
 from .queue import AdmissionQueue, Request, RequestFuture
+from .service_config import ServiceConfig, binary_buckets, pin_config
 
 __all__ = [
     "AdmissionQueue",
     "EngineConfig",
     "LinearService",
+    "MultiLinearService",
     "Request",
     "RequestFuture",
     "ServeEngine",
+    "ServiceConfig",
     "ServingMetrics",
     "VirtualClock",
     "WallClock",
+    "binary_buckets",
+    "pin_config",
 ]

@@ -20,72 +20,64 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import backend as kernel_backend
 from repro import solvers as solver_registry
 from repro.core import linear_trainer as lt
 from repro.core.linear_trainer import LinearConfig, SparseBatch
 from repro.obs.compile_tracker import CompileTracker
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import AdmissionQueue
+from repro.serving.service_config import ServiceConfig, binary_buckets, pin_config
+
+_UNSET = object()  # sentinel: distinguishes "alias not passed" from None
 
 
-def _binary_buckets(micro_batch: int) -> Tuple[int, ...]:
-    assert micro_batch >= 1 and micro_batch & (micro_batch - 1) == 0, \
-        f"micro_batch must be a power of two, got {micro_batch}"
-    out, b = [], 1
-    while b <= micro_batch:
-        out.append(b)
-        b *= 2
-    return tuple(out)
+def resolve_service(service: Optional[ServiceConfig], **aliases) -> ServiceConfig:
+    """Fold deprecated per-kwarg knobs into a ServiceConfig.  Every alias
+    actually passed (identity-checked against the _UNSET sentinel, so an
+    explicit None still counts) raises a DeprecationWarning and overrides
+    the matching field — keeping pre-ServiceConfig call sites working
+    unchanged while both ctor paths produce identical services."""
+    passed = {k: v for k, v in aliases.items() if v is not _UNSET}
+    if passed:
+        warnings.warn(
+            f"passing {sorted(passed)} as keyword arguments is deprecated; "
+            f"use service=ServiceConfig(...) (aliases override its fields)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    service = service or ServiceConfig()
+    return dataclasses.replace(service, **passed) if passed else service
 
 
 class LinearService:
-    def __init__(self, cfg: LinearConfig, *, p_max: int = 128, micro_batch: int = 8,
-                 max_delay: float = 0.0, w0: Optional[np.ndarray] = None,
-                 metrics: Optional[ServingMetrics] = None,
-                 backend: Optional[str] = None,
-                 solver: Optional[str] = None):
-        if backend is not None and cfg.backend is not None and backend != cfg.backend:
-            raise ValueError(
-                f"conflicting explicit backends: cfg.backend={cfg.backend!r} "
-                f"vs backend={backend!r}"
-            )
-        if solver is not None and cfg.solver is not None and solver != cfg.solver:
-            raise ValueError(
-                f"conflicting explicit solvers: cfg.solver={cfg.solver!r} "
-                f"vs solver={solver!r}"
-            )
-        if cfg.backend is None:
-            # pin a CONCRETE backend into the config at construction: every
-            # jit this service builds (now or in a later swap_weights
-            # rebuild) closes over the same choice, whatever use_backend()/
-            # $REPRO_BACKEND context happens to be live when it first traces
-            cfg = dataclasses.replace(
-                cfg, backend=backend or kernel_backend.resolve(None).name
-            )
-        if cfg.solver is None:
-            # same pinning for the solver: the live service must not change
-            # update rule because $REPRO_SOLVER changed under it
-            cfg = dataclasses.replace(
-                cfg, solver=(solver or solver_registry.for_config(cfg).name)
-            )
-        if cfg.fused is None:
-            # and for the fused-step routing: resolve $REPRO_FUSED once at
-            # construction so later rebuilds trace the same program shape
-            cfg = dataclasses.replace(cfg, fused=lt.fused_enabled(cfg))
+    def __init__(self, cfg: LinearConfig, service: Optional[ServiceConfig] = None, *,
+                 w0: Optional[np.ndarray] = None,
+                 p_max=_UNSET, micro_batch=_UNSET, max_delay=_UNSET,
+                 metrics=_UNSET, backend=_UNSET, solver=_UNSET):
+        service = resolve_service(
+            service, p_max=p_max, micro_batch=micro_batch, max_delay=max_delay,
+            metrics=metrics, backend=backend, solver=solver,
+        )
+        # pin every deferred LinearConfig field (backend/solver/fused) to a
+        # concrete value before the first jit: the live service must never
+        # change program because $REPRO_*/use_backend() context changed
+        cfg = pin_config(cfg, service)
         self.cfg = cfg
-        self.p_max = p_max
-        self.micro_batch = micro_batch
-        self.buckets = _binary_buckets(micro_batch)
+        self.service = service
+        self.p_max = service.p_max
+        self.micro_batch = service.micro_batch
+        self.buckets = binary_buckets(service.micro_batch)
         self.state = lt.init_state(cfg, w0)
-        self.metrics = metrics or ServingMetrics()
-        self.queue = AdmissionQueue(max_batch=micro_batch, max_delay=max_delay)
+        self.metrics = service.metrics or ServingMetrics()
+        self.queue = AdmissionQueue(max_batch=service.micro_batch,
+                                    max_delay=service.max_delay)
         self._build_jits()
 
     def _build_jits(self) -> None:
@@ -117,7 +109,8 @@ class LinearService:
 
     # -- sweep integration ---------------------------------------------------
 
-    def swap_weights(self, w, b: float = 0.0, cfg: Optional[LinearConfig] = None) -> None:
+    def swap_weights(self, w=None, b: float = 0.0, cfg: Optional[LinearConfig] = None,
+                     state=None) -> None:
         """Hot-swap a finished sweep's winning model into the live service.
 
         The new state opens a fresh round (psi=0, empty caches — the swapped
@@ -130,7 +123,17 @@ class LinearService:
         flight); the jitted step/flush/predict close over the lams as
         constants, so that costs one rebuild per swap — never a per-request
         recompile.  The feature space is fixed: online requests in flight
-        keep indexing the same rows."""
+        keep indexing the same rows.
+
+        ``state=`` swaps a full packed ``[d, state_cols]`` solver state
+        instead of a weight vector — the lossless form: an FTRL sweep winner
+        keeps its accumulated (z, n) (a (w, b)-form swap would round-trip
+        through seed_cols and erase the per-coordinate learning rates), and
+        a migrating tenant keeps its exact optimizer state.  The solver's
+        ``adopt_state`` sanitizes it against the fresh round (cache-based
+        solvers rebase psi to 0)."""
+        if (w is None) == (state is None):
+            raise ValueError("swap_weights takes exactly one of w= or state=")
         if cfg is not None and cfg.backend is None:
             # sweep-winner configs usually carry backend=None: keep the
             # backend pinned at construction rather than reverting the live
@@ -152,9 +155,23 @@ class LinearService:
             self.cfg = cfg
             self._build_jits()
         t = self.state.t
-        self.state = lt.init_state(self.cfg, np.asarray(w, np.float32))._replace(
-            b=jnp.asarray(b, jnp.float32), t=t
-        )
+        if state is not None:
+            sv = solver_registry.for_config(self.cfg)
+            packed = jnp.asarray(state, jnp.float32)
+            if packed.shape != (self.cfg.dim, sv.state_cols):
+                raise ValueError(
+                    f"state= shape {packed.shape} != "
+                    f"[{self.cfg.dim}, {sv.state_cols}] for solver {sv.name!r}"
+                )
+            fresh = lt.init_state(self.cfg, None)
+            self.state = fresh._replace(
+                wpsi=sv.adopt_state(self.cfg, packed),
+                b=jnp.asarray(b, jnp.float32), t=t,
+            )
+        else:
+            self.state = lt.init_state(self.cfg, np.asarray(w, np.float32))._replace(
+                b=jnp.asarray(b, jnp.float32), t=t
+            )
         self.metrics.count("weight_swaps")
 
     # -- padding ------------------------------------------------------------

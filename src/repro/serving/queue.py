@@ -71,19 +71,36 @@ class AdmissionQueue:
     """FIFO micro-batching queue over arbitrary items (LM request futures,
     linear-service examples).  ``pop_ready`` only ever returns items whose
     arrival stamp is <= now — the Poisson benchmark submits the whole trace
-    up front and lets the clock admit it."""
+    up front and lets the clock admit it.
 
-    def __init__(self, max_batch: int = 8, max_delay: float = 0.0):
+    Items may carry a *tag* (e.g. a tenant name).  ``per_tag_cap`` is the
+    QoS backpressure knob of the multi-tenant service: when one tag already
+    has that many items waiting, further puts for it are REJECTED (``put``
+    returns False) instead of letting a hot tenant grow the queue without
+    bound and starve everyone else's latency.  Untagged items are never
+    capped; ``pop_ready`` stays strictly FIFO across tags."""
+
+    def __init__(self, max_batch: int = 8, max_delay: float = 0.0,
+                 per_tag_cap: Optional[int] = None):
         assert max_batch >= 1
+        assert per_tag_cap is None or per_tag_cap >= 1
         self.max_batch = max_batch
         self.max_delay = max_delay
-        self._items: List[Any] = []
+        self.per_tag_cap = per_tag_cap
+        self._items: List[Any] = []  # (arrival, tag, item) triples
         self._lock = threading.Lock()
 
-    def put(self, item: Any, arrival: Optional[float] = None) -> None:
-        """``arrival=None`` means already arrived, whatever the timebase."""
+    def put(self, item: Any, arrival: Optional[float] = None, tag: Optional[str] = None) -> bool:
+        """``arrival=None`` means already arrived, whatever the timebase.
+        Returns True when admitted, False when the tag's QoS cap rejected
+        it (the caller decides whether to retry, shed, or count it)."""
         with self._lock:
-            self._items.append((None if arrival is None else float(arrival), item))
+            if tag is not None and self.per_tag_cap is not None:
+                waiting = sum(1 for _, tg, _ in self._items if tg == tag)
+                if waiting >= self.per_tag_cap:
+                    return False
+            self._items.append((None if arrival is None else float(arrival), tag, item))
+        return True
 
     def __len__(self) -> int:
         with self._lock:
@@ -96,12 +113,22 @@ class AdmissionQueue:
     def depth(self, now: float) -> int:
         """Waiting items that have actually arrived by ``now``."""
         with self._lock:
-            return sum(1 for a, _ in self._items if self._arrived(a, now))
+            return sum(1 for a, _, _ in self._items if self._arrived(a, now))
+
+    def depth_by_tag(self, now: float) -> dict:
+        """Arrived-item counts per tag (untagged items under None) — the
+        per-tenant queue-depth gauge the multi-tenant metrics sample."""
+        out: dict = {}
+        with self._lock:
+            for a, tg, _ in self._items:
+                if self._arrived(a, now):
+                    out[tg] = out.get(tg, 0) + 1
+        return out
 
     def next_arrival(self, now: float) -> Optional[float]:
         """Earliest future arrival (> now), for virtual-clock advancement."""
         with self._lock:
-            future = [a for a, _ in self._items if a is not None and a > now]
+            future = [a for a, _, _ in self._items if a is not None and a > now]
         return min(future) if future else None
 
     def _flush_triggered(self, arrived, now: float, force: bool) -> bool:
@@ -109,7 +136,7 @@ class AdmissionQueue:
             return False
         if force or len(arrived) >= self.max_batch:
             return True
-        oldest = min(a if a is not None else float("-inf") for a, _ in arrived)
+        oldest = min(a if a is not None else float("-inf") for a, _, _ in arrived)
         return now - oldest >= self.max_delay
 
     def pop_ready(self, now: float, limit: Optional[int] = None, force: bool = False) -> List[Any]:
@@ -118,11 +145,11 @@ class AdmissionQueue:
         if limit is not None and limit <= 0:
             return []
         with self._lock:
-            arrived = [(a, it) for a, it in self._items if self._arrived(a, now)]
+            arrived = [(a, tg, it) for a, tg, it in self._items if self._arrived(a, now)]
             if not self._flush_triggered(arrived, now, force):
                 return []
             n = len(arrived) if limit is None else min(limit, len(arrived))
             take = arrived[:n]
-            taken_ids = {id(it) for _, it in take}
-            self._items = [(a, it) for a, it in self._items if id(it) not in taken_ids]
-        return [it for _, it in take]
+            taken_ids = {id(it) for _, _, it in take}
+            self._items = [e for e in self._items if id(e[2]) not in taken_ids]
+        return [it for _, _, it in take]

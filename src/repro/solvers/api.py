@@ -88,6 +88,17 @@ class Solver:
         ``w0.shape + (state_cols,)``."""
         raise NotImplementedError
 
+    def adopt_state(self, cfg, packed: jnp.ndarray) -> jnp.ndarray:
+        """Sanitize a full packed ``[d, state_cols]`` state arriving from
+        *outside* this trainer's round (swap_weights ``state=``, a tenant
+        migration, a checkpoint restore): the adopted state must be valid
+        against FRESH round-local bookkeeping (empty DP caches, i=0).
+        Apply-at-read solvers adopt verbatim (their (z, n) state is global,
+        which is the whole point of the state-carrying swap); cache-based
+        solvers rebase the round-local psi column to 0 — the incoming
+        weights are treated as current, exactly like a flushed state."""
+        return packed
+
     # -- the O(p) step -------------------------------------------------------
 
     def touched_update(self, cfg, state, batch, hp, eta, bk) -> Tuple[object, jnp.ndarray]:

@@ -56,6 +56,12 @@ class LazyCacheSolver(Solver):
         w0 = jnp.asarray(w0, jnp.float32)
         return jnp.stack([w0, jnp.zeros_like(w0)], axis=-1)  # psi = 0: current
 
+    def adopt_state(self, cfg, packed: jnp.ndarray) -> jnp.ndarray:
+        # psi is round-local; a state adopted into a fresh round (empty
+        # caches, i=0) must read its weights as current, so psi rebases to 0
+        packed = jnp.asarray(packed, jnp.float32)
+        return packed.at[..., 1].set(0.0)
+
     def touched_update(self, cfg, state, batch, hp, eta, bk) -> Tuple[object, jnp.ndarray]:
         from repro.core import linear_trainer as lt
 

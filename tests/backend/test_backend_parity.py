@@ -22,7 +22,7 @@ from repro.core import (
     predict_proba_sparse,
 )
 from repro.core import linear_trainer as lt
-from repro.serving import LinearService
+from repro.serving import LinearService, ServiceConfig
 from repro.sweeps import make_grid, run_grid
 
 DIM = 96
@@ -175,7 +175,7 @@ def test_linear_service_compile_counts_backend_independent(rng):
     counts = {}
     for name in ("reference", "pallas"):
         cfg = LinearConfig(dim=DIM, round_len=8, lam1=1e-3, lam2=1e-4)
-        svc = LinearService(cfg, p_max=8, micro_batch=4, backend=name)
+        svc = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4, backend=name))
         assert svc.cfg.backend == name  # pinned via dataclasses.replace
         r = np.random.RandomState(0)
         for t in range(12):
@@ -194,6 +194,6 @@ def test_linear_service_compile_counts_backend_independent(rng):
 
 def test_swap_weights_preserves_backend(rng):
     cfg = LinearConfig(dim=DIM, round_len=8, backend="pallas")
-    svc = LinearService(cfg, p_max=8, micro_batch=4)
+    svc = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
     svc.swap_weights(np.zeros(DIM, np.float32), cfg=dataclasses.replace(cfg, lam1=5e-4))
     assert svc.cfg.backend == "pallas"

@@ -19,7 +19,7 @@ from repro.core import (
     predict_proba,
     predict_proba_sparse,
 )
-from repro.serving import LinearService
+from repro.serving import LinearService, ServiceConfig
 
 DIM = 97
 
@@ -55,7 +55,7 @@ def test_learn_parity_with_lazy_step():
         if int(ref.i) >= cfg.round_len:
             ref = flush(cfg, ref)
 
-    svc = LinearService(cfg, p_max=8, micro_batch=4)
+    svc = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
     svc_losses = [svc.learn(b) for b in batches]
 
     np.testing.assert_allclose(svc_losses, ref_losses, rtol=1e-6, atol=1e-7)
@@ -71,8 +71,8 @@ def test_interleaved_predict_does_not_perturb_learning():
     rng = np.random.RandomState(1)
     batches = [_mk(rng, 2, 5) for _ in range(20)]
 
-    plain = LinearService(cfg, p_max=8, micro_batch=4)
-    mixed = LinearService(cfg, p_max=8, micro_batch=4)
+    plain = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
+    mixed = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
     for b in batches:
         plain.learn(b)
         mixed.predict(_mk(rng, 3, 6))  # rng advance is irrelevant to state
@@ -133,7 +133,7 @@ def test_frontend_binary_flush_decomposition():
             float(rng.randint(0, 2)),
         ))
 
-    svc = LinearService(cfg, p_max=8, micro_batch=4)
+    svc = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
     for i, v, y in examples:
         svc.submit_learn(i, v, y, arrival=0.0)
     trained = svc.poll(now=0.0, force=True)
@@ -161,7 +161,7 @@ def test_frontend_binary_flush_decomposition():
 
 
 def test_frontend_respects_flush_policy():
-    svc = LinearService(_cfg(), p_max=8, micro_batch=4, max_delay=10.0)
+    svc = LinearService(_cfg(), ServiceConfig(p_max=8, micro_batch=4, max_delay=10.0))
     svc.submit_learn([1, 2], [0.5, 0.5], 1.0, arrival=0.0)
     assert svc.poll(now=1.0) == 0  # 1 < micro_batch, deadline not reached
     assert svc.poll(now=11.0) == 1  # deadline flush
@@ -174,7 +174,7 @@ def test_swap_weights_installs_sweep_winner():
     do not restart), online learning continues, and passing a new cfg swaps
     the hyperparameters the jitted step closes over."""
     rng = np.random.RandomState(6)
-    svc = LinearService(_cfg(), p_max=8, micro_batch=4)
+    svc = LinearService(_cfg(), ServiceConfig(p_max=8, micro_batch=4))
     for _ in range(5):
         svc.learn(_mk(rng, 2, 5))
     t_before = int(svc.state.t)
@@ -206,7 +206,7 @@ def test_swap_weights_installs_sweep_winner():
 
 
 def test_swap_weights_rejects_dim_change():
-    svc = LinearService(_cfg(), p_max=8, micro_batch=4)
+    svc = LinearService(_cfg(), ServiceConfig(p_max=8, micro_batch=4))
     bigger = LinearConfig(dim=DIM + 1, round_len=16, lam1=0.01, lam2=0.005)
     with pytest.raises(AssertionError, match="feature space"):
         svc.swap_weights(np.zeros(DIM + 1, np.float32), cfg=bigger)
@@ -217,7 +217,7 @@ def test_compile_counts_bounded_by_buckets():
     one predict per bucket — fixed shapes thereafter."""
     cfg = _cfg()
     rng = np.random.RandomState(5)
-    svc = LinearService(cfg, p_max=8, micro_batch=4)
+    svc = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
     for B in (1, 2, 4, 2, 1, 4, 4, 1):
         svc.learn(_mk(rng, B, 5))
         svc.predict(_mk(rng, B, 3))

@@ -1,0 +1,263 @@
+"""Multi-tenant serving: single-slot parity with LinearService, cross-tenant
+isolation across every solver, the frozen compile set over the full tenant
+lifecycle, QoS admission caps, and snapshot/restore round trips."""
+import numpy as np
+import pytest
+
+from repro import backend as kernel_backend
+from repro import solvers as solver_registry
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.serving import LinearService, MultiLinearService, ServiceConfig
+
+DIM = 97
+
+
+def _cfg(round_len=16, solver=None, backend=None):
+    return LinearConfig(
+        dim=DIM, round_len=round_len, lam1=0.01, lam2=0.005,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3),
+        solver=solver, backend=backend,
+    )
+
+
+def _mk(rng, B, p):
+    import jax.numpy as jnp
+
+    idx = rng.randint(0, DIM, size=(B, p)).astype(np.int32)
+    val = (rng.uniform(-1, 1, size=(B, p)) * (rng.uniform(size=(B, p)) > 0.3)).astype(np.float32)
+    y = (rng.uniform(size=B) > 0.5).astype(np.float32)
+    return SparseBatch(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(y))
+
+
+@pytest.mark.parametrize("backend", kernel_backend.available_backends())
+def test_single_slot_replays_linear_service(backend):
+    """n_slots=1 is LinearService: same losses, weights, bias over mixed
+    bucket sizes and round flushes — bitwise on the reference backend (the
+    OOB-sentinel masking never touches an active lane's arithmetic), and to
+    kernel tolerance on pallas."""
+    cfg = _cfg(backend=backend)
+    rng = np.random.RandomState(0)
+    batches = [_mk(rng, int(B), 5) for B in rng.choice([1, 2, 4], size=30)]
+
+    ref = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
+    multi = MultiLinearService(cfg, n_slots=1, service=ServiceConfig(p_max=8, micro_batch=4))
+    multi.add_tenant("only")
+
+    ref_losses = [ref.learn(b) for b in batches]
+    svc_losses = [multi.learn("only", b) for b in batches]
+
+    exact = backend == "reference"
+    tol = dict(rtol=0, atol=0) if exact else dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(svc_losses, ref_losses, **tol)
+    np.testing.assert_allclose(
+        multi.current_weights("only"), ref.current_weights(), **tol
+    )
+    np.testing.assert_allclose(
+        float(multi.tenant_state("only").b), float(ref.state.b), **tol
+    )
+    pq = _mk(rng, 3, 6)
+    np.testing.assert_allclose(
+        multi.predict("only", pq.idx, pq.val), ref.predict(pq), **tol
+    )
+
+
+@pytest.mark.parametrize("solver", solver_registry.available_solvers())
+def test_cross_tenant_isolation(solver):
+    """Two tenants sharing one vmapped program set stay independent: each
+    matches a solo LinearService fed the same stream, and an idle tenant's
+    lane comes out bitwise-untouched (the OOB sentinel drops its scatters)."""
+    cfg = _cfg(solver=solver)
+    svc = MultiLinearService(cfg, n_slots=4, service=ServiceConfig(p_max=8, micro_batch=4))
+    svc.add_tenant("a")
+    svc.add_tenant("b", lam1=0.02, eta0=0.2)
+    svc.add_tenant("idle")
+    solo_a = LinearService(cfg, ServiceConfig(p_max=8, micro_batch=4))
+    import dataclasses
+
+    cfg_b = dataclasses.replace(
+        cfg, lam1=0.02, schedule=dataclasses.replace(cfg.schedule, eta0=0.2)
+    )
+    solo_b = LinearService(cfg_b, ServiceConfig(p_max=8, micro_batch=4))
+
+    rng_a, rng_b = np.random.RandomState(1), np.random.RandomState(2)
+    for _ in range(20):  # interleaved: every dispatch carries both lanes
+        ba, bb = _mk(rng_a, 2, 5), _mk(rng_b, 2, 5)
+        la, lb = svc.learn("a", ba), svc.learn("b", bb)
+        assert la == solo_a.learn(ba)
+        assert lb == solo_b.learn(bb)
+
+    np.testing.assert_array_equal(svc.current_weights("a"), solo_a.current_weights())
+    np.testing.assert_array_equal(svc.current_weights("b"), solo_b.current_weights())
+    idle = svc.tenant_state("idle")
+    np.testing.assert_array_equal(np.asarray(idle.wpsi), 0.0)
+    assert float(idle.b) == 0.0 and int(idle.t) == 0
+
+
+def test_lifecycle_stays_in_frozen_compile_set():
+    """After warmup, steady traffic AND the whole tenant lifecycle — add,
+    evict (slot reuse), swap, snapshot, restore — trigger zero new compiles:
+    slot index, weights, clocks, and hypers are all dynamic operands."""
+    import tempfile
+
+    svc = MultiLinearService(
+        _cfg(round_len=4), n_slots=3, service=ServiceConfig(p_max=8, micro_batch=4)
+    )
+    svc.warmup()
+    rng = np.random.RandomState(3)
+    with svc.compiles.assert_no_new_compiles("multi-tenant lifecycle"):
+        svc.add_tenant("t0", lam1=1e-3)
+        svc.add_tenant("t1", lam1=1e-4)
+        for _ in range(6):  # crosses the round boundary -> masked flushes
+            svc.learn("t0", _mk(rng, 4, 5))
+            svc.learn("t1", _mk(rng, 2, 5))
+        pq = _mk(rng, 4, 6)
+        svc.predict_many({"t0": (pq.idx, pq.val), "t1": (pq.idx, pq.val)})
+        _, slot0 = svc.slot_of("t0")
+        svc.evict_tenant("t0")
+        assert svc.add_tenant("t2") == slot0  # LIFO slot reuse
+        svc.learn("t2", _mk(rng, 1, 3))
+        svc.swap_tenant("t1", w=rng.randn(DIM).astype(np.float32) * 0.1, b=0.5)
+        with tempfile.TemporaryDirectory() as tmp:
+            svc.snapshot_tenant("t1", tmp)
+            svc.evict_tenant("t1")
+            svc.restore_tenant("t1", tmp)
+        svc.learn("t1", _mk(rng, 2, 4))
+    counts = svc.compile_counts()
+    key = svc.cfg.solver
+    assert counts[f"{key}/learn"] <= 3  # buckets 1, 2, 4
+    assert counts[f"{key}/predict"] <= 3
+    assert counts[f"{key}/flush"] == 1
+    assert counts[f"{key}/seed_w"] == 1
+    assert counts[f"{key}/seed_state"] == 1
+
+
+def test_queue_drain_matches_direct_learn():
+    """submit_learn/poll's cross-tenant binary decomposition trains the same
+    model as bucket-sized direct learns: 7 queued singles per tenant drain
+    as 4+2+1, each dispatch stepping every tenant holding >= bucket."""
+    svc = MultiLinearService(_cfg(), n_slots=2, service=ServiceConfig(p_max=8, micro_batch=4))
+    svc.add_tenant("a")
+    svc.add_tenant("b")
+    direct = MultiLinearService(_cfg(), n_slots=2, service=ServiceConfig(p_max=8, micro_batch=4))
+    direct.add_tenant("a")
+    direct.add_tenant("b")
+
+    rng = np.random.RandomState(4)
+    per_tenant = {}
+    for t in ("a", "b"):
+        exs = []
+        for _ in range(7):
+            p = int(rng.randint(2, 5))
+            exs.append((rng.randint(0, DIM, size=p).astype(np.int32),
+                        rng.uniform(-1, 1, size=p).astype(np.float32),
+                        float(rng.randint(0, 2))))
+        per_tenant[t] = exs
+    for t, exs in per_tenant.items():
+        for i, v, y in exs:
+            assert svc.submit_learn(t, i, v, y)
+    assert svc.poll(now=0.0, force=True) == 14
+    assert svc.metrics.counters["learn_steps"] == 3  # one dispatch per bucket
+
+    import jax.numpy as jnp
+
+    for t, exs in per_tenant.items():
+        for group in (exs[:4], exs[4:6], exs[6:]):
+            idx = np.zeros((len(group), 8), np.int32)
+            val = np.zeros((len(group), 8), np.float32)
+            y = np.zeros((len(group),), np.float32)
+            for j, (i, v, yy) in enumerate(group):
+                idx[j, : i.size] = i
+                val[j, : v.size] = v
+                y[j] = yy
+            direct.learn(t, SparseBatch(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(y)))
+    for t in ("a", "b"):
+        np.testing.assert_array_equal(svc.current_weights(t), direct.current_weights(t))
+
+
+def test_per_tenant_qos_cap():
+    """A tenant at its admission cap gets rejected (False + labelled
+    counter) without starving the other tenant's admissions."""
+    svc = MultiLinearService(
+        _cfg(), n_slots=2,
+        service=ServiceConfig(p_max=8, micro_batch=4, per_tenant_cap=2),
+    )
+    svc.add_tenant("greedy")
+    svc.add_tenant("modest")
+    assert svc.submit_learn("greedy", [1], [1.0], 1.0)
+    assert svc.submit_learn("greedy", [2], [1.0], 0.0)
+    assert not svc.submit_learn("greedy", [3], [1.0], 1.0)  # over cap
+    assert svc.submit_learn("modest", [4], [1.0], 1.0)  # unaffected
+    assert svc.metrics.counters['qos_rejected{tenant="greedy"}'] == 1
+    assert svc.metrics.counters["qos_rejected"] == 1
+    assert svc.poll(now=0.0, force=True) == 3
+
+
+def test_snapshot_restore_round_trip(tmp_path):
+    """snapshot -> evict -> restore reproduces the tenant exactly: weights,
+    bias, hypers, and the schedule step t (training resumes bit-identically
+    against an uninterrupted twin)."""
+    svc = MultiLinearService(
+        _cfg(round_len=8, solver="ftrl"), n_slots=2,
+        service=ServiceConfig(p_max=8, micro_batch=4),
+    )
+    svc.add_tenant("u", lam1=2e-3, eta0=0.25)
+    twin = MultiLinearService(
+        _cfg(round_len=8, solver="ftrl"), n_slots=2,
+        service=ServiceConfig(p_max=8, micro_batch=4),
+    )
+    twin.add_tenant("u", lam1=2e-3, eta0=0.25)
+
+    rng = np.random.RandomState(5)
+    warm = [_mk(rng, 2, 5) for _ in range(8)]  # exactly one full round
+    post = [_mk(rng, 2, 5) for _ in range(5)]
+    for b in warm:
+        svc.learn("u", b)
+        twin.learn("u", b)
+
+    svc.snapshot_tenant("u", tmp_path)
+    svc.evict_tenant("u")
+    assert svc.n_free() == 2
+    svc.restore_tenant("u", tmp_path)
+
+    g, k = svc.slot_of("u")
+    assert float(svc.groups[g].hp_lam1[k]) == np.float32(2e-3)
+    assert int(svc.tenant_state("u").t) == int(twin.tenant_state("u").t)
+    np.testing.assert_array_equal(svc.current_weights("u"), twin.current_weights("u"))
+    # ftrl restores losslessly: the (z, n) columns survive the round trip,
+    # so resumed training equals the uninterrupted twin exactly
+    for b in post:
+        assert svc.learn("u", b) == twin.learn("u", b)
+    np.testing.assert_array_equal(svc.current_weights("u"), twin.current_weights("u"))
+
+
+def test_solver_major_grouping():
+    """Tenants of different solvers land in different groups (distinct state
+    shapes), each with its own program set and slot pool."""
+    svc = MultiLinearService(
+        _cfg(solver="fobos"), n_slots=2,
+        service=ServiceConfig(p_max=8, micro_batch=4),
+        solvers=("fobos", "ftrl"),
+    )
+    svc.add_tenant("f1")
+    svc.add_tenant("z1", solver="ftrl")
+    assert svc.slot_of("f1") == ("fobos", 0)
+    assert svc.slot_of("z1") == ("ftrl", 0)
+    assert svc.groups["fobos"].bstate.wpsi.shape[-1] == 2
+    assert svc.groups["ftrl"].bstate.wpsi.shape[-1] == 3
+    rng = np.random.RandomState(6)
+    svc.learn("f1", _mk(rng, 2, 5))
+    svc.learn("z1", _mk(rng, 2, 5))
+    assert svc.n_free("fobos") == 1 and svc.n_free("ftrl") == 1
+    with pytest.raises(ValueError, match="not in solvers"):
+        MultiLinearService(_cfg(solver="sgd"), n_slots=2, solvers=("ftrl",))
+
+
+def test_capacity_and_duplicate_errors():
+    svc = MultiLinearService(_cfg(), n_slots=1, service=ServiceConfig(p_max=8, micro_batch=4))
+    svc.add_tenant("a")
+    with pytest.raises(ValueError, match="already exists"):
+        svc.add_tenant("a")
+    with pytest.raises(RuntimeError, match="no free slots"):
+        svc.add_tenant("b")
+    with pytest.raises(KeyError):
+        svc.submit_learn("ghost", [1], [1.0], 1.0)

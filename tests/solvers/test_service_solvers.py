@@ -10,7 +10,7 @@ import pytest
 import jax.numpy as jnp
 from repro.core import LinearConfig, ScheduleConfig, SparseBatch
 from repro.core import linear_trainer as lt
-from repro.serving import LinearService
+from repro.serving import LinearService, ServiceConfig
 
 DIM = 64
 
@@ -44,20 +44,20 @@ def test_solver_pinned_at_construction(monkeypatch):
     from repro import solvers
 
     monkeypatch.setenv(solvers.ENV_VAR, "ftrl")
-    svc = LinearService(_cfg(), p_max=8, micro_batch=4)
+    svc = LinearService(_cfg(), ServiceConfig(p_max=8, micro_batch=4))
     assert svc.cfg.solver == "ftrl"  # env resolved ONCE, then concrete
     monkeypatch.setenv(solvers.ENV_VAR, "sgd")
-    svc2 = LinearService(_cfg(), p_max=8, micro_batch=4, solver="trunc")
+    svc2 = LinearService(_cfg(), ServiceConfig(p_max=8, micro_batch=4, solver="trunc"))
     assert svc2.cfg.solver == "trunc"  # explicit arg beats env
     with pytest.raises(ValueError, match="conflicting explicit solvers"):
-        LinearService(_cfg(solver="sgd"), p_max=8, micro_batch=4, solver="ftrl")
+        LinearService(_cfg(solver="sgd"), ServiceConfig(p_max=8, micro_batch=4, solver="ftrl"))
 
 
 @pytest.mark.parametrize("solver", SOLVERS)
 def test_compile_set_fixed_per_solver(solver):
     """Warmup traffic is the complete compile set for every solver — solver
     choice is trace-static, never a jit argument."""
-    svc = LinearService(_cfg(solver), p_max=8, micro_batch=4)
+    svc = LinearService(_cfg(solver), ServiceConfig(p_max=8, micro_batch=4))
     _drive(svc, steps=10, seed=0)  # > round_len: the flush jit is warm too
     counts = svc.compile_counts()
     _drive(svc, steps=18, seed=1)
@@ -70,7 +70,7 @@ def test_service_matches_direct_trainer(solver, rng):
     """learn/predict through the padded micro-batch frontend equals the raw
     make_lazy_step + predict_proba_sparse trainer for each solver."""
     cfg = _cfg(solver)
-    svc = LinearService(cfg, p_max=6, micro_batch=4)
+    svc = LinearService(cfg, ServiceConfig(p_max=6, micro_batch=4))
     cfg_pinned = svc.cfg  # solver + backend made concrete
     from repro.core import init_state, make_lazy_step
 
@@ -103,7 +103,7 @@ def test_service_matches_direct_trainer(solver, rng):
 def test_swap_across_matching_state_shapes(rng):
     """sgd -> trunc share the (w, psi) layout: the swap installs the new
     solver's config and re-seeds state that reads back the given weights."""
-    svc = LinearService(_cfg("sgd"), p_max=8, micro_batch=4)
+    svc = LinearService(_cfg("sgd"), ServiceConfig(p_max=8, micro_batch=4))
     _drive(svc, steps=4)
     w = rng.randn(DIM).astype(np.float32)
     svc.swap_weights(w, b=0.5, cfg=_cfg("trunc"))
@@ -113,13 +113,13 @@ def test_swap_across_matching_state_shapes(rng):
 
 
 def test_swap_to_ftrl_from_cache_solver_raises(rng):
-    svc = LinearService(_cfg("fobos"), p_max=8, micro_batch=4)
+    svc = LinearService(_cfg("fobos"), ServiceConfig(p_max=8, micro_batch=4))
     with pytest.raises(ValueError, match="mismatched state shape"):
         svc.swap_weights(np.zeros(DIM, np.float32), cfg=_cfg("ftrl"))
 
 
 def test_swap_within_ftrl_roundtrips(rng):
-    svc = LinearService(_cfg("ftrl"), p_max=8, micro_batch=4)
+    svc = LinearService(_cfg("ftrl"), ServiceConfig(p_max=8, micro_batch=4))
     _drive(svc, steps=4)
     w = (rng.randn(DIM) * (rng.uniform(size=DIM) > 0.5)).astype(np.float32)
     t_before = int(svc.state.t)
