@@ -55,6 +55,11 @@ SUITES = {
         "N stacked tenant models per vmapped dispatch vs N sequential "
         "LinearServices; writes BENCH_multitenant.json",
     ),
+    "dist_linear": (
+        lambda a, steps: _m("bench_dist_linear").run(fast=a.fast),
+        "feature-sharded weak/strong scaling over host meshes {1,2,4} "
+        "(routed rounds, subprocess per mesh); writes BENCH_dist_linear.json",
+    ),
 }
 
 

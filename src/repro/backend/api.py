@@ -86,6 +86,24 @@ class KernelBackend:
         are trace-static structure."""
         raise NotImplementedError
 
+    def fused_margin(self, w, ratio, shift, val):
+        """The shard-local HALF of ``fused_step`` (dist.linear, DESIGN.md
+        §16): closed-form catch-up of the gathered ``[B, p]`` weight slab
+        plus its per-slot margin contributions ``w_cur * val`` — everything
+        of the step that precedes the cross-shard margin psum, one tile
+        pass.  Returns ``(w_cur [B, p], contrib [B, p])``; the caller psums
+        ``contrib``, finishes the loss gradient in jnp (identical arithmetic
+        to the unsharded step) and keeps gather/scatter in XLA.  Off-shard
+        slots arrive with ``val == 0`` so their contributions vanish."""
+        raise NotImplementedError
+
+    def ftrl_margin(self, z, n, val, alpha, beta, lam1, lam2):
+        """FTRL twin of :meth:`fused_margin`: apply-at-read weights from the
+        gathered ``[B, p]`` ``(z, n)`` slab and their margin contributions,
+        one tile pass.  Returns ``(w_cur [B, p], contrib [B, p])``; hypers
+        may be traced scalars."""
+        raise NotImplementedError
+
     def ftrl_fused_step(self, z, n, val, y, b, alpha, beta, lam1, lam2, *, loss, use_bias):
         """ONE whole lazy step for FTRL-Proximal: apply-at-read weights from
         the gathered ``[B, p]`` ``(z, n)`` slab, sparse predict, loss

@@ -15,9 +15,11 @@ from repro.core.dp_caches import FOBOS, SGD
 from repro.kernels import (
     catchup_update,
     dp_fused_step,
+    dp_margin,
     enet_apply,
     enet_prox,
     ftrl_fused_step,
+    ftrl_margin,
     ftrl_read,
     ftrl_update,
     lazy_enet_update,
@@ -71,6 +73,12 @@ class PallasBackend(KernelBackend):
 
     def fused_step(self, w, ratio, shift, val, y, b, eta, *, loss, use_bias):
         return dp_fused_step(w, ratio, shift, val, y, b, eta, loss=loss, use_bias=use_bias)
+
+    def fused_margin(self, w, ratio, shift, val):
+        return dp_margin(w, ratio, shift, val)
+
+    def ftrl_margin(self, z, n, val, alpha, beta, lam1, lam2):
+        return ftrl_margin(z, n, val, alpha, beta, lam1, lam2)
 
     def ftrl_fused_step(self, z, n, val, y, b, alpha, beta, lam1, lam2, *, loss, use_bias):
         return ftrl_fused_step(

@@ -57,6 +57,18 @@ class ReferenceBackend(KernelBackend):
         delta = -eta * (gz[:, None] * val)
         return w_cur, delta, gz, loss_v
 
+    def fused_margin(self, w, ratio, shift, val):
+        # the pre-psum half of fused_step, same ops in the same order — the
+        # sharded step stays BITWISE equal to the unsharded one around the
+        # margin reduction (tests/dist/test_linear_sharded.py)
+        mag = jnp.abs(w) * ratio - shift
+        w_cur = jnp.sign(w) * jnp.maximum(mag, 0.0)
+        return w_cur, w_cur * val
+
+    def ftrl_margin(self, z, n, val, alpha, beta, lam1, lam2):
+        w_cur = self.ftrl_read(z, n, alpha, beta, lam1, lam2)
+        return w_cur, w_cur * val
+
     def ftrl_fused_step(self, z, n, val, y, b, alpha, beta, lam1, lam2, *, loss, use_bias):
         from repro.core import linear_trainer as lt
 

@@ -62,6 +62,15 @@ def _solver(cfg):
 
     return solvers.for_config(cfg)
 
+
+def _dist():
+    """The feature-sharding subsystem (repro.dist.linear), deferred:
+    dist imports core at load time, so the mesh branches below resolve it
+    lazily — and single-device users never pay for the mesh machinery."""
+    from repro.dist import linear as dl
+
+    return dl
+
 LOGISTIC = "logistic"
 SQUARED = "squared"
 
@@ -115,6 +124,16 @@ class LinearConfig:
     # f32 (exact), bf16, or int8 shared-scale (core.state_compress —
     # DESIGN.md §13 documents the error bounds and round_len limits)
     state_dtype: str = "f32"
+    # feature sharding (repro.dist.linear, DESIGN.md §16): mesh = number of
+    # devices to partition the [d, state_cols] state over along
+    # ``feature_axis``; None keeps every path single-device.  shard_margin
+    # picks how per-example margin partial sums cross the mesh: "exact"
+    # (slot-aligned psum, bitwise vs unsharded on the reference backend),
+    # "partial" (local reduce first — one f32 [B] psum), or "quantized"
+    # (partial through dist.compress.quantized_psum)
+    mesh: Optional[int] = None
+    feature_axis: str = "features"
+    shard_margin: str = "exact"
 
     def __post_init__(self):
         assert self.flavor in FLAVORS, self.flavor
@@ -124,6 +143,12 @@ class LinearConfig:
         from .state_compress import STATE_DTYPES
 
         assert self.state_dtype in STATE_DTYPES, self.state_dtype
+        if self.mesh is not None:
+            assert isinstance(self.mesh, int) and self.mesh >= 1, self.mesh
+            assert self.feature_axis, "feature_axis must be a non-empty name"
+        # literal twin of repro.dist.linear.MARGIN_MODES (core cannot import
+        # dist at validation time — dist imports core)
+        assert self.shard_margin in ("exact", "partial", "quantized"), self.shard_margin
         if self.solver is not None:
             _solver(self)  # fail fast on unknown names
         if self.backend is not None:
@@ -167,6 +192,10 @@ def init_state(cfg: LinearConfig, w0: Optional[jnp.ndarray] = None, mode: str = 
     """mode="lazy": the solver's packed [d, state_cols] layout.  mode=
     "dense": flat [d, 1] — the dense baseline carries no per-coordinate
     bookkeeping and must not pay strided writes for any."""
+    if cfg.mesh is not None:
+        if mode != "lazy":
+            raise ValueError("feature sharding (cfg.mesh) supports the lazy trainer only")
+        return _dist().init_state(cfg, w0)
     if mode == "lazy":
         wpsi = _solver(cfg).init_cols(cfg, w0)
     else:
@@ -243,6 +272,12 @@ def make_lazy_step_hp(cfg: LinearConfig):
     ``cfg.backend``/``cfg.solver`` (as LinearService does at construction)
     to make the choice independent of trace-time context; the gather/scatter
     chain stays in XLA either way (DESIGN.md §11)."""
+    if cfg.mesh is not None:
+        raise ValueError(
+            "feature-sharded steps run inside a shard_map region — use "
+            "repro.dist.linear (make_lazy_step / make_round_fn), not the "
+            "single-device step builders"
+        )
     solver = _solver(cfg)
     unit_sched = cfg.schedule.unit().make()
 
@@ -264,6 +299,8 @@ def make_lazy_step(cfg: LinearConfig):
     in batched sweeps, so lazy/dense/swept paths share eta arithmetic
     exactly (vs the pre-sweeps single-expression schedule it can differ in
     the last ulp)."""
+    if cfg.mesh is not None:
+        return _dist().make_lazy_step(cfg)  # shard_map'd twin, same signature
     _solver(cfg).validate(cfg)  # per-solver hyper/schedule checks, eager
     step_hp = make_lazy_step_hp(cfg)
     hp = cfg.hypers()
@@ -275,6 +312,8 @@ def make_lazy_step(cfg: LinearConfig):
 
 
 def make_dense_step(cfg: LinearConfig):
+    if cfg.mesh is not None:
+        raise ValueError("feature sharding (cfg.mesh) supports the lazy trainer only")
     solver = _solver(cfg)
     if not solver.has_dense:
         raise ValueError(f"solver {solver.name!r} has no dense per-step baseline")
@@ -313,6 +352,8 @@ def flush(cfg: LinearConfig, state: LinearState, lam1=None, hp: Optional[Hypers]
     the same step)."""
     if hp is None:
         hp = cfg.hypers(lam1=lam1)
+    if cfg.mesh is not None:
+        return _dist().flush(cfg, state, hp=hp)  # shard-local, no collectives
     return _solver(cfg).flush(cfg, state, hp, _backend(cfg.backend))
 
 
@@ -324,6 +365,8 @@ def current_weights(
         return state.wpsi[:, 0]
     if hp is None:
         hp = cfg.hypers(lam1=lam1)
+    if cfg.mesh is not None:
+        return _dist().current_weights(cfg, state, hp=hp)
     return _solver(cfg).read_weights(cfg, state, hp, _backend(cfg.backend))
 
 
@@ -338,6 +381,15 @@ def make_round_fn(cfg: LinearConfig, mode: str, metrics: bool = False):
     backend), plus in-scan lazy-work accounting.  Trace-time flag, deferred
     import: core never depends on obs unless asked."""
     assert mode in ("lazy", "dense")
+    if cfg.mesh is not None:
+        if mode != "lazy":
+            raise ValueError("feature sharding (cfg.mesh) supports the lazy trainer only")
+        if metrics:
+            raise ValueError(
+                "in-scan metrics instrumentation is single-device; use "
+                "dist.linear.record_shard_metrics for per-shard accounting"
+            )
+        return _dist().make_round_fn(cfg)
     if metrics:
         assert mode == "lazy", "metrics instrumentation targets the lazy trainer"
         from repro.obs import instrument
@@ -374,6 +426,8 @@ def predict_proba_sparse(
     multi-tenant serving path, which vmaps this function per slot)."""
     if hp is None:
         hp = cfg.hypers()
+    if cfg.mesh is not None:
+        return _dist().predict_proba_sparse(cfg, state, batch, hp=hp)
     idx_f = batch.idx.reshape(-1)
     g2 = state.wpsi[idx_f]
     if state.wpsi.shape[1] == 1:  # dense layout: weights always current

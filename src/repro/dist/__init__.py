@@ -1,6 +1,6 @@
-"""repro.dist — the sharding subsystem (DESIGN.md §5).
+"""repro.dist — the sharding subsystem (DESIGN.md §5, §16).
 
-Three layers, lowest first:
+Four layers, lowest first:
 
 * :mod:`repro.dist.api`      — the activation-sharding context.  Model code
   calls ``shard(x, *logical_axes)`` freely; it is an identity unless a
@@ -12,7 +12,11 @@ Three layers, lowest first:
   params, full train state, batches, and decode caches.
 * :mod:`repro.dist.compress` — int8 shared-scale gradient all-reduce for the
   cross-pod ("pod") mesh axis.
+* :mod:`repro.dist.linear`   — feature-sharded lazy linear training: the
+  packed ``[d, state_cols]`` solver state partitioned over a ``features``
+  mesh axis with shard-local catch-up and one margin psum per step
+  (DESIGN.md §16).
 """
-from repro.dist import api, compress, sharding
+from repro.dist import api, compress, linear, sharding
 
-__all__ = ["api", "compress", "sharding"]
+__all__ = ["api", "compress", "linear", "sharding"]

@@ -12,6 +12,9 @@ and attention hot path dispatches here when the pallas backend is selected
 * enet_prox — dense elastic-net shrink sweep (dense baseline / flush shrink)
 * ftrl — FTRL-Proximal apply-at-read + per-coordinate AdaGrad update deltas
   (the `ftrl` solver's elementwise hot paths, repro.solvers.ftrl)
+* margin — the shard-local pre-psum half of the fused step (catch-up /
+  apply-at-read + per-slot margin contributions) for feature-sharded
+  training (repro.dist.linear, DESIGN.md §16)
 * flash_attn — flash attention (forward + custom-vjp backward), the serving
   engine's and the training loss's attention path (chunked prefill /
   per-slot continuous-batching decode via absolute q offsets)
@@ -27,9 +30,11 @@ from .flash_attn import flash_attention
 from .ops import (
     catchup_update,
     dp_fused_step,
+    dp_margin,
     enet_apply,
     enet_prox,
     ftrl_fused_step,
+    ftrl_margin,
     ftrl_read,
     ftrl_update,
     lazy_enet_update,
@@ -39,10 +44,12 @@ from . import ref
 __all__ = [
     "catchup_update",
     "dp_fused_step",
+    "dp_margin",
     "enet_apply",
     "enet_prox",
     "flash_attention",
     "ftrl_fused_step",
+    "ftrl_margin",
     "ftrl_read",
     "ftrl_update",
     "lazy_enet_update",

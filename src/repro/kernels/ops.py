@@ -26,6 +26,7 @@ from .enet_prox import enet_prox_kernel
 from .ftrl import ftrl_read_rows_kernel, ftrl_update_rows_kernel
 from .fused_step import dp_fused_step_kernel, ftrl_fused_step_kernel
 from .lazy_enet import enet_apply_rows_kernel, lazy_enet_rows_kernel
+from .margin import dp_margin_rows_kernel, ftrl_margin_rows_kernel
 
 
 def _default_interpret() -> bool:
@@ -237,6 +238,58 @@ def enet_prox(
         block_rows=block_rows, block_cols=block_cols, interpret=interpret,
     )
     return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def dp_margin(
+    w: jnp.ndarray,  # [B, p] gathered weights
+    ratio: jnp.ndarray,  # [B, p] per-element catch-up factors
+    shift: jnp.ndarray,  # [B, p]
+    val: jnp.ndarray,  # [B, p] routing-masked feature values
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Shard-local pre-psum half of the fused DP step (dist.linear):
+    catch-up + margin contributions in one elementwise pass.  Padding is
+    safe (w = val = 0 -> 0 outputs).  Returns ``(w_cur, contrib)`` [B, p]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, p = w.shape
+    w_cur, contrib = dp_margin_rows_kernel(
+        _pad_to(w, block_rows, block_cols), _pad_to(ratio, block_rows, block_cols),
+        _pad_to(shift, block_rows, block_cols), _pad_to(val, block_rows, block_cols),
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return w_cur[:B, :p], contrib[:B, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def ftrl_margin(
+    z: jnp.ndarray,  # [B, p] gathered FTRL accumulators
+    n: jnp.ndarray,  # [B, p] gathered AdaGrad sums
+    val: jnp.ndarray,  # [B, p] routing-masked feature values
+    alpha,  # dynamic f32 scalars (may be traced per-config)
+    beta,
+    lam1,
+    lam2,
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Shard-local pre-psum half of the fused FTRL step: apply-at-read +
+    margin contributions.  Returns ``(w_cur, contrib)`` [B, p]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, p = z.shape
+    w_cur, contrib = ftrl_margin_rows_kernel(
+        _pad_to(z, block_rows, block_cols), _pad_to(n, block_rows, block_cols),
+        _pad_to(val, block_rows, block_cols), alpha, beta, lam1, lam2,
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return w_cur[:B, :p], contrib[:B, :p]
 
 
 def _pad_step_slab(x: jnp.ndarray, Bp: int, P: int) -> jnp.ndarray:

@@ -84,6 +84,21 @@ def add_state_dtype(ap: argparse.ArgumentParser, help: Optional[str] = None) -> 
     ap.add_argument("--state-dtype", default="f32", choices=tuple(lt_core.STATE_DTYPES), help=help)
 
 
+def add_mesh(ap: argparse.ArgumentParser, help: Optional[str] = None) -> None:
+    """Feature-mesh size for the linear paths (repro.dist.linear): shard the
+    packed [d, cols] solver state across N devices on a named "features"
+    axis.  Distinct from the LM drivers' ``--mesh DxM`` data x model spec —
+    linear training shards one axis (features), so the flag is a plain int.
+    Emulate on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=N."""
+    if help is None:
+        help = (
+            "shard the packed linear state across N feature shards "
+            "(default: unsharded; CPU emulation: "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    ap.add_argument("--mesh", type=int, default=None, metavar="N", help=help)
+
+
 def add_metrics_out(ap: argparse.ArgumentParser, help: Optional[str] = None) -> None:
     if help is None:
         help = (

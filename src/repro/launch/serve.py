@@ -13,7 +13,10 @@ asserted frozen — fixed shapes, no per-solver recompiles at steady state —
 which is the line CI's serving-smoke job runs per solver.  ``--linear
 --tenants N`` serves N tenant models through one MultiLinearService
 instead: cross-tenant vmapped learn/predict with mid-traffic tenant
-add/evict/swap, under the same frozen-compile-set assertion.
+add/evict/swap, under the same frozen-compile-set assertion.  ``--linear
+--mesh N`` feature-shards the packed solver state across N devices
+(repro.dist.linear; on CPU, emulate with
+XLA_FLAGS=--xla_force_host_platform_device_count=N).
 
 Reduced configs run on CPU; full configs lower onto the production mesh via
 the same decode fns the dry-run compiles.  With --mesh the params and KV
@@ -116,10 +119,15 @@ def serve_engine(cfg, model, params, *, batch, prompt_len, new_tokens, seed=0,
 
 
 def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch=8,
-                 requests=256, round_len=256, seed=0, fused=None, state_dtype="f32"):
+                 requests=256, round_len=256, seed=0, fused=None, state_dtype="f32",
+                 mesh=None):
     """Online learn/predict smoke over the LinearService: warm the complete
     jit set (every power-of-two bucket x {learn, predict} + the round
-    flush), then stream ``requests`` examples and assert zero recompiles."""
+    flush), then stream ``requests`` examples and assert zero recompiles.
+
+    ``mesh=N`` feature-shards the packed solver state across N devices
+    (repro.dist.linear); the same zero-recompile assertion holds — routing
+    is in-graph, so bucket shapes are unchanged."""
     from repro.core import LinearConfig, ScheduleConfig, SparseBatch
     from repro.data import BowConfig, SyntheticBow
     from repro.serving import LinearService, ServiceConfig
@@ -127,7 +135,7 @@ def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch
     cfg = LinearConfig(
         dim=dim, round_len=round_len, lam1=1e-5, lam2=1e-6,
         schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
-        fused=fused, state_dtype=state_dtype,
+        fused=fused, state_dtype=state_dtype, mesh=mesh,
     )
     svc = LinearService(cfg, ServiceConfig(
         p_max=p_max, micro_batch=micro_batch, backend=backend, solver=solver,
@@ -185,7 +193,7 @@ def serve_linear(*, solver=None, backend=None, dim=20_000, p_max=32, micro_batch
 
 def serve_multitenant(*, tenants=8, solver=None, backend=None, dim=20_000,
                       p_max=32, micro_batch=8, requests=512, round_len=64,
-                      seed=0, fused=None, state_dtype="f32"):
+                      seed=0, fused=None, state_dtype="f32", mesh=None):
     """Multi-tenant smoke over MultiLinearService: warm the complete vmapped
     program set, provision ``tenants`` tenants (a lam1 ladder — every lane
     carries its own hypers), stream tenant-tagged traffic through the
@@ -200,7 +208,7 @@ def serve_multitenant(*, tenants=8, solver=None, backend=None, dim=20_000,
     cfg = LinearConfig(
         dim=dim, round_len=round_len, lam1=1e-5, lam2=1e-6,
         schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0),
-        fused=fused, state_dtype=state_dtype,
+        fused=fused, state_dtype=state_dtype, mesh=mesh,
     )
     svc = MultiLinearService(cfg, n_slots=tenants, service=ServiceConfig(
         p_max=p_max, micro_batch=micro_batch, backend=backend, solver=solver,
@@ -334,8 +342,9 @@ def main():
     ap.add_argument("--requests", type=int, default=None,
                     help="requests to serve through the engine (default: --batch)")
     ap.add_argument(
-        "--mesh", default=None, metavar="DxM",
-        help='data x model mesh over visible devices (e.g. "1x2")',
+        "--mesh", default=None, metavar="DxM|N",
+        help='data x model mesh over visible devices (e.g. "1x2"); with '
+             "--linear: a plain int N of feature shards (repro.dist.linear)",
     )
     flags.add_backend(ap, help="kernel backend for the attention / solver hot "
                                "paths (default: $REPRO_BACKEND or platform default)")
@@ -348,20 +357,28 @@ def main():
     flags.add_profile(ap)
     args = ap.parse_args()
     if args.linear:
+        mesh = None
+        if args.mesh is not None:
+            try:
+                mesh = int(args.mesh)
+            except ValueError:
+                ap.error(f"--linear takes --mesh N (feature shards), got {args.mesh!r}")
         with obs.run_logger(
             args.metrics_out, "serve", d=args.dim,
             linear=True, solver=args.solver, backend=args.backend,
-            tenants=args.tenants,
+            tenants=args.tenants, mesh=mesh,
         ), obs.profile_to(args.profile):
             if args.tenants:
                 serve_multitenant(tenants=args.tenants, solver=args.solver,
                                   backend=args.backend, dim=args.dim,
                                   requests=args.requests or 512, seed=args.seed,
-                                  fused=args.fused, state_dtype=args.state_dtype)
+                                  fused=args.fused, state_dtype=args.state_dtype,
+                                  mesh=mesh)
             else:
                 serve_linear(solver=args.solver, backend=args.backend, dim=args.dim,
                              requests=args.requests or 256, seed=args.seed,
-                             fused=args.fused, state_dtype=args.state_dtype)
+                             fused=args.fused, state_dtype=args.state_dtype,
+                             mesh=mesh)
         return
     if not args.arch:
         ap.error("--arch is required unless --linear")

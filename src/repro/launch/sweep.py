@@ -50,6 +50,13 @@ def main() -> None:
         help="chain each lam1 stage from its neighbor's flushed weights",
     )
     flags.add_dim(ap)
+    flags.add_mesh(
+        ap,
+        help="shard every config's packed state across N feature shards "
+        "(repro.dist.linear; the vmapped config axis rides inside the "
+        "mesh program; CPU emulation: "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
     ap.add_argument("--round-len", type=int, default=256)
     ap.add_argument("--rounds", type=int, default=1, help="rounds per fold")
     ap.add_argument("--batch", type=int, default=8)
@@ -109,6 +116,7 @@ def main() -> None:
         backend=args.backend,
         fused=args.fused,
         state_dtype=args.state_dtype,
+        mesh=args.mesh,
     )
     grid = make_grid(
         base,
@@ -143,6 +151,7 @@ def main() -> None:
             folds=args.folds,
             warm_start=args.warm_start,
             solvers=",".join(solvers) if solvers else args.flavor,
+            mesh=args.mesh,
         ),
         obs.profile_to(args.profile),
         obs.span("sweep.kfold_cv"),

@@ -20,7 +20,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -35,36 +34,11 @@ from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import AdmissionQueue
 from repro.serving.service_config import ServiceConfig, binary_buckets, pin_config
 
-_UNSET = object()  # sentinel: distinguishes "alias not passed" from None
-
-
-def resolve_service(service: Optional[ServiceConfig], **aliases) -> ServiceConfig:
-    """Fold deprecated per-kwarg knobs into a ServiceConfig.  Every alias
-    actually passed (identity-checked against the _UNSET sentinel, so an
-    explicit None still counts) raises a DeprecationWarning and overrides
-    the matching field — keeping pre-ServiceConfig call sites working
-    unchanged while both ctor paths produce identical services."""
-    passed = {k: v for k, v in aliases.items() if v is not _UNSET}
-    if passed:
-        warnings.warn(
-            f"passing {sorted(passed)} as keyword arguments is deprecated; "
-            f"use service=ServiceConfig(...) (aliases override its fields)",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-    service = service or ServiceConfig()
-    return dataclasses.replace(service, **passed) if passed else service
-
 
 class LinearService:
     def __init__(self, cfg: LinearConfig, service: Optional[ServiceConfig] = None, *,
-                 w0: Optional[np.ndarray] = None,
-                 p_max=_UNSET, micro_batch=_UNSET, max_delay=_UNSET,
-                 metrics=_UNSET, backend=_UNSET, solver=_UNSET):
-        service = resolve_service(
-            service, p_max=p_max, micro_batch=micro_batch, max_delay=max_delay,
-            metrics=metrics, backend=backend, solver=solver,
-        )
+                 w0: Optional[np.ndarray] = None):
+        service = service or ServiceConfig()
         # pin every deferred LinearConfig field (backend/solver/fused) to a
         # concrete value before the first jit: the live service must never
         # change program because $REPRO_*/use_backend() context changed
@@ -140,6 +114,16 @@ class LinearService:
             # service to lazy trace-time resolution (and avoid a needless
             # jit rebuild when only the backend field differs)
             cfg = dataclasses.replace(cfg, backend=self.cfg.backend)
+        if cfg is not None and cfg.mesh is None and self.cfg.mesh is not None:
+            # likewise: sweep winners rarely carry the mesh — the live
+            # service's feature sharding survives the swap (a swap cannot
+            # re-place the donated row buffers mid-flight anyway)
+            cfg = dataclasses.replace(
+                cfg, mesh=self.cfg.mesh, feature_axis=self.cfg.feature_axis,
+                shard_margin=self.cfg.shard_margin,
+            )
+        if cfg is not None:
+            assert cfg.mesh == self.cfg.mesh, "swap cannot change the feature mesh"
         if cfg is not None:
             if cfg.solver is None:
                 cfg = dataclasses.replace(cfg, solver=self.cfg.solver)
@@ -164,9 +148,17 @@ class LinearService:
                     f"[{self.cfg.dim}, {sv.state_cols}] for solver {sv.name!r}"
                 )
             fresh = lt.init_state(self.cfg, None)
+            wpsi = sv.adopt_state(self.cfg, packed)
+            if self.cfg.mesh is not None:
+                # adopted state arrives at the logical dim: pad to the shard
+                # grain and place feature-sharded like the fresh buffers
+                from repro.dist import linear as dl
+
+                wpsi = jax.device_put(
+                    dl.pad_rows(self.cfg, wpsi), dl.state_shardings(self.cfg).wpsi
+                )
             self.state = fresh._replace(
-                wpsi=sv.adopt_state(self.cfg, packed),
-                b=jnp.asarray(b, jnp.float32), t=t,
+                wpsi=wpsi, b=jnp.asarray(b, jnp.float32), t=t,
             )
         else:
             self.state = lt.init_state(self.cfg, np.asarray(w, np.float32))._replace(
@@ -232,6 +224,12 @@ class LinearService:
         self.metrics.record_latency("learn", time.monotonic() - t0)
         self.metrics.count("learn_steps")
         self.metrics.count("learn_examples", int(np.asarray(batch.idx).shape[0]))
+        if self.cfg.mesh is not None:
+            # per-shard touched-row gauges + imbalance ratio (host-side
+            # bincount over the request's feature ids — O(B*p))
+            from repro.dist import linear as dl
+
+            dl.record_shard_metrics(self.metrics, self.cfg, batch.idx)
         return float(loss)
 
     # -- micro-batched frontend ---------------------------------------------

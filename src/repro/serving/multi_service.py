@@ -94,6 +94,12 @@ class _SolverGroup:
             i=jnp.zeros((n_slots,), jnp.int32),
             t=jnp.zeros((n_slots,), jnp.int32),
         )
+        if cfg.mesh is not None:
+            # every lane's rows pad to the shard grain and shard over the
+            # feature mesh; the per-lane clocks/bias/caches replicate
+            from repro.dist import linear as dl
+
+            self.bstate = dl.place_batched(cfg, self.bstate)
         # host mirrors: per-slot hypers (uploaded per dispatch — tiny) and
         # the round counter (flush decisions without a device sync per step)
         self.hp_lam1 = np.full((n_slots,), cfg.lam1, np.float32)
@@ -122,7 +128,18 @@ class _SolverGroup:
 
     def _build_jits(self, tracker: CompileTracker) -> None:
         cfg, sv = self.cfg, self.sv
-        step_hp = lt.make_lazy_step_hp(cfg)
+        sharded = cfg.mesh is not None
+        if sharded:
+            # feature-sharded lanes: the vmap over tenants moves INSIDE one
+            # manual shard_map region (dist.linear wraps it) and every lane
+            # fn becomes its shard-local twin — the OOB sentinel batch
+            # (idx = dim) is unowned by every shard, so inactive-lane
+            # masking works unchanged
+            from repro.dist import linear as dl
+
+            step_hp = dl.make_tenant_step_hp(cfg)
+        else:
+            step_hp = lt.make_lazy_step_hp(cfg)
 
         def lane_learn(state, hp, active, batch):
             new, loss = step_hp(state, batch, hp)
@@ -138,17 +155,28 @@ class _SolverGroup:
             )
             return new, keep(loss, jnp.float32(0.0))
 
-        def lane_predict(state, hp, batch):
-            return lt.predict_proba_sparse(cfg, state, batch, hp=hp)
+        if sharded:
+            def lane_predict(state, hp, batch):
+                return dl._local_predict(cfg, sv, state, batch, hp)
+        else:
+            def lane_predict(state, hp, batch):
+                return lt.predict_proba_sparse(cfg, state, batch, hp=hp)
 
         def lane_flush(state, hp, mask):
-            flushed = lt.flush(cfg, state, hp=hp)
+            flushed = dl.local_flush(cfg, state, hp) if sharded else lt.flush(
+                cfg, state, hp=hp
+            )
             return jax.tree.map(partial(jnp.where, mask), flushed, state)
+
+        def _seed_rows(rows):
+            # seeds arrive at the logical dim; sharded buffers carry the
+            # padded shard grain
+            return dl.pad_rows(cfg, rows) if sharded else rows
 
         def seed_w(bstate, k, w, b, t, hp):
             # dynamic slot index k: one trace serves every add/swap
             return LinearState(
-                wpsi=bstate.wpsi.at[k].set(sv.seed_cols(cfg, w, hp)),
+                wpsi=bstate.wpsi.at[k].set(_seed_rows(sv.seed_cols(cfg, w, hp))),
                 b=bstate.b.at[k].set(b),
                 caches=jax.tree.map(
                     lambda c, f: c.at[k].set(f), bstate.caches, init_caches(cfg.round_len)
@@ -159,7 +187,7 @@ class _SolverGroup:
 
         def seed_state(bstate, k, packed, b, t):
             return LinearState(
-                wpsi=bstate.wpsi.at[k].set(sv.adopt_state(cfg, packed)),
+                wpsi=bstate.wpsi.at[k].set(_seed_rows(sv.adopt_state(cfg, packed))),
                 b=bstate.b.at[k].set(b),
                 caches=jax.tree.map(
                     lambda c, f: c.at[k].set(f), bstate.caches, init_caches(cfg.round_len)
@@ -171,19 +199,35 @@ class _SolverGroup:
         def reg(name, fn):
             return tracker.register(f"{self.key}/{name}", fn)
 
-        self.learn_fn = reg("learn", jax.jit(
-            jax.vmap(lane_learn, in_axes=(TENANT_AXES, HYPER_AXES, 0, 0),
-                     out_axes=(TENANT_AXES, 0)),
-            donate_argnums=0,
-        ))
-        self.predict_fn = reg("predict", jax.jit(
-            jax.vmap(lane_predict, in_axes=(TENANT_AXES, HYPER_AXES, 0))
-        ))
-        self.flush_fn = reg("flush", jax.jit(
-            jax.vmap(lane_flush, in_axes=(TENANT_AXES, HYPER_AXES, 0),
-                     out_axes=TENANT_AXES),
-            donate_argnums=0,
-        ))
+        if sharded:
+            learn_sh = dl.wrap_tenant(cfg, lane_learn, 2)
+            self.learn_fn = reg("learn", jax.jit(learn_sh, donate_argnums=0))
+            self.predict_fn = reg(
+                "predict", jax.jit(dl.wrap_tenant_predict(cfg, lane_predict))
+            )
+
+            def lane_flush_loss(state, hp, mask):
+                # wrap_tenant's lane contract is (state, per-lane value)
+                return lane_flush(state, hp, mask), jnp.float32(0.0)
+
+            flush_sh = dl.wrap_tenant(cfg, lane_flush_loss, 1)
+            self.flush_fn = reg("flush", jax.jit(
+                lambda bs, hp, mask: flush_sh(bs, hp, mask)[0], donate_argnums=0
+            ))
+        else:
+            self.learn_fn = reg("learn", jax.jit(
+                jax.vmap(lane_learn, in_axes=(TENANT_AXES, HYPER_AXES, 0, 0),
+                         out_axes=(TENANT_AXES, 0)),
+                donate_argnums=0,
+            ))
+            self.predict_fn = reg("predict", jax.jit(
+                jax.vmap(lane_predict, in_axes=(TENANT_AXES, HYPER_AXES, 0))
+            ))
+            self.flush_fn = reg("flush", jax.jit(
+                jax.vmap(lane_flush, in_axes=(TENANT_AXES, HYPER_AXES, 0),
+                         out_axes=TENANT_AXES),
+                donate_argnums=0,
+            ))
         self.seed_w_fn = reg("seed_w", jax.jit(seed_w, donate_argnums=0))
         self.seed_state_fn = reg("seed_state", jax.jit(seed_state, donate_argnums=0))
 
@@ -526,7 +570,9 @@ class MultiLinearService:
         g.bstate = g.flush_fn(g.bstate, g.hp(), jnp.asarray(mask))
         g.i_host[k] = 0
         t_k = int(g.bstate.t[k])
-        state = {"wpsi": np.asarray(g.bstate.wpsi[k]), "b": np.asarray(g.bstate.b[k])}
+        # slice to the logical dim: snapshots are mesh-size independent
+        state = {"wpsi": np.asarray(g.bstate.wpsi[k])[: g.cfg.dim],
+                 "b": np.asarray(g.bstate.b[k])}
         extra = {
             "tenant": tenant, "solver": g.key, "t": t_k,
             "lam1": float(g.hp_lam1[k]), "lam2": float(g.hp_lam2[k]),

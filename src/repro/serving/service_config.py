@@ -9,10 +9,10 @@ now live in one frozen dataclass shared by both services:
     LinearService(cfg, service=ServiceConfig(p_max=64, micro_batch=8))
     MultiLinearService(cfg, n_slots=64, service=ServiceConfig(...))
 
-The old `LinearService(cfg, p_max=..., micro_batch=...)` kwargs keep
-working as deprecated aliases (DeprecationWarning; they override the
-matching `ServiceConfig` field) — tests/serving/test_service_config.py pins
-that both construction paths produce identical services.
+The old `LinearService(cfg, p_max=..., micro_batch=...)` kwargs finished
+their deprecation cycle and are gone — a pre-ServiceConfig call site fails
+with TypeError; tests/serving/test_service_config.py pins that
+`service=ServiceConfig(...)` is the only construction path.
 
 `pin_config` is the other construction-time rule both services share: a
 live service must never change its kernel backend, solver, or fused-step

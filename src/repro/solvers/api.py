@@ -108,6 +108,21 @@ class Solver:
         this step; ``bk`` the resolved kernel backend."""
         raise NotImplementedError
 
+    def sharded_update(self, cfg, state, batch, hp, eta, bk, axis) -> Tuple[object, jnp.ndarray]:
+        """The feature-sharded twin of :meth:`touched_update`, called INSIDE
+        a manual shard_map body (``repro.dist.linear``): ``state`` holds this
+        shard's local ``[ds, state_cols]`` row slab (bias/caches/clock
+        replicated) and ``batch`` is already routed — local row indices with
+        the out-of-bounds sentinel ``ds`` marking off-shard slots and their
+        values zeroed.  The body mirrors touched_update exactly except the
+        per-example margin, which crosses the mesh through ONE
+        ``dist.linear.margin_psum`` over ``axis`` — everything else
+        (catch-up, gradient, scatter) stays shard-local; sentinel gathers
+        clip harmlessly (masked) and sentinel scatters drop.  In exact
+        margin mode the result is bitwise-identical to the unsharded step
+        on the reference backend."""
+        raise NotImplementedError
+
     # -- bring weights current -----------------------------------------------
 
     def read_rows(self, cfg, rows, state, hp, bk) -> jnp.ndarray:

@@ -117,6 +117,54 @@ class LazyCacheSolver(Solver):
         new = lt.LinearState(wpsi=wpsi, b=b, caches=caches, i=state.i + 1, t=state.t + 1)
         return new, jnp.mean(loss)
 
+    def sharded_update(self, cfg, state, batch, hp, eta, bk, axis) -> Tuple[object, jnp.ndarray]:
+        """touched_update over this shard's row slab (see Solver.sharded_update
+        for the routing contract).  Identical op sequence around the margin:
+        extend the replicated caches, gather + catch up the LOCAL rows, one
+        margin psum, then the same gradient scatter — sentinel lanes carry
+        value 0 (contribute nothing) and scatter out of bounds (dropped)."""
+        from repro.core import linear_trainer as lt
+        from repro.dist import linear as dl
+
+        caches = self.extend_caches(
+            state.caches, state.i, eta, hp.lam2, k_period=self.k_period(cfg)
+        )
+        idx_f = batch.idx.reshape(-1)
+        g2 = state.wpsi[idx_f]  # [B*p, 2] clip-gather; sentinel rows masked
+        w_g = g2[:, 0]
+        psi_g = g2[:, 1].astype(jnp.int32)
+        shape = batch.idx.shape
+        if lt.fused_enabled(cfg):
+            ratio, shift = lazy_enet.catchup_factors(psi_g, state.i, caches, hp.lam1)
+            # shard-local fused pass: catch-up + masked margin contributions
+            w_cur2, contrib = bk.fused_margin(
+                w_g.reshape(shape),
+                ratio.reshape(shape),
+                jnp.broadcast_to(shift, ratio.shape).reshape(shape),
+                batch.val,
+            )
+            w_cur = w_cur2.reshape(-1)
+        else:
+            w_cur = bk.catchup_rows(w_g, psi_g, state.i, caches, hp.lam1)
+            contrib = w_cur.reshape(shape) * batch.val
+        # --- the ONLY cross-shard traffic: the per-example margin ---
+        z = dl.margin_psum(cfg, contrib)
+        if cfg.use_bias:
+            z = z + state.b
+        loss, gz = lt._grad_z(cfg, z, batch.y)
+        neg_eta_g = (-eta * (gz[:, None] * batch.val)).reshape(-1)  # [B*p]
+        psi_new = state_compress.roundtrip(
+            jnp.broadcast_to(state.i.astype(jnp.float32), w_cur.shape),
+            cfg.state_dtype,
+            integer=True,
+        )
+        upd = jnp.stack([w_cur, psi_new], axis=1)
+        wpsi = state.wpsi.at[idx_f].set(upd)
+        wpsi = wpsi.at[idx_f, 0].add(neg_eta_g)
+        b = state.b - eta * jnp.sum(gz) if cfg.use_bias else state.b
+        new = lt.LinearState(wpsi=wpsi, b=b, caches=caches, i=state.i + 1, t=state.t + 1)
+        return new, jnp.mean(loss)
+
     def touch_spans(self, cfg, state, idx_f: jnp.ndarray) -> jnp.ndarray:
         # the debt touched_update replays: reg for tau in [psi, i)
         psi = state.wpsi[idx_f, 1].astype(jnp.int32)

@@ -145,6 +145,46 @@ class FTRLSolver(Solver):
         new = lt.LinearState(wpsi=wpsi, b=b, caches=state.caches, i=state.i + 1, t=state.t + 1)
         return new, jnp.mean(loss)
 
+    def sharded_update(self, cfg, state, batch, hp, eta, bk, axis) -> Tuple[object, jnp.ndarray]:
+        """touched_update over this shard's (z, n) row slab (see
+        Solver.sharded_update): apply-at-read weights from the LOCAL rows,
+        one margin psum, then the same per-coordinate AdaGrad deltas —
+        sentinel lanes see g = 0 (so dz = dn = 0) and scatter out of bounds
+        (dropped) anyway."""
+        from repro.core import linear_trainer as lt
+        from repro.dist import linear as dl
+
+        alpha = jnp.asarray(hp.eta_scale, jnp.float32)
+        idx_f = batch.idx.reshape(-1)
+        g3 = state.wpsi[idx_f]  # [B*p, 3] clip-gather; sentinel rows masked
+        z_g, n_g = g3[:, 1], g3[:, 2]
+        shape = batch.idx.shape
+        if lt.fused_enabled(cfg):
+            w_cur2, contrib = bk.ftrl_margin(
+                z_g.reshape(shape), n_g.reshape(shape), batch.val,
+                alpha, cfg.ftrl_beta, hp.lam1, hp.lam2,
+            )
+            w_cur = w_cur2.reshape(-1)
+        else:
+            w_cur = bk.ftrl_read(z_g, n_g, alpha, cfg.ftrl_beta, hp.lam1, hp.lam2)
+            contrib = w_cur.reshape(shape) * batch.val
+        # --- the ONLY cross-shard traffic: the per-example margin ---
+        zlin = dl.margin_psum(cfg, contrib)
+        if cfg.use_bias:
+            zlin = zlin + state.b
+        loss, gz = lt._grad_z(cfg, zlin, batch.y)
+        g_w = (gz[:, None] * batch.val).reshape(-1)  # masked: 0 off-shard
+        dz, dn = bk.ftrl_update(w_cur, n_g, g_w, alpha)
+        wpsi = state.wpsi.at[idx_f, 1].add(dz)
+        wpsi = wpsi.at[idx_f, 2].add(dn)
+        if cfg.state_dtype != "f32":
+            zn = wpsi[idx_f]
+            wpsi = wpsi.at[idx_f, 1].set(state_compress.roundtrip(zn[:, 1], cfg.state_dtype))
+            wpsi = wpsi.at[idx_f, 2].set(state_compress.roundtrip(zn[:, 2], cfg.state_dtype))
+        b = state.b - eta * jnp.sum(gz) if cfg.use_bias else state.b
+        new = lt.LinearState(wpsi=wpsi, b=b, caches=state.caches, i=state.i + 1, t=state.t + 1)
+        return new, jnp.mean(loss)
+
     def read_rows(self, cfg, rows, state, hp, bk) -> jnp.ndarray:
         return bk.ftrl_read(
             rows[:, 1], rows[:, 2],

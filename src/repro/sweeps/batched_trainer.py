@@ -72,13 +72,20 @@ def init_batched_state(
     if b0 is not None:
         b = jnp.asarray(b0, jnp.float32).reshape(n_cfg)
     caches = init_caches(base.round_len)
-    return LinearState(
+    bstate = LinearState(
         wpsi=wpsi,
         b=b,
         caches=jax.tree.map(lambda a: jnp.broadcast_to(a, (n_cfg,) + a.shape), caches),
         i=jnp.zeros((), jnp.int32),
         t=jnp.zeros((), jnp.int32),
     )
+    if base.mesh is not None:
+        from repro.dist import linear as dl
+
+        # pad the rows to the shard grain and place config-replicated,
+        # feature-sharded (DESIGN.md §16)
+        return dl.place_batched(base, bstate)
+    return bstate
 
 
 def make_batched_round_fn(base: LinearConfig, metrics: bool = False):
@@ -95,6 +102,15 @@ def make_batched_round_fn(base: LinearConfig, metrics: bool = False):
     instrumented step wraps the one built here — so losses and final
     states match the uninstrumented program bitwise on the reference
     backend."""
+    if base.mesh is not None:
+        if metrics:
+            raise ValueError(
+                "in-scan metrics instrumentation is single-device; use "
+                "dist.linear.record_shard_metrics for per-shard accounting"
+            )
+        from repro.dist import linear as dl
+
+        return dl.make_batched_round_fn(base)  # same (bstate, hp, rb) signature
     step_hp = lt.make_lazy_step_hp(base)
 
     if metrics:
@@ -133,6 +149,10 @@ def make_batched_eval(base: LinearConfig):
     per config lane (pure; one shared eval batch).  The full per-lane
     ``hp`` rides along because apply-at-read solvers derive weights from
     every hyper, not just lam1."""
+    if base.mesh is not None:
+        from repro.dist import linear as dl
+
+        return dl.make_batched_eval(base)  # same (bstate, hp, batch) signature
 
     def eval_one(state: LinearState, hp: Hypers, batch: SparseBatch):
         return lt.mean_loss(base, state, batch, hp=hp)
@@ -142,6 +162,10 @@ def make_batched_eval(base: LinearConfig):
 
 def batched_current_weights(base: LinearConfig, bstate: LinearState, hp: Hypers) -> jnp.ndarray:
     """All config lanes' weights brought current -> [n_cfg, d]."""
+    if base.mesh is not None:
+        from repro.dist import linear as dl
+
+        return dl.batched_current_weights(base, bstate, hp)
     fn = jax.vmap(
         lambda s, h: lt.current_weights(base, s, hp=h),
         in_axes=(STATE_AXES, HYPER_AXES),
@@ -236,6 +260,6 @@ def run_sequential(grid: Grid, rounds: Sequence[SparseBatch]) -> Tuple[np.ndarra
         for rb in rounds:
             state, ls = round_fn(state, rb)
             losses.append(np.asarray(ls))
-        all_w.append(np.asarray(state.wpsi[:, 0]))  # flushed: current
+        all_w.append(np.asarray(state.wpsi[:, 0])[: cfg.dim])  # flushed: current
         all_l.append(np.concatenate(losses))
     return np.stack(all_w), np.stack(all_l)

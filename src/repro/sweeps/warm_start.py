@@ -96,7 +96,8 @@ def run_path(
                 bstate, ls = round_fn(bstate, hp, rb)
                 stage_losses.append(np.asarray(ls))
         # post-flush state: psi == 0, caches rebased => wpsi[:, :, 0] current
-        w_prev = np.asarray(bstate.wpsi[:, :, 0])
+        # (sliced to the logical dim — feature-sharded states pad the rows)
+        w_prev = np.asarray(bstate.wpsi[:, :, 0])[:, : grid.base.dim]
         b_prev = np.asarray(bstate.b)
         weights.append(w_prev)
         biases.append(b_prev)

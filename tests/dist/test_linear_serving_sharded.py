@@ -1,0 +1,104 @@
+"""Feature-sharded serving: a mesh=4 LinearService / MultiLinearService fed
+identical traffic must be indistinguishable from the unsharded one on the
+reference backend — bitwise losses, weights, and predictions — with the
+same frozen compile set, and snapshots must cross the mesh boundary (a
+sharded tenant restores onto an unsharded service and vice versa)."""
+
+SCRIPT = r"""
+import tempfile
+
+import numpy as np
+
+from repro.core.linear_trainer import LinearConfig, SparseBatch
+from repro.serving.linear_service import LinearService
+from repro.serving.multi_service import MultiLinearService
+from repro.serving.service_config import ServiceConfig
+
+DIM, R = 61, 8
+rng = np.random.default_rng(1)
+
+
+def reqs(n, p=5):
+    return [(rng.integers(0, DIM, size=p).astype(np.int32),
+             rng.normal(size=p).astype(np.float32),
+             np.float32(rng.random() < 0.5)) for _ in range(n)]
+
+
+def batch(n, p=5):
+    return SparseBatch(
+        idx=rng.integers(0, DIM, size=(n, p)).astype(np.int32),
+        val=rng.normal(size=(n, p)).astype(np.float32),
+        y=(rng.random(size=n) < 0.5).astype(np.float32),
+    )
+
+
+base = dict(dim=DIM, round_len=R, solver="fobos", lam1=0.01, lam2=0.005)
+sc = ServiceConfig(p_max=8, micro_batch=4)
+
+# --- LinearService: mesh=4 vs unsharded under identical traffic ---
+svc0 = LinearService(LinearConfig(**base), sc)
+svc4 = LinearService(LinearConfig(**base, mesh=4), sc)
+rng = np.random.default_rng(7)
+traffic = [batch(4) for _ in range(2 * R)]
+pred = batch(4)
+for b in traffic:
+    l0, l4 = svc0.learn(b), svc4.learn(b)
+    assert l0 == l4, (l0, l4)
+w0, w4 = svc0.current_weights(), svc4.current_weights()
+assert np.array_equal(w0, w4), np.abs(w0 - w4).max()
+assert np.array_equal(svc0.predict(pred), svc4.predict(pred))
+# per-shard touch gauges landed (obs accounting rides on learn)
+gauges = dict(svc4.metrics.gauges)
+assert any("shard_touched" in k for k in gauges), sorted(gauges)
+assert "shard_imbalance" in gauges, sorted(gauges)
+print("OK linear-service")
+
+# swap_weights keeps parity through both forms
+svc4.swap_weights(w=w0, b=0.25)
+svc0.swap_weights(w=w0, b=0.25)
+st = np.asarray(svc0.state.wpsi)
+svc4.swap_weights(state=st, b=0.5)
+svc0.swap_weights(state=st, b=0.5)
+assert np.array_equal(svc0.current_weights(), svc4.current_weights())
+print("OK swap")
+
+# --- MultiLinearService: two tenants with distinct hypers, same traffic ---
+m0 = MultiLinearService(LinearConfig(**base), n_slots=2, service=sc)
+m4 = MultiLinearService(LinearConfig(**base, mesh=4), n_slots=2, service=sc)
+for m in (m0, m4):
+    m.warmup()
+    m.add_tenant("a", lam1=0.02)
+    m.add_tenant("b", eta0=0.2)
+rng = np.random.default_rng(11)
+traffic = reqs(40)
+for m in (m0, m4):
+    for j, (fi, fv, fy) in enumerate(traffic):
+        m.submit_learn("a" if j % 2 == 0 else "b", fi, fv, fy, arrival=float(j))
+    with m.compiles.assert_no_new_compiles("steady"):
+        m.poll(now=1e9, force=True)
+assert np.array_equal(m0.current_weights("a"), m4.current_weights("a"))
+assert np.array_equal(m0.current_weights("b"), m4.current_weights("b"))
+pi = rng.integers(0, DIM, size=(4, 5)).astype(np.int32)
+pv = rng.normal(size=(4, 5)).astype(np.float32)
+assert np.array_equal(m0.predict("a", pi, pv), m4.predict("a", pi, pv))
+print("OK multi-service")
+
+# snapshots are mesh-size independent: sharded -> unsharded and back
+with tempfile.TemporaryDirectory() as td:
+    m4.snapshot_tenant("a", td)
+    m0.evict_tenant("a")
+    m0.restore_tenant("a", td)
+    assert np.array_equal(m0.current_weights("a"), m4.current_weights("a"))
+with tempfile.TemporaryDirectory() as td:
+    m0.snapshot_tenant("b", td)
+    m4.evict_tenant("b")
+    m4.restore_tenant("b", td)
+    assert np.array_equal(m0.current_weights("b"), m4.current_weights("b"))
+print("OK snapshot")
+"""
+
+
+def test_sharded_serving_parity(subproc):
+    out = subproc(SCRIPT, n_devices=4)
+    for tag in ("linear-service", "swap", "multi-service", "snapshot"):
+        assert f"OK {tag}" in out

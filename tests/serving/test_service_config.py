@@ -1,7 +1,8 @@
-"""ServiceConfig surface: both LinearService constructor paths produce the
-same service (the old kwargs are deprecated aliases), pin_config resolves
-every deferred LinearConfig field exactly once, and swap_weights' packed
-state= form round-trips solver state losslessly."""
+"""ServiceConfig surface: LinearService takes service=ServiceConfig(...)
+only (the pre-ServiceConfig loose kwargs finished their deprecation cycle
+and are gone), pin_config resolves every deferred LinearConfig field
+exactly once, and swap_weights' packed state= form round-trips solver
+state losslessly."""
 import numpy as np
 import pytest
 
@@ -29,39 +30,39 @@ def _mk(rng, B, p):
     return SparseBatch(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(y))
 
 
-def test_deprecated_kwargs_build_identical_service():
-    """The pre-ServiceConfig kwarg path warns but constructs the same
-    service as the ServiceConfig path: same resolved config, same buckets,
-    same trained state on the same stream."""
-    with pytest.warns(DeprecationWarning, match="ServiceConfig"):
-        old = LinearService(_cfg(), p_max=8, micro_batch=4, solver="fobos")
-    new = LinearService(_cfg(), ServiceConfig(p_max=8, micro_batch=4, solver="fobos"))
+def test_loose_kwargs_removed():
+    """The deprecated per-kwarg aliases (PR 8's DeprecationWarning cycle)
+    are gone: a pre-ServiceConfig call site now fails loudly with TypeError
+    instead of silently constructing a differently-configured service."""
+    for kwargs in (
+        {"p_max": 8},
+        {"micro_batch": 4},
+        {"max_delay": 0.5},
+        {"metrics": None},
+        {"backend": "reference"},
+        {"solver": "fobos"},
+        {"p_max": 8, "micro_batch": 4, "solver": "fobos"},
+    ):
+        with pytest.raises(TypeError):
+            LinearService(_cfg(), **kwargs)
+    # aliases alongside service= are equally gone
+    with pytest.raises(TypeError):
+        LinearService(_cfg(), ServiceConfig(p_max=16), p_max=4)
 
-    assert old.service == new.service
-    assert old.cfg == new.cfg
-    assert old.buckets == new.buckets == (1, 2, 4)
-    rng = np.random.RandomState(0)
-    for b in [_mk(rng, 2, 4) for _ in range(6)]:
-        assert old.learn(b) == new.learn(b)
-    np.testing.assert_array_equal(old.current_weights(), new.current_weights())
 
-
-def test_aliases_override_service_fields():
-    """An alias passed alongside service= overrides that field only —
-    explicit None counts as passed (the _UNSET sentinel, not None, marks
-    'not given')."""
+def test_service_config_path_is_the_only_ctor():
+    """service= is taken verbatim (no warning, no copy) and None defaults
+    to ServiceConfig()."""
     base = ServiceConfig(p_max=16, micro_batch=8, max_delay=2.0)
-    with pytest.warns(DeprecationWarning):
-        svc = LinearService(_cfg(), base, p_max=4)
-    assert svc.service.p_max == 4
-    assert svc.service.micro_batch == 8 and svc.service.max_delay == 2.0
-    # no aliases -> no warning, service taken verbatim
     import warnings as _w
 
     with _w.catch_warnings():
         _w.simplefilter("error")
-        svc2 = LinearService(_cfg(), base)
-    assert svc2.service is base
+        svc = LinearService(_cfg(), base)
+        svc_default = LinearService(_cfg())
+    assert svc.service is base
+    assert svc.service.p_max == 16
+    assert svc_default.service == ServiceConfig()
 
 
 def test_pin_config_resolves_and_rejects_conflicts():
