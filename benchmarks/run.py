@@ -45,6 +45,11 @@ SUITES = {
         "vmap-batched 16-point (lam1, lam2) grid vs sequential fits; "
         "writes BENCH_sweeps.json",
     ),
+    "paths": (
+        lambda a, steps: _m("bench_paths").run(fast=a.fast),
+        "screened regularization path vs the plain warm-started ladder "
+        "(strong rule + compaction + KKT loop); writes BENCH_paths.json",
+    ),
     "solvers": (
         lambda a, steps: _m("bench_solvers").run(fast=a.fast),
         "per-solver steady-state step time + sparsity at convergence; "

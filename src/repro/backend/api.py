@@ -125,6 +125,24 @@ class KernelBackend:
         the caller's scatter-ADD keeps duplicate-index semantics in XLA."""
         raise NotImplementedError
 
+    def screen_mask(self, g, w, thr, chk):
+        """Fused path-screening pass (repro.paths, DESIGN.md §17) over flat
+        ``[n]`` arrays: the sequential strong rule's gradient bound and the
+        KKT violation check on the complement, one read of the gradient
+        bytes.  Returns 0/1 f32 masks ``(active, viol)`` with
+
+        * ``active = (|g| >= thr) | (w != 0)`` — survives screening (``thr =
+          2*lam1_k - lam1_{k-1}``; the ``w != 0`` term is the ever-active
+          rule, and lets the KKT caller pass its current active mask as
+          ``w`` with ``thr`` unreachable to test only the screened-out set);
+        * ``viol = ~active & (|g| > chk)`` — a screened-out coordinate whose
+          stationarity bound fails, i.e. a re-admission candidate.
+
+        ``thr``/``chk`` may be traced scalars (a new lambda stage never
+        recompiles).  Comparisons only — backends agree exactly, not merely
+        to tolerance."""
+        raise NotImplementedError
+
     # -- attention -----------------------------------------------------------
 
     def attention(

@@ -23,6 +23,7 @@ from repro.kernels import (
     ftrl_read,
     ftrl_update,
     lazy_enet_update,
+    screen_mask,
 )
 from repro.kernels.flash_attn import flash_attention
 
@@ -90,6 +91,9 @@ class PallasBackend(KernelBackend):
 
     def ftrl_update(self, w, n, g, alpha):
         return ftrl_update(w, n, g, alpha)
+
+    def screen_mask(self, g, w, thr, chk):
+        return screen_mask(g, w, thr, chk)
 
     # -- attention -----------------------------------------------------------
 

@@ -97,6 +97,12 @@ class ReferenceBackend(KernelBackend):
         sigma = (jnp.sqrt(n + g2) - jnp.sqrt(n)) * inv_alpha
         return g - sigma * w, g2
 
+    def screen_mask(self, g, w, thr, chk):
+        ag = jnp.abs(g)
+        active = jnp.where((ag >= thr) | (w != 0.0), 1.0, 0.0)
+        viol = (1.0 - active) * jnp.where(ag > chk, 1.0, 0.0)
+        return active, viol
+
     # -- attention -----------------------------------------------------------
 
     def attention(

@@ -15,6 +15,9 @@ and attention hot path dispatches here when the pallas backend is selected
 * margin — the shard-local pre-psum half of the fused step (catch-up /
   apply-at-read + per-slot margin contributions) for feature-sharded
   training (repro.dist.linear, DESIGN.md §16)
+* screen — fused strong-rule gradient bound + KKT violation check emitting
+  packed 0/1 active/violation masks (the regularization-path engine's
+  per-stage screening pass, repro.paths)
 * flash_attn — flash attention (forward + custom-vjp backward), the serving
   engine's and the training loss's attention path (chunked prefill /
   per-slot continuous-batching decode via absolute q offsets)
@@ -38,6 +41,7 @@ from .ops import (
     ftrl_read,
     ftrl_update,
     lazy_enet_update,
+    screen_mask,
 )
 from . import ref
 
@@ -54,4 +58,5 @@ __all__ = [
     "ftrl_update",
     "lazy_enet_update",
     "ref",
+    "screen_mask",
 ]

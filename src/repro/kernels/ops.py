@@ -27,6 +27,7 @@ from .ftrl import ftrl_read_rows_kernel, ftrl_update_rows_kernel
 from .fused_step import dp_fused_step_kernel, ftrl_fused_step_kernel
 from .lazy_enet import enet_apply_rows_kernel, lazy_enet_rows_kernel
 from .margin import dp_margin_rows_kernel, ftrl_margin_rows_kernel
+from .screen import screen_rows_kernel
 
 
 def _default_interpret() -> bool:
@@ -290,6 +291,34 @@ def ftrl_margin(
         block_rows=block_rows, block_cols=block_cols, interpret=interpret,
     )
     return w_cur[:B, :p], contrib[:B, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def screen_mask(
+    g: jnp.ndarray,  # [n] flat unpenalized loss gradient
+    w: jnp.ndarray,  # [n] flat previous-stage weights
+    thr,  # dynamic f32 strong-rule bound (may be traced per-stage)
+    chk,  # dynamic f32 KKT tolerance bound
+    *,
+    block_rows: int = 8,
+    block_cols: int = 256,
+    interpret: bool | None = None,
+):
+    """Fused strong-rule + KKT screening pass (repro.paths): returns 0/1 f32
+    masks ``(active, viol)`` where ``active = (|g| >= thr) | (w != 0)`` and
+    ``viol = ~active & (|g| > chk)``.  Comparisons only — exactly equal to
+    the reference twin, never merely close."""
+    if interpret is None:
+        interpret = _default_interpret()
+    assert g.ndim == 1 and g.shape == w.shape, (g.shape, w.shape)
+    cnt = g.shape[0]
+    g2 = _tile_flat(g, block_rows, block_cols)
+    w2 = _tile_flat(w, block_rows, block_cols)
+    active, viol = screen_rows_kernel(
+        g2, w2, thr, chk,
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+    )
+    return active.reshape(-1)[:cnt], viol.reshape(-1)[:cnt]
 
 
 def _pad_step_slab(x: jnp.ndarray, Bp: int, P: int) -> jnp.ndarray:

@@ -67,6 +67,18 @@ def resolve_solver(name: Optional[str], flavor: str, *, round_len: Optional[int]
     return sv
 
 
+def _mask_rows(idx: jnp.ndarray, rows_mask: Optional[jnp.ndarray], n_rows: int) -> jnp.ndarray:
+    """Screened-row remap (repro.paths): rows whose mask is 0 go to the OOB
+    sentinel ``n_rows`` — their gathers read a clipped row that is never
+    written back (scatters drop OOB under jit), so screened rows never enter
+    catch-up, never mark psi and never take a gradient step, exactly like a
+    screened feature in the linear trainer's stream.  ``rows_mask`` is a 0/1
+    f32 ``[rows]`` vector; None (or all-ones) is the identity."""
+    if rows_mask is None:
+        return idx
+    return jnp.where(rows_mask[idx] > 0.0, idx, jnp.int32(n_rows))
+
+
 class LazyRowState(NamedTuple):
     psi: jnp.ndarray  # [rows] int32: reg applied for round-local steps < psi
     caches: RegCaches  # arrays [round_len + 1]
@@ -93,13 +105,17 @@ def begin(
     solver: Optional[str] = None,
     trunc_k: int = 16,
     backend: Optional[str] = None,
+    rows_mask: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, LazyRowState]:
     """Catch touched rows up to the current step; returns (current_table,
     mid-state).  Run BEFORE the forward pass.  ``solver`` picks the
-    cache-based update rule (default: $REPRO_SOLVER, then ``flavor``)."""
+    cache-based update rule (default: $REPRO_SOLVER, then ``flavor``);
+    ``rows_mask`` (repro.paths screening) sentinel-remaps screened rows so
+    they skip catch-up entirely — pass the same mask to :func:`finish`."""
     bk = kb.resolve(backend)
     sv = resolve_solver(solver, flavor, trunc_k=trunc_k)
     caches = sv.extend_caches(state.caches, state.i, eta, lam2, k_period=trunc_k)
+    idx = _mask_rows(idx, rows_mask, table.shape[0])
     w_rows = table[idx].astype(jnp.float32)
     cur = bk.catchup_rows(w_rows, state.psi[idx][:, None], state.i, caches, lam1)
     table_cur = table.at[idx].set(cur.astype(table.dtype))
@@ -117,6 +133,7 @@ def finish(
     lam1: float = 0.0,
     backend: Optional[str] = None,
     fused: bool = True,
+    rows_mask: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, LazyRowState]:
     """SGD step on the touched (already-current) rows; advances the round.
     ``fused=True`` (the default) routes through the backend's fused kernel
@@ -124,8 +141,10 @@ def finish(
     catch-up factors are exactly (ratio=1, shift=0) and the fused op reduces
     to the gradient step in one pass over the slab.  ``fused=False`` keeps
     the unfused two-op form (catch-up, then the gradient step) — the
-    debugging / A-B comparison path (``ArchConfig.reg_fused``)."""
+    debugging / A-B comparison path (``ArchConfig.reg_fused``).
+    ``rows_mask`` must match the mask :func:`begin` ran with."""
     bk = kb.resolve(backend)
+    idx = _mask_rows(idx, rows_mask, table_cur.shape[0])
     g_rows = grad[idx].astype(jnp.float32)
     rows = table_cur[idx].astype(jnp.float32)
     if fused:

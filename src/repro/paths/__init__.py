@@ -1,0 +1,43 @@
+"""repro.paths — regularization-path engine with safe/strong screening
+(DESIGN.md §17).
+
+:func:`run_path` walks a descending-lam1 elastic-net path where each stage
+screens with the sequential strong rule (per-coordinate active masks from
+``backend.screen_mask`` — reference jnp or the fused Pallas tile pass),
+trains only the survivors through the existing lazy solvers (screened
+coordinates never enter catch-up: the mask routes as an OOB-sentinel remap,
+host-compacted or in-graph), KKT-checks the screened-out set and re-admits
+violators, and records the per-stage screening story through ``repro.obs``.
+``paths.elastic_gd`` is the Allerbo & Jonasson gradient-flow approximation
+of the same path; ``best_by_loss``/``select`` turn a path point into the
+``(config, weights, b)`` triple serving swaps in.
+"""
+
+from .engine import (
+    PathConfig,
+    PathPrograms,
+    PathResult,
+    StageDiag,
+    best_by_loss,
+    run_path,
+    select,
+)
+from .masking import compact_round, make_masked_round_fn, remap_batch, stage_width
+from .screen import flatten_rounds, make_grad_fn, make_screen_fn
+
+__all__ = [
+    "PathConfig",
+    "PathPrograms",
+    "PathResult",
+    "StageDiag",
+    "best_by_loss",
+    "compact_round",
+    "flatten_rounds",
+    "make_grad_fn",
+    "make_masked_round_fn",
+    "make_screen_fn",
+    "remap_batch",
+    "run_path",
+    "select",
+    "stage_width",
+]

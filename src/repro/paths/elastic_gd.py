@@ -1,0 +1,151 @@
+"""Elastic gradient descent path approximation (Allerbo & Jonasson 2022).
+
+The second path strategy next to the lazy-solver engine: instead of solving
+each lambda stage, run ONE gradient-flow trajectory per (lam2, eta0) lane
+and read the path off its time axis.  Each minibatch step updates only the
+coordinates whose gradient magnitude clears a quantile of the current
+maximum,
+
+    kappa = lam1_s / (lam1_s + lam2_l),
+    w    -= eta * g * [|g| >= kappa * max|g|],
+
+which interpolates forward stagewise regression (lam2 -> 0: only the
+steepest coordinate moves, the lasso-path limit) and plain gradient descent
+(lam2 large: everything moves, the ridge limit) — elastic net's geometry as
+a selection rule rather than a penalty.  Walking the descending lam1 ladder
+lowers kappa's numerator stage by stage, admitting more coordinates as the
+trajectory continues; the stage snapshots are the path.
+
+This is a cheap structural approximation, not the stage optimum: O(d) per
+step with no prox, no DP caches and no solver state — useful as a fast
+first pass over the path's support structure and as the comparison baseline
+the ROADMAP asks for.  Coordinates never selected stay exactly 0, so the
+nnz trajectory is meaningful.  The flow is solver-independent (no update
+rule is consulted): a multi-solver grid gets the same trajectory replicated
+per solver-axis entry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linear_trainer as lt
+from repro.core.linear_trainer import LinearConfig
+from repro.sweeps.grid import Grid
+
+from .engine import PathResult, StageDiag
+
+
+def make_flow_fn(base: LinearConfig):
+    """jit'd ``(w [L, d], b [L], chunk [T, B, p], lam1, lam2 [L], eta0 [L])
+    -> (w, b, losses [T, L], sel_frac [T, L])`` — one scanned block of
+    elastic-GD steps, vmapped over the (lam2, eta0) lanes.  ``lam1`` is a
+    dynamic scalar: every stage reuses one compiled program."""
+
+    def one(wl, bl, batch, lam1, lam2l, etal):
+        z = jnp.sum(wl[batch.idx] * batch.val, axis=-1)
+        if base.use_bias:
+            z = z + bl
+        loss_v, gz = lt.loss_and_grad_z(base.loss, z, batch.y)
+        contrib = (gz[:, None] * batch.val).reshape(-1)
+        g = jnp.zeros((base.dim,), jnp.float32).at[batch.idx.reshape(-1)].add(contrib)
+        g = g / batch.y.shape[0]
+        kappa = lam1 / (lam1 + lam2l)
+        sel = (jnp.abs(g) >= kappa * jnp.max(jnp.abs(g))).astype(jnp.float32)
+        wl = wl - etal * g * sel
+        if base.use_bias:
+            bl = bl - etal * jnp.mean(gz)
+        return wl, bl, jnp.mean(loss_v), jnp.mean(sel)
+
+    vone = jax.vmap(one, in_axes=(0, 0, None, None, 0, 0))
+
+    def flow(w, b, chunk, lam1, lam2, eta0):
+        def body(carry, batch):
+            w, b = carry
+            w, b, loss, frac = vone(w, b, batch, lam1, lam2, eta0)
+            return (w, b), (loss, frac)
+
+        (w, b), (losses, fracs) = jax.lax.scan(body, (w, b), chunk)
+        return w, b, losses, fracs
+
+    return jax.jit(flow)
+
+
+def run_elastic_gd(grid: Grid, rounds, path) -> PathResult:
+    """Walk the lam1 ladder as elastic gradient flow: ``path.egd_steps``
+    minibatch steps per stage over the training stream (cycled), one
+    continuous trajectory per (lam2, eta0) lane, snapshotted at each stage.
+    Returns the same solver-major :class:`PathResult` shape as the lazy
+    engine so CV/serving select winners identically."""
+    from repro.core.linear_trainer import SparseBatch
+
+    sub = grid.per_solver()[0]
+    base, L = sub.base, sub.stage_size
+    d, n1 = base.dim, len(sub.lam1)
+    T = int(path.egd_steps)
+    _, f2, fe = sub.flat()
+    lam2 = jnp.asarray(f2[:L])
+    eta0 = jnp.asarray(fe[:L])
+    idx_all = np.concatenate([np.asarray(rb.idx) for rb in rounds], axis=0)
+    val_all = np.concatenate([np.asarray(rb.val) for rb in rounds], axis=0)
+    y_all = np.concatenate([np.asarray(rb.y) for rb in rounds], axis=0)
+    S = idx_all.shape[0]
+    flow = make_flow_fn(base)
+    w = jnp.zeros((L, d), jnp.float32)
+    b = jnp.zeros((L,), jnp.float32)
+    p = int(idx_all.shape[-1])
+    cursor = 0
+    weights, biases, losses, diags = [], [], [], []
+    for s in range(n1):
+        take = [(cursor + t) % S for t in range(T)]
+        cursor = (cursor + T) % S
+        chunk = SparseBatch(
+            idx=jnp.asarray(idx_all[take]),
+            val=jnp.asarray(val_all[take]),
+            y=jnp.asarray(y_all[take]),
+        )
+        w, b, ls, fracs = flow(w, b, chunk, float(sub.lam1[s]), lam2, eta0)
+        w_s = np.asarray(w)
+        weights.append(w_s)
+        biases.append(np.asarray(b))
+        losses.append(np.asarray(ls).T)  # [L, T]
+        diags.append(
+            StageDiag(
+                stage=s,
+                solver=sub.solver_axis[0],
+                lam1=float(sub.lam1[s]),
+                active=int(np.count_nonzero(np.any(w_s != 0.0, axis=0))),
+                dim=d,
+                width=p,
+                p_max=p,
+                readmitted=0,
+                refits=0,
+                kkt_unresolved=0,
+                nnz=int(np.mean(np.count_nonzero(w_s, axis=1))),
+            )
+        )
+    res = PathResult(
+        weights=np.concatenate(weights, axis=0),
+        b=np.concatenate(biases, axis=0),
+        losses=np.concatenate(losses, axis=0),
+        stages=tuple(diags),
+    )
+    reps = len(grid.solver_axis)
+    if reps == 1:
+        return res
+    # the flow never consults a solver, so solver-axis entries share one
+    # trajectory — replicate it solver-major to keep flat indexing aligned
+    return PathResult(
+        weights=np.tile(res.weights, (reps, 1)),
+        b=np.tile(res.b, reps),
+        losses=np.tile(res.losses, (reps, 1)),
+        stages=tuple(
+            dataclasses.replace(diag, solver=sol)
+            for sol in grid.solver_axis
+            for diag in res.stages
+        ),
+    )

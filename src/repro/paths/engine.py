@@ -1,0 +1,362 @@
+"""The regularization-path engine (DESIGN.md §17): descending-lam1 elastic-
+net solution paths with safe/strong screening.
+
+Each lambda stage runs four phases:
+
+1. **Screen** — the sequential strong rule at the previous stage's solution:
+   keep coordinate j when ``|g_j| >= 2*lam1_k - lam1_{k-1}`` (or when it is
+   already active), per config lane, unioned across the stage's lanes.
+   Stage 0 screens against ``lam_max = max|g(0)|`` (the smallest lam1 whose
+   solution is all-zero), so a ladder that starts above lam_max trains an
+   empty active set — correctly.
+2. **Train** — only the survivors, via the existing lazy solvers with
+   warm-started state.  Screened coordinates never enter catch-up: the mask
+   routes into the stream as an OOB-sentinel remap (``paths.masking``),
+   either host-compacting the stage batches down to the active-set width
+   (single-device — the wall-clock win) or in-graph as a dynamic mask
+   operand (the mesh path; zero recompiles).
+3. **Check** — KKT stationarity on the screened-out set at the stage
+   solution: any ``|g_j| > lam1_k * (1 + kkt_tol)`` among discarded
+   coordinates is a strong-rule failure; violators are re-admitted and the
+   stage refits from the same seed (the safety loop that makes screened
+   fits match unscreened fits to tolerance — with no violations they match
+   exactly on the reference backend when nothing was ever screened).
+4. **Record** — per-stage diagnostics (:class:`StageDiag`: active-set size,
+   screening ratio, compacted width, re-admissions, nnz) through
+   ``repro.obs`` spans/events and on the returned :class:`PathResult`.
+
+``screen=False`` delegates to the plain warm-started ladder
+(``sweeps.run_path`` — this engine supersedes it as the entry point);
+``strategy="elastic_gd"`` runs the Allerbo & Jonasson elastic gradient-flow
+approximation instead (``paths.elastic_gd``).  Multi-solver grids walk one
+path per solver axis entry, solver-major like every sweep runner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear_trainer import SparseBatch
+from repro.obs import sinks, trace
+from repro.obs.compile_tracker import CompileTracker
+from repro.sweeps import warm_start as ws
+from repro.sweeps.batched_trainer import init_batched_state, make_batched_round_fn
+from repro.sweeps.grid import Grid
+
+from . import masking
+from . import screen as screening
+
+
+@dataclasses.dataclass(frozen=True)
+class PathConfig:
+    """How to walk the path.  ``screen`` gates the strong rule entirely
+    (off = the plain warm-started ladder); ``screen_first`` gates stage 0's
+    lam_max rule; ``kkt``/``kkt_tol``/``max_refits`` control the safety
+    loop; ``compact`` picks host-side batch compaction (None = compact
+    exactly when single-device; the mesh path is always in-graph);
+    ``strategy`` switches to the elastic_gd path approximation."""
+
+    screen: bool = True
+    screen_first: bool = True
+    kkt: bool = True
+    kkt_tol: float = 0.1
+    max_refits: int = 2
+    compact: Optional[bool] = None
+    screen_examples: int = 16384
+    strategy: str = "lazy"  # lazy | elastic_gd
+    egd_steps: int = 64  # elastic_gd minibatch steps per stage
+
+
+@dataclasses.dataclass(frozen=True)
+class StageDiag:
+    """One stage's screening record (per solver-axis entry)."""
+
+    stage: int
+    solver: str
+    lam1: float
+    active: int  # surviving coordinates (union over the stage's lanes)
+    dim: int
+    width: int  # compacted slot width the stage trained at
+    p_max: int  # uncompacted slot width
+    readmitted: int  # KKT violators re-admitted across refits
+    refits: int
+    kkt_unresolved: int  # violations left when max_refits ran out
+    nnz: int  # mean per-lane nonzeros of the stage solution
+
+    @property
+    def screen_ratio(self) -> float:
+        return self.active / max(1, self.dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class PathResult:
+    """Flushed per-config path solutions, flat solver-major then lam1-major
+    like ``Grid`` — sweeps' ``PathResult`` plus the screening record."""
+
+    weights: np.ndarray  # [n_cfg, d]
+    b: np.ndarray  # [n_cfg]
+    losses: np.ndarray  # [n_cfg, total_steps]
+    stages: tuple  # StageDiag per (solver, stage)
+
+    def mean_active_fraction(self) -> float:
+        """Mean per-stage surviving fraction — the effective-dimension ratio
+        screening bought (1.0 = nothing screened)."""
+        return float(np.mean([d.screen_ratio for d in self.stages]))
+
+    def total_readmitted(self) -> int:
+        return int(sum(d.readmitted for d in self.stages))
+
+
+class PathPrograms:
+    """Per-solver jitted program cache + compile tracker, shareable across
+    repeated paths (CV folds, CLI smoke repeats): stage shapes repeat, so
+    after one full path every program is warm and
+    ``tracker.assert_no_new_compiles`` holds for the next."""
+
+    def __init__(self):
+        self._fns = {}
+        self.tracker = CompileTracker()
+
+    def _get(self, kind: str, base, build):
+        key = (kind, base.solver, base.backend, base.mesh)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = build()
+            self._fns[key] = fn
+            self.tracker.register(f"{kind}:{base.solver or 'default'}", fn)
+        return fn
+
+    def round_fn(self, base):
+        return self._get("round", base, lambda: make_batched_round_fn(base))
+
+    def masked_round_fn(self, base):
+        return self._get("masked_round", base, lambda: masking.make_masked_round_fn(base))
+
+    def grad_fn(self, base):
+        return self._get("grad", base, lambda: screening.make_grad_fn(base))
+
+    def screen_fn(self, base):
+        return self._get("screen", base, lambda: screening.make_screen_fn(base))
+
+
+def run_path(
+    grid: Grid,
+    rounds: Sequence[SparseBatch],
+    path: Optional[PathConfig] = None,
+    warm_start: bool = True,
+    programs: Optional[PathPrograms] = None,
+) -> PathResult:
+    """Walk the full descending-lam1 path over ``rounds`` with per-stage
+    screening (see the module docstring for the stage anatomy).  ``programs``
+    lets a caller (kfold_cv, repeated CLI runs) reuse the jitted stage
+    programs across paths."""
+    path = path or PathConfig()
+    if path.strategy == "elastic_gd":
+        from . import elastic_gd
+
+        return elastic_gd.run_elastic_gd(grid, rounds, path)
+    if path.strategy != "lazy":
+        raise ValueError(f"unknown path strategy {path.strategy!r}")
+    if not path.screen:
+        return _wrap_unscreened(grid, rounds, ws.run_path(grid, rounds, warm_start=warm_start))
+    if programs is None:
+        programs = PathPrograms()
+    parts = [
+        _run_solver_path(g, rounds, path, warm_start, programs) for g in grid.per_solver()
+    ]
+    if len(parts) == 1:
+        return parts[0]
+    return PathResult(
+        weights=np.concatenate([r.weights for r in parts], axis=0),
+        b=np.concatenate([r.b for r in parts], axis=0),
+        losses=np.concatenate([r.losses for r in parts], axis=0),
+        stages=tuple(d for r in parts for d in r.stages),
+    )
+
+
+def _run_solver_path(
+    grid: Grid,
+    rounds: Sequence[SparseBatch],
+    path: PathConfig,
+    warm_start: bool,
+    programs: PathPrograms,
+) -> PathResult:
+    base = grid.base
+    d, L = base.dim, grid.stage_size
+    solver_name = grid.solver_axis[0]
+    compact = path.compact if path.compact is not None else base.mesh is None
+    if compact and base.mesh is not None:
+        raise ValueError(
+            "host-side compaction is single-device; mesh configs route the "
+            "mask in-graph (PathConfig(compact=False) or leave compact=None)"
+        )
+    p = int(rounds[0].idx.shape[-1])
+    screen_batch = screening.flatten_rounds(rounds, cap=path.screen_examples)
+    # per-STEP gradient normalization: the trainer sums over a step's batch
+    # and applies lam1 once per step, so strong-rule/KKT thresholds compare
+    # against g summed over B examples (see screening.make_grad_fn)
+    g_denom = float(screen_batch.y.shape[0]) / float(rounds[0].idx.shape[1])
+    grad_fn = programs.grad_fn(base)
+    screen_fn = programs.screen_fn(base)
+    round_fn = programs.round_fn(base) if compact else programs.masked_round_fn(base)
+    if compact:
+        # one host copy of the slot arrays for the whole path: every stage
+        # compacts from these instead of syncing each round off the device
+        host_rounds = masking.host_slots(rounds)
+
+    w_prev = np.zeros((L, d), np.float32)
+    b_prev = np.zeros((L,), np.float32)
+    lam_prev = 0.0
+    g_carry = None  # the KKT pass's gradient IS next stage's strong-rule input
+    weights, biases, losses, diags = [], [], [], []
+    for s in range(len(grid.lam1)):
+        lam_s = float(grid.lam1[s])
+        hp = grid.stage_hypers(s)
+        # strong rule at the previous solution, per lane, unioned; stage 0
+        # screens against lam_max = max|g(0)| (thr <= 0 disables screening
+        # when the rule cannot exclude anything).  The previous stage's KKT
+        # check already evaluated the gradient at exactly this solution, so
+        # reuse it instead of paying the dense pass twice.
+        if g_carry is not None:
+            g_prev = g_carry
+        else:
+            g_prev = grad_fn(jnp.asarray(w_prev), jnp.asarray(b_prev), screen_batch, g_denom)
+        if s == 0:
+            lam_prev = float(jnp.max(jnp.abs(g_prev))) if path.screen_first else 2.0 * lam_s
+        thr = 2.0 * lam_s - lam_prev
+        chk = lam_s * (1.0 + path.kkt_tol)
+        active, _ = screen_fn(g_prev, jnp.asarray(w_prev), thr, chk)
+        seed_w = w_prev if (warm_start and s) else None
+        seed_b = b_prev if (warm_start and s) else None
+        refits = readmitted = kkt_unresolved = 0
+        with trace.span(
+            "path.stage", tracker=programs.tracker, stage=s, solver=solver_name, lam1=lam_s
+        ):
+            while True:
+                keep = np.asarray(active) > 0.0
+                if compact and keep.all():
+                    # fully-open mask: skip compaction so the stage is
+                    # bitwise-identical to the unscreened ladder (compaction
+                    # drops val==0 padding slots, which moves catch-up
+                    # timing by ulps)
+                    width = p
+                    stage_rounds = rounds
+                    mask_args = ()
+                elif compact:
+                    width = masking.stage_width_host(host_rounds, keep, p)
+                    stage_rounds = [
+                        masking.compact_host(hi, hv, rb.y, keep, width, d)
+                        for (hi, hv), rb in zip(host_rounds, rounds)
+                    ]
+                    mask_args = ()
+                else:
+                    width = p
+                    stage_rounds = rounds
+                    mask_args = (jnp.asarray(keep.astype(np.float32)),)
+                bstate = init_batched_state(base, L, w0=seed_w, b0=seed_b, hp=hp)
+                stage_losses = []
+                for rb in stage_rounds:
+                    bstate, ls = round_fn(bstate, hp, *mask_args, rb)
+                    stage_losses.append(np.asarray(ls))
+                # post-flush state: wpsi[:, :, 0] current (rows sliced to the
+                # logical dim — sharded states pad them)
+                w_s = np.asarray(bstate.wpsi[:, :, 0])[:, :d]
+                b_s = np.asarray(bstate.b)
+                if not path.kkt:
+                    break
+                # KKT on the screened-out set at the stage solution: reuse
+                # the screening program with the active mask as w and an
+                # unreachable thr (backend.screen_mask's check mode)
+                g_fit = grad_fn(jnp.asarray(w_s), jnp.asarray(b_s), screen_batch, g_denom)
+                act_dev = jnp.asarray(keep.astype(np.float32))
+                _, viol = screen_fn(
+                    g_fit, jnp.broadcast_to(act_dev, (L, d)), screening.UNREACHABLE, chk
+                )
+                n_viol = int(np.asarray(viol).sum())
+                if n_viol == 0:
+                    break
+                if refits >= path.max_refits:
+                    kkt_unresolved = n_viol
+                    break
+                active = jnp.maximum(jnp.asarray(active), viol)
+                readmitted += n_viol
+                refits += 1
+        g_carry = g_fit if path.kkt else None
+        diag = StageDiag(
+            stage=s,
+            solver=solver_name,
+            lam1=lam_s,
+            active=int(keep.sum()),
+            dim=d,
+            width=int(width),
+            p_max=p,
+            readmitted=readmitted,
+            refits=refits,
+            kkt_unresolved=kkt_unresolved,
+            nnz=int(np.mean(np.count_nonzero(w_s, axis=1))),
+        )
+        lg = sinks.active_logger()
+        if lg is not None:
+            lg.event("path.stage", **dataclasses.asdict(diag))
+        diags.append(diag)
+        w_prev, b_prev, lam_prev = w_s, b_s, lam_s
+        weights.append(w_s)
+        biases.append(b_s)
+        losses.append(np.concatenate(stage_losses, axis=1))
+    return PathResult(
+        weights=np.concatenate(weights, axis=0),
+        b=np.concatenate(biases, axis=0),
+        losses=np.concatenate(losses, axis=0),
+        stages=tuple(diags),
+    )
+
+
+def _wrap_unscreened(grid: Grid, rounds, res: ws.PathResult) -> PathResult:
+    """Dress a plain warm-started ladder fit in path clothes: full active
+    sets, no refits — the screen=False baseline (bitwise: it IS
+    sweeps.run_path's result, passed through)."""
+    p = int(rounds[0].idx.shape[-1])
+    L, n1, d = grid.stage_size, len(grid.lam1), grid.base.dim
+    diags = []
+    for c, sol in enumerate(grid.solver_axis):
+        for s in range(n1):
+            lo = c * grid.sub_n + s * L
+            block = res.weights[lo : lo + L]
+            diags.append(
+                StageDiag(
+                    stage=s,
+                    solver=sol,
+                    lam1=float(grid.lam1[s]),
+                    active=d,
+                    dim=d,
+                    width=p,
+                    p_max=p,
+                    readmitted=0,
+                    refits=0,
+                    kkt_unresolved=0,
+                    nnz=int(np.mean(np.count_nonzero(block, axis=1))),
+                )
+            )
+    return PathResult(
+        weights=res.weights, b=res.b, losses=res.losses, stages=tuple(diags)
+    )
+
+
+def best_by_loss(result: PathResult, window: int = 0) -> int:
+    """Flat index of the path point with the lowest mean training loss over
+    the last ``window`` steps (0 = the whole trace) — the no-CV winner
+    rule.  For a held-out pick, run the path under ``sweeps.kfold_cv``."""
+    tail = result.losses[:, -window:] if window else result.losses
+    return int(np.argmin(tail.mean(axis=1)))
+
+
+def select(grid: Grid, result: PathResult, index: int):
+    """Materialize path point ``index`` as ``(LinearConfig, weights [d],
+    b)`` — exactly the triple ``serving.LinearService.swap_weights`` takes
+    to promote a path winner into a live service."""
+    cfg = grid.config_at(index)
+    return cfg, result.weights[index], float(result.b[index])

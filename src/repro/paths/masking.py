@@ -1,0 +1,174 @@
+"""Active-mask routing for the path engine (DESIGN.md §17).
+
+A screening mask is a per-coordinate 0/1 vector over the feature space; the
+engine applies it to the training stream in one of two ways, both built on
+the OOB-sentinel convention every other masked surface here uses (multi-
+tenant slots, shard routing — DESIGN.md §§15-16): a slot addressed at
+``idx = dim`` is dropped by scatters under jit, gathers clip it onto a row
+whose ``val = 0`` contribution vanishes, and the feature-sharded router
+already treats it as owned by no shard, so one remap composes with the mesh
+for free.
+
+* :func:`make_masked_round_fn` — in-graph: the mask rides the jitted round
+  program as a dynamic ``[dim]`` operand and screened slots are remapped to
+  the sentinel inside the trace.  Shapes never change, so a new mask (or a
+  fully-open mask) costs zero recompiles; this is the only mode the mesh
+  path supports (the mask must be applied before shard routing).
+* :func:`compact_round` + :func:`stage_width` — host-side: stage batches are
+  column-compacted to the smallest padded slot width covering every
+  example's surviving features.  This is where screening's wall-clock win
+  comes from — the per-step work of the lazy solvers is O(B * p), so
+  shrinking p to the active-set width is a direct speedup — at the cost of
+  one compiled program per distinct width (bounded: widths are rounded to
+  the sublane multiple, and a descending path only shrinks).
+
+Slots are kept by FEATURE (``mask[idx]``), so an all-open mask is the exact
+identity in-graph (the ``where`` selects every original element).  Host-side
+compaction additionally drops ``val == 0`` padding slots (the generator pads
+at ``idx = 0``, a popular feature — counting padding would pin the width at
+``p``), which moves a feature's catch-up timing by ulps; the engine
+therefore routes a fully-open mask AROUND compaction, preserving the
+bitwise-equality anchor tests/paths pins.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linear_trainer as lt
+from repro.core.linear_trainer import LinearConfig, SparseBatch
+
+
+def remap_batch(rb: SparseBatch, mask: jnp.ndarray, dim: int) -> SparseBatch:
+    """OOB-sentinel remap of screened slots: ``idx -> dim`` (dropped by
+    scatters, owned by no shard), ``val -> 0``.  ``mask`` is a 0/1 f32
+    ``[dim]`` vector; slots are kept by feature (``mask[idx]``), so a
+    fully-open mask returns the input values unchanged.  Expects in-bounds
+    indices (raw round batches); already-sentinel slots stay sentinel."""
+    owned = mask[rb.idx] > 0.0
+    return SparseBatch(
+        idx=jnp.where(owned, rb.idx, jnp.int32(dim)),
+        val=jnp.where(owned, rb.val, jnp.float32(0.0)),
+        y=rb.y,
+    )
+
+
+def make_masked_round_fn(base: LinearConfig):
+    """jit'd ``(bstate, hp, mask, rb) -> (bstate, losses)`` — the in-graph
+    masked twin of ``sweeps.make_batched_round_fn``: the active mask enters
+    as a dynamic ``[dim]`` f32 operand and screened slots are sentinel-
+    remapped before the scanned steps, so screened coordinates never enter
+    catch-up and a new mask never recompiles.  On a mesh config the remap
+    wraps the sharded round program — a sentinel is unowned by every shard,
+    so the mask composes with the in-graph feature routing unchanged."""
+    if base.mesh is not None:
+        from repro.dist import linear as dl
+
+        inner = dl.make_batched_round_fn(base)
+
+        @functools.partial(jax.jit, donate_argnums=0)
+        def masked_round(bstate, hp, mask, rb):
+            return inner(bstate, hp, remap_batch(rb, mask, base.dim))
+
+        return masked_round
+
+    from repro.sweeps.batched_trainer import HYPER_AXES, STATE_AXES
+
+    step_hp = lt.make_lazy_step_hp(base)
+
+    def cfg_round(state, hp, rb):
+        state, losses = jax.lax.scan(lambda s, x: step_hp(s, x, hp), state, rb)
+        return lt.flush(base, state, hp=hp), losses
+
+    vround = jax.vmap(cfg_round, in_axes=(STATE_AXES, HYPER_AXES, None), out_axes=(STATE_AXES, 0))
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def masked_round(bstate, hp, mask, rb):
+        return vround(bstate, hp, remap_batch(rb, mask, base.dim))
+
+    return masked_round
+
+
+def host_slots(rounds):
+    """Host copies of the stream's per-round slot arrays, materialized once
+    per path: per-stage width computation and compaction then rerun on
+    cached numpy arrays instead of pulling every round off the device at
+    every stage (device->host syncs dominated the stage cost before the
+    math did).  Rounds stay separate — the lazy DP caches are sized
+    ``round_len``, so a stage must be trained round by round."""
+    return [(np.asarray(rb.idx), np.asarray(rb.val)) for rb in rounds]
+
+
+def stage_width_host(host_rounds, keep: np.ndarray, p: int) -> int:
+    """:func:`stage_width` on the cached :func:`host_slots` arrays."""
+    most = 0
+    for idx, val in host_rounds:
+        k = keep[idx] & (val != 0.0)
+        most = max(most, int(k.sum(axis=-1).max()))
+    return _quantize_width(most, p)
+
+
+def _quantize_width(most: int, p: int) -> int:
+    """Round a raw slot count up to a power of two (min 16), capped at
+    ``p``: a descending path then compiles at most O(log p) distinct round
+    programs however the active set wobbles stage to stage."""
+    if most >= p:
+        return p
+    w = 16
+    while w < most:
+        w *= 2
+    return min(p, w)
+
+
+def compact_host(
+    idx: np.ndarray,
+    val: np.ndarray,
+    y: jnp.ndarray,
+    keep: np.ndarray,
+    width: int,
+    dim: int,
+) -> SparseBatch:
+    """:func:`compact_round` from cached host slot arrays (labels pass
+    through on device — they are mask-independent)."""
+    k = keep[idx] & (val != 0.0)
+    # stable left-compaction without a sort: a kept slot's destination
+    # column is the count of kept slots before it (cumsum), then one
+    # scatter per array — O(slots) flat passes, the per-stage host cost
+    pos = np.cumsum(k, axis=-1) - 1
+    sel = k & (pos < width)
+    r, b, _ = np.nonzero(sel)
+    dst = pos[sel]
+    idx2 = np.full(idx.shape[:-1] + (width,), dim, np.int32)
+    val2 = np.zeros(val.shape[:-1] + (width,), val.dtype)
+    idx2[r, b, dst] = idx[sel]
+    val2[r, b, dst] = val[sel]
+    return SparseBatch(idx=jnp.asarray(idx2), val=jnp.asarray(val2), y=y)
+
+
+def stage_width(rounds, keep: np.ndarray, p: int) -> int:
+    """Smallest padded slot width covering every example's kept *real*
+    slots over the stage's rounds, rounded up to a power of two (min 16)
+    so a path compiles a bounded set of round programs; capped at ``p``.
+    ``val == 0`` padding slots are droppable regardless of the mask (the
+    data generator pads at ``idx = 0``, a popular feature that is almost
+    always active — counting padding would pin the width near ``p``); the
+    engine skips compaction entirely for a fully-open mask, which keeps the
+    all-open case bitwise-identical to the unscreened run."""
+    return stage_width_host(
+        [(np.asarray(rb.idx), np.asarray(rb.val)) for rb in rounds], keep, p
+    )
+
+
+def compact_round(rb: SparseBatch, keep: np.ndarray, width: int, dim: int) -> SparseBatch:
+    """Host-side column compaction of one ``[R, B, p]`` round batch to
+    ``[R, B, width]``: kept real slots (``keep[idx]`` and ``val != 0``)
+    keep their order; screened and padding slots carry the OOB sentinel
+    ``(idx=dim, val=0)``.  Dropping a ``val == 0`` slot changes only the
+    catch-up *timing* of its feature (its data contribution is zero), which
+    is why the engine routes a fully-open mask around compaction — that
+    case must stay bitwise-identical to the unscreened run."""
+    return compact_host(np.asarray(rb.idx), np.asarray(rb.val), rb.y, keep, width, dim)

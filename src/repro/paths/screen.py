@@ -1,0 +1,94 @@
+"""Screening math for the path engine (DESIGN.md §17).
+
+Three small jitted programs, built once per solver sub-grid and reused for
+every stage, refit and fold (stage shapes are identical, so each compiles
+exactly once):
+
+* :func:`make_grad_fn` — the unpenalized loss gradient ``g_l = (1/n) *
+  sum_i gz_i * x_i`` over a fixed screening batch, vmapped over the stage's
+  config lanes (each lane evaluates at its own previous solution).  This is
+  the only dense O(L * d) pass screening adds per stage; the scatter-add
+  stays in XLA like every other gather/scatter here.
+* :func:`make_screen_fn` — per-lane strong-rule masks through the
+  ``backend.screen_mask`` op (reference jnp twin or the fused Pallas tile
+  pass), unioned across lanes: a coordinate survives if ANY lane keeps it,
+  so the stage's single compacted batch is a conservative superset for
+  every lane.  The same program doubles as the KKT check: pass the current
+  active mask as ``w`` with ``thr = UNREACHABLE`` and the returned ``viol``
+  is exactly the screened-out coordinates whose stationarity bound fails.
+* :func:`flatten_rounds` — the fixed screening batch: the training rounds
+  flattened to one ``[n, p]`` example block (capped — the gradient is a
+  mean, so a large prefix estimates it; the cap bounds the dense pass).
+
+``thr``/``chk`` enter the jitted programs as dynamic scalars — walking the
+lambda ladder never recompiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linear_trainer as lt
+from repro.core.linear_trainer import LinearConfig, SparseBatch
+
+#: strong-rule bound no finite gradient reaches — turns make_screen_fn's
+#: active test into "the mask I passed as w", i.e. the KKT-check mode
+UNREACHABLE = 3.0e38
+
+
+def flatten_rounds(rounds, cap: int = 16384) -> SparseBatch:
+    """Concatenate ``[R, B, p]`` round batches into one flat ``[n, p]``
+    screening batch (first ``cap`` examples — the screening gradient is a
+    mean, so a prefix estimates it and the cap bounds the dense pass)."""
+    p = int(rounds[0].idx.shape[-1])
+    idx = np.concatenate([np.asarray(rb.idx).reshape(-1, p) for rb in rounds], axis=0)
+    val = np.concatenate([np.asarray(rb.val).reshape(-1, p) for rb in rounds], axis=0)
+    y = np.concatenate([np.asarray(rb.y).reshape(-1) for rb in rounds], axis=0)
+    if cap and idx.shape[0] > cap:
+        idx, val, y = idx[:cap], val[:cap], y[:cap]
+    return SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y))
+
+
+def make_grad_fn(base: LinearConfig):
+    """jit'd ``(w [L, d], b [L], batch, denom) -> g [L, d]``: unpenalized
+    loss gradient at each lane's weights over one shared screening batch,
+    normalized by ``denom``.
+
+    ``denom`` must be the number of training STEPS the batch represents
+    (examples / step batch size), not the number of examples: the lazy
+    trainer sums gradients over a step's batch and applies lam1 once per
+    step, so its stationarity condition compares the per-step gradient
+    against lam1 — screening with the per-example mean would silently scale
+    every threshold by the batch size."""
+
+    def one(w, b, batch, denom):
+        z = jnp.sum(w[batch.idx] * batch.val, axis=-1)
+        if base.use_bias:
+            z = z + b
+        _, gz = lt.loss_and_grad_z(base.loss, z, batch.y)
+        contrib = (gz[:, None] * batch.val).reshape(-1)
+        g = jnp.zeros((base.dim,), jnp.float32).at[batch.idx.reshape(-1)].add(contrib)
+        return g / denom
+
+    return jax.jit(jax.vmap(one, in_axes=(0, 0, None, None)))
+
+
+def make_screen_fn(base: LinearConfig):
+    """jit'd ``(g [L, d], w [L, d], thr, chk) -> (active [d], viol [d])``:
+    per-lane ``backend.screen_mask`` unioned across the stage's lanes.
+    ``active`` is 1 where any lane's strong rule (or ever-active ``w != 0``)
+    keeps the coordinate; ``viol`` is 1 where some lane's KKT bound fails on
+    a coordinate NO lane kept.  KKT-check mode: pass the current active
+    mask (broadcast to ``[L, d]``) as ``w`` with ``thr = UNREACHABLE``."""
+    from repro import backend as backend_registry
+
+    bk = backend_registry.resolve(base.backend)
+
+    def union(g, w, thr, chk):
+        act, viol = jax.vmap(lambda gi, wi: bk.screen_mask(gi, wi, thr, chk))(g, w)
+        act_u = jnp.max(act, axis=0)
+        return act_u, jnp.max(viol, axis=0) * (1.0 - act_u)
+
+    return jax.jit(union)

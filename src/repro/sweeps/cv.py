@@ -54,9 +54,16 @@ def kfold_cv(
     rounds_per_fold: int = 1,
     batch: int = 8,
     warm_start: bool = True,
+    path=None,
 ) -> CVResult:
     """Train/evaluate the grid over ``folds`` chunks of the bow stream.
-    Each chunk is ``rounds_per_fold`` rounds of [round_len, batch, p_max]."""
+    Each chunk is ``rounds_per_fold`` rounds of [round_len, batch, p_max].
+
+    ``path`` (a ``repro.paths.PathConfig``) routes the fold fits and the
+    refit through the screening path engine instead of the plain ladder —
+    CV picks winners off the screened path for free, and the engine's
+    program cache is shared across folds exactly like ``round_fn`` is
+    here."""
     assert folds >= 2, "k-fold CV needs k >= 2"
     subs = grid.per_solver()
     if len(subs) > 1:
@@ -67,7 +74,7 @@ def kfold_cv(
         # are already in hand.
         parts = [
             kfold_cv(g, bow, folds=folds, rounds_per_fold=rounds_per_fold,
-                     batch=batch, warm_start=warm_start)
+                     batch=batch, warm_start=warm_start, path=path)
             for g in subs
         ]
         cv_loss = np.concatenate([p.cv_loss for p in parts])
@@ -92,12 +99,28 @@ def kfold_cv(
         for f in range(folds)
     ]
     eval_fn = make_batched_eval(base)
-    round_fn = make_batched_round_fn(base)  # ONE compile: all folds + refit
+    if path is not None:
+        # screened fold fits: the paths engine owns the round program; its
+        # PathPrograms cache plays round_fn's role (one compile, all folds)
+        from repro import paths as path_engine
+
+        programs = path_engine.PathPrograms()
+
+        def fit_rounds(train_rounds):
+            return path_engine.run_path(
+                grid, train_rounds, path=path, warm_start=warm_start, programs=programs
+            )
+    else:
+        round_fn = make_batched_round_fn(base)  # ONE compile: all folds + refit
+
+        def fit_rounds(train_rounds):
+            return run_path(grid, train_rounds, warm_start=warm_start, round_fn=round_fn)
+
     hp = grid.hypers()
     fold_loss = np.zeros((folds, grid.n_cfg), np.float64)
     for f in range(folds):
         train_rounds = [rb for g in range(folds) if g != f for rb in chunks[g]]
-        fit = run_path(grid, train_rounds, warm_start=warm_start, round_fn=round_fn)
+        fit = fit_rounds(train_rounds)
         # flushed solutions -> fresh (current) batched state for the evaluator
         bstate = init_batched_state(base, grid.n_cfg, w0=fit.weights, b0=fit.b, hp=hp)
         held_out = _concat_eval([_flatten_eval(rb) for rb in chunks[f]])
@@ -106,9 +129,7 @@ def kfold_cv(
     best = int(np.argmin(cv_loss))
     # the deployable model must see every chunk: refit the (whole) path on
     # all folds' data and keep the winning lane
-    refit = run_path(
-        grid, [rb for c in chunks for rb in c], warm_start=warm_start, round_fn=round_fn
-    )
+    refit = fit_rounds([rb for c in chunks for rb in c])
     return CVResult(
         fold_loss=fold_loss,
         cv_loss=cv_loss,

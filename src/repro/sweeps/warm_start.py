@@ -27,7 +27,7 @@ from repro.core.linear_trainer import SparseBatch
 from repro.obs import trace
 from repro.obs.compile_tracker import CompileTracker
 
-from .batched_trainer import init_batched_state, make_batched_round_fn
+from .batched_trainer import init_batched_state, make_batched_round_fn, run_grid
 from .grid import Grid
 
 
@@ -64,6 +64,29 @@ def run_path(
             losses=np.concatenate([p.losses for p in parts], axis=0),
         )
     grid = subs[0]  # base with the axis' solver pinned (base may carry None)
+    if len(grid.lam1) == 1:
+        # a single-point "ladder" has no continuation to chain: warm vs cold
+        # is vacuous and the stage loop's tracker/span machinery is pure
+        # overhead, so run it as the plain batched grid fit it is (bitwise:
+        # one stage from zero init IS run_grid on this grid).  A caller-
+        # provided round_fn is still honored (kfold_cv shares one program
+        # across folds); without one, run_grid builds its own and no
+        # continuation program is constructed here.
+        if round_fn is None:
+            bstate, losses = run_grid(grid, rounds)
+        else:
+            hp = grid.stage_hypers(0)
+            bstate = init_batched_state(grid.base, grid.stage_size, hp=hp)
+            stage_losses = []
+            for rb in rounds:
+                bstate, ls = round_fn(bstate, hp, rb)
+                stage_losses.append(np.asarray(ls))
+            losses = np.concatenate(stage_losses, axis=1)
+        return PathResult(
+            weights=np.asarray(bstate.wpsi[:, :, 0])[:, : grid.base.dim],
+            b=np.asarray(bstate.b),
+            losses=np.asarray(losses),
+        )
     if round_fn is None:
         round_fn = make_batched_round_fn(grid.base)
     # a lam1 stage only changes *values* (traced hypers), never shapes, so

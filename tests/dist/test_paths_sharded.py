@@ -1,0 +1,55 @@
+"""Feature-sharded regularization paths: the screened engine on a mesh
+config routes the active mask in-graph (OOB-sentinel remap before shard
+routing — a sentinel is owned by no shard), so a mesh path must match the
+unsharded in-graph path bitwise on the reference backend, and the compact
+mode must refuse mesh configs eagerly."""
+
+SCRIPT = r"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro import paths
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.sweeps import log_ladder, make_grid
+
+DIM, R, B, p = 97, 16, 4, 6
+rng = np.random.default_rng(0)
+rounds = []
+for _ in range(2):
+    idx = rng.integers(0, DIM, size=(R, B, p)).astype(np.int32)
+    val = np.abs(rng.normal(size=(R, B, p))).astype(np.float32)
+    y = (rng.random(size=(R, B)) < 0.5).astype(np.float32)
+    rounds.append(SparseBatch(jnp.asarray(idx), jnp.asarray(val), jnp.asarray(y)))
+
+
+def grid_for(mesh):
+    base = LinearConfig(
+        dim=DIM, round_len=R, solver="fobos", lam1=1e-2, lam2=1e-3,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=100.0), mesh=mesh,
+    )
+    return make_grid(base, log_ladder(3e-2, 1e-2, 2), log_ladder(1e-3, 1e-5, 2))
+
+
+g0, g2 = grid_for(None), grid_for(2)
+cfg = paths.PathConfig(compact=False)  # unsharded side: same in-graph mode
+
+p0 = paths.run_path(g0, rounds, path=cfg)
+p2 = paths.run_path(g2, rounds, path=cfg)
+assert np.array_equal(p0.losses, p2.losses), np.abs(p0.losses - p2.losses).max()
+assert np.array_equal(p0.weights, p2.weights), np.abs(p0.weights - p2.weights).max()
+assert np.array_equal(p0.b, p2.b)
+assert [d.active for d in p0.stages] == [d.active for d in p2.stages]
+print("OK path parity")
+
+# mesh + host compaction is a config error, caught eagerly
+try:
+    paths.run_path(g2, rounds, path=paths.PathConfig(compact=True))
+except ValueError as e:
+    assert "compaction" in str(e)
+    print("OK compact rejected")
+"""
+
+
+def test_sharded_path_parity(subproc):
+    out = subproc(SCRIPT, n_devices=2)
+    assert "OK path parity" in out and "OK compact rejected" in out

@@ -1,0 +1,146 @@
+"""Mask routing: OOB-sentinel remap (in-graph), host-side compaction, and
+the lazy row slab's rows_mask — screened coordinates must never enter
+catch-up, and fully-open masks must be exact identities on their surface."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear_trainer import SparseBatch
+from repro.optim import lazy_rows
+from repro.paths import compact_round, remap_batch, stage_width
+
+DIM = 40
+
+
+def _round(R=3, B=2, p=8, seed=0):
+    rng = np.random.RandomState(seed)
+    idx = rng.randint(0, DIM, size=(R, B, p)).astype(np.int32)
+    val = rng.uniform(0.5, 1.5, size=(R, B, p)).astype(np.float32)
+    # a padding tail at idx=0 val=0, like the bow generator emits
+    idx[..., -2:] = 0
+    val[..., -2:] = 0.0
+    y = rng.randint(0, 2, size=(R, B)).astype(np.float32)
+    return SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y))
+
+
+def test_remap_open_mask_is_identity():
+    rb = _round()
+    out = remap_batch(rb, jnp.ones((DIM,), jnp.float32), DIM)
+    np.testing.assert_array_equal(np.asarray(out.idx), np.asarray(rb.idx))
+    np.testing.assert_array_equal(np.asarray(out.val), np.asarray(rb.val))
+
+
+def test_remap_screened_slots_go_sentinel():
+    rb = _round()
+    feat = int(np.asarray(rb.idx)[0, 0, 0])  # a feature present in the batch
+    mask = np.ones(DIM, np.float32)
+    mask[feat] = 0.0
+    out = remap_batch(rb, jnp.asarray(mask), DIM)
+    hit = np.asarray(rb.idx) == feat
+    assert hit.any()
+    assert np.all(np.asarray(out.idx)[hit] == DIM)
+    assert np.all(np.asarray(out.val)[hit] == 0.0)
+    np.testing.assert_array_equal(np.asarray(out.idx)[~hit], np.asarray(rb.idx)[~hit])
+
+
+def test_compact_round_drops_screened_and_padding():
+    rb = _round()
+    feat = int(np.asarray(rb.idx)[0, 0, 0])  # a feature present in the batch
+    keep = np.ones(DIM, bool)
+    keep[feat] = False
+    width = stage_width([rb], keep, 8)
+    out = compact_round(rb, keep, width, DIM)
+    idx, val = np.asarray(out.idx), np.asarray(out.val)
+    assert idx.shape[-1] == width
+    # no screened feature and no padding survives with a real slot
+    assert not np.any((idx == feat) & (val != 0.0))
+    live = val != 0.0
+    # every surviving slot is a kept real slot of the input, order preserved
+    src_idx, src_val = np.asarray(rb.idx), np.asarray(rb.val)
+    for r in range(idx.shape[0]):
+        for b in range(idx.shape[1]):
+            src_kept = [
+                (i, v)
+                for i, v in zip(src_idx[r, b], src_val[r, b])
+                if keep[i] and v != 0.0
+            ]
+            got = list(zip(idx[r, b][live[r, b]], val[r, b][live[r, b]]))
+            assert got == src_kept
+    # dropped slots carry the sentinel
+    assert np.all(idx[~live] == DIM)
+
+
+def test_stage_width_quantizes_to_pow2_and_caps():
+    rb = _round(p=24, seed=3)
+    keep = np.zeros(DIM, bool)
+    keep[:3] = True  # few kept features -> narrow width, floored at 16
+    assert stage_width([rb], keep, 24) == 16
+    # all-open: every real slot kept -> capped at p
+    w = stage_width([rb], np.ones(DIM, bool), 24)
+    assert w == 24 or (w & (w - 1)) == 0  # the cap, or a power of two
+    assert stage_width([rb], np.ones(DIM, bool), 64) in (16, 32, 64)
+
+
+def test_masked_round_matches_plain_on_open_mask():
+    """The in-graph masked round program with an all-ones mask is bitwise
+    the plain batched round program."""
+    from repro.core import LinearConfig, ScheduleConfig
+    from repro.paths import make_masked_round_fn
+    from repro.sweeps import init_batched_state, make_batched_round_fn, make_grid
+
+    base = LinearConfig(
+        dim=DIM,
+        flavor="fobos",
+        round_len=3,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=50.0),
+    )
+    grid = make_grid(base, (1e-3,), (1e-4, 1e-5))
+    rb = _round(R=3, B=2, p=8, seed=4)
+    hp = grid.hypers()
+    plain = make_batched_round_fn(base)
+    masked = make_masked_round_fn(base)
+    s1, l1 = plain(init_batched_state(base, grid.n_cfg, hp=hp), hp, rb)
+    s2, l2 = masked(
+        init_batched_state(base, grid.n_cfg, hp=hp), hp, jnp.ones((DIM,), jnp.float32), rb
+    )
+    np.testing.assert_array_equal(np.asarray(s1.wpsi), np.asarray(s2.wpsi))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_lazy_rows_mask_skips_catchup_and_update():
+    """rows_mask routes screened rows to the OOB sentinel: they take no
+    catch-up and no gradient step, while unmasked rows match the unmasked
+    run exactly."""
+    rows, d, round_len = 12, 4, 8
+    rng = np.random.RandomState(0)
+    table0 = jnp.asarray(rng.randn(rows, d).astype(np.float32))
+    idx = jnp.asarray(np.array([1, 3, 5, 3], np.int32))
+    mask = np.ones(rows, np.float32)
+    mask[3] = 0.0  # screen row 3 (touched twice in idx)
+    grad = jnp.asarray(rng.randn(rows, d).astype(np.float32))
+    eta = jnp.float32(0.1)
+    kw = dict(lam1=0.05, lam2=0.01, flavor="fobos")
+
+    def run(rows_mask):
+        # three unmasked warmup steps on other rows so row 3's catch-up
+        # window at the masked step is non-trivial (psi=0, i=3)
+        table, st = table0, lazy_rows.init(rows, round_len)
+        warm_idx = jnp.asarray(np.array([0, 2], np.int32))
+        for _ in range(3):
+            table, mid = lazy_rows.begin(table, warm_idx, st, eta, **kw)
+            table, st = lazy_rows.finish(table, grad, warm_idx, mid, eta, lam1=0.05)
+        cur, mid = lazy_rows.begin(table, idx, st, eta, rows_mask=rows_mask, **kw)
+        new, _ = lazy_rows.finish(cur, grad, idx, mid, eta, lam1=0.05, rows_mask=rows_mask)
+        return np.asarray(cur), np.asarray(new), np.asarray(mid.psi)
+
+    cur_m, new_m, psi_m = run(jnp.asarray(mask))
+    cur_u, new_u, psi_u = run(None)
+    # the screened row is untouched end to end: no catch-up, no psi mark,
+    # no gradient step
+    np.testing.assert_array_equal(cur_m[3], np.asarray(table0)[3])
+    np.testing.assert_array_equal(new_m[3], np.asarray(table0)[3])
+    assert psi_m[3] == 0 and psi_u[3] == 3
+    # unscreened rows are bitwise the unmasked run
+    keep = mask > 0
+    np.testing.assert_array_equal(cur_m[keep], cur_u[keep])
+    np.testing.assert_array_equal(new_m[keep], new_u[keep])

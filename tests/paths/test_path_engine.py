@@ -1,0 +1,235 @@
+"""The path engine's correctness contract (DESIGN.md §17):
+
+* screen=False IS the plain warm-started ladder (bitwise pass-through);
+* a path where the strong rule provably keeps everything (ladder ratio
+  < 1/2 => thr < 0) is bitwise the unscreened ladder, in both mask modes;
+* with real screening, screened fits match unscreened fits to 1e-5 across
+  every solver x backend (the hypothesis property); and
+* an adversarially correlated design defeats the strong rule, and the KKT
+  safety loop re-admits the violator and recovers the unscreened fit.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import paths
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.sweeps import make_grid
+from repro.sweeps import warm_start as ws
+
+DIM = 32
+N_INFORMATIVE = 8
+ROUND_LEN = 48
+
+
+def _base(**kw):
+    defaults = dict(
+        dim=DIM,
+        loss="squared",
+        flavor="fobos",
+        round_len=ROUND_LEN,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.2, t0=50.0),
+    )
+    defaults.update(kw)
+    return LinearConfig(**defaults)
+
+
+def _inert_tail_rounds(n_rounds=2, B=2, val_tail=0.005, seed=0):
+    """Squared-loss data whose tail features (8..31) are label-inert and
+    rare: each example carries all 8 informative features plus at most one
+    rotating tail feature with a tiny value, and tail slots only appear in
+    the first half of each round (so l1 shrink between touches and before
+    the flush returns every tail weight to exactly 0 — the screened and
+    unscreened runs then agree to fp noise; see DESIGN.md §17)."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(seed)
+    w_star = (
+        rng.uniform(0.3, 0.6, size=N_INFORMATIVE) * rng.choice([-1.0, 1.0], N_INFORMATIVE)
+    ).astype(np.float32)
+    p = N_INFORMATIVE + 1
+    rounds = []
+    for r in range(n_rounds):
+        idx = np.zeros((ROUND_LEN, B, p), np.int32)
+        val = np.zeros((ROUND_LEN, B, p), np.float32)
+        idx[..., :N_INFORMATIVE] = np.arange(N_INFORMATIVE)
+        # signed values: y varies example to example, so the weights (not
+        # just the bias) carry the fit and stay ever-active down the ladder
+        shape = (ROUND_LEN, B, N_INFORMATIVE)
+        val[..., :N_INFORMATIVE] = (
+            rng.uniform(0.5, 0.9, size=shape) * rng.choice([-1.0, 1.0], shape)
+        ).astype(np.float32)
+        for t in range(ROUND_LEN // 2):  # tail-free second half: flush decay
+            for b in range(B):
+                e = (r * ROUND_LEN + t) * B + b
+                idx[t, b, -1] = N_INFORMATIVE + e % (DIM - N_INFORMATIVE)
+                val[t, b, -1] = val_tail
+        y = np.einsum("sbj,j->sb", val[..., :N_INFORMATIVE], w_star)
+        rounds.append(
+            SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y))
+        )
+    return rounds
+
+
+def test_screen_false_is_the_plain_ladder_bitwise():
+    base = _base()
+    grid = make_grid(base, (1e-2, 1e-3, 1e-4), (1e-4, 1e-5))
+    rounds = _inert_tail_rounds()
+    res = paths.run_path(grid, rounds, path=paths.PathConfig(screen=False))
+    plain = ws.run_path(grid, rounds)
+    np.testing.assert_array_equal(res.weights, plain.weights)
+    np.testing.assert_array_equal(res.b, plain.b)
+    np.testing.assert_array_equal(res.losses, plain.losses)
+    assert all(d.active == DIM for d in res.stages)
+    assert len(res.stages) == 3
+
+
+@pytest.mark.parametrize("compact", [True, False])
+def test_nothing_screened_is_bitwise_the_ladder(compact):
+    """Ladder ratio < 1/2 makes every strong-rule threshold negative
+    (2*lam_k < lam_{k-1}), so all-ones masks are PROVABLE — and then the
+    screened engine must be bitwise the unscreened ladder in both mask
+    modes (host compaction short-circuits; the in-graph remap is the
+    identity)."""
+    base = _base()
+    grid = make_grid(base, (1e-2, 4e-3, 1e-3), (1e-4, 1e-5))  # ratios 0.4, 0.25
+    rounds = _inert_tail_rounds()
+    cfg = paths.PathConfig(screen_first=False, compact=compact)
+    res = paths.run_path(grid, rounds, path=cfg)
+    plain = ws.run_path(grid, rounds)
+    assert all(d.active == DIM and d.readmitted == 0 for d in res.stages)
+    np.testing.assert_array_equal(res.weights, plain.weights)
+    np.testing.assert_array_equal(res.b, plain.b)
+    np.testing.assert_array_equal(res.losses, plain.losses)
+
+
+_PROGRAMS = paths.PathPrograms()  # shared across property examples: the
+# stage programs depend only on (solver, backend), not the drawn hypers
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    solver=st.sampled_from(["sgd", "fobos", "trunc", "ftrl"]),
+    backend=st.sampled_from(["reference", "pallas"]),
+    eta0=st.floats(0.15, 0.3),
+    lam2=st.floats(0.0, 1e-3),
+)
+def test_screened_matches_unscreened_property(solver, backend, eta0, lam2):
+    """The acceptance property: screened fits match unscreened fits to 1e-5
+    for every solver x backend, on data where screening genuinely fires."""
+    base = _base(backend=backend, solver=solver)
+    grid = make_grid(base, (0.08, 0.06), (lam2,), (eta0,))
+    rounds = _inert_tail_rounds()
+    cfg = paths.PathConfig(screen_first=False)
+    res = paths.run_path(grid, rounds, path=cfg, programs=_PROGRAMS)
+    plain = ws.run_path(grid, rounds, round_fn=_PROGRAMS.round_fn(grid.per_solver()[0].base))
+    assert res.stages[1].active < DIM, "screening never fired: vacuous property"
+    np.testing.assert_allclose(res.weights, plain.weights, atol=1e-5, rtol=0)
+    np.testing.assert_allclose(res.b, plain.b, atol=1e-5, rtol=0)
+
+
+def test_kkt_safety_loop_readmits_strong_rule_violation():
+    """Two strongly correlated features defeat the sequential strong rule:
+    the screened-out feature's gradient moves more than lam_{k-1} - lam_k
+    once its partner trains alone.  The KKT check must catch it, re-admit,
+    and the refit (now full-width) must equal the unscreened stage."""
+    import jax.numpy as jnp
+
+    # no bias (it would absorb the asymmetry and keep feature 1 active) and
+    # a small eta0: the trainer SUMS gradients over a step's batch, so
+    # stability needs eta * eigmax(sum_i x_i x_i^T) < 2 (~10.9 here).
+    base = _base(
+        dim=2, use_bias=False, schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.1, t0=50.0)
+    )
+    R, a = ROUND_LEN, 3.0
+    idx = np.zeros((R, 2, 2), np.int32)
+    val = np.zeros((R, 2, 2), np.float32)
+    y = np.zeros((R, 2), np.float32)
+    idx[:, :, 1] = 1
+    val[:, 0, 0], val[:, 0, 1], y[:, 0] = 1.0, a, 1.0  # A: x=(1,a), y=+1
+    val[:, 1, 0], val[:, 1, 1], y[:, 1] = 0.0, 1.0, -1.0  # B: x=(0,1), y=-1
+    rb = SparseBatch(idx=jnp.asarray(idx), val=jnp.asarray(val), y=jnp.asarray(y))
+    rounds = [rb, rb]
+    # per-step math: stage-0 optimum w = (1 - lam0, 0) with per-step
+    # |g1| = |1 - 3*lam0| = 0.1; strong rule at lam1: thr = 2*0.22 - 0.3
+    # = 0.14 > 0.1 -> screened.  Trained alone, w0 = 1 - lam1 moves g1 to
+    # |1 - 3*lam1| = 0.34 > chk = 0.22 * 1.1 -> KKT violation -> re-admit.
+    grid = make_grid(base, (0.3, 0.22), (0.0,))
+    cfg = paths.PathConfig(screen_first=False, kkt_tol=0.1)
+    res = paths.run_path(grid, rounds, path=cfg)
+    assert res.total_readmitted() >= 1, [dataclasses.asdict(d) for d in res.stages]
+    # after re-admission the stage is full-width -> equals the plain ladder
+    plain = ws.run_path(grid, rounds)
+    np.testing.assert_array_equal(res.weights, plain.weights)
+    # and with the safety loop off, the violation is reported, not hidden
+    res_nokkt = paths.run_path(
+        grid, rounds, path=paths.PathConfig(screen_first=False, kkt=False)
+    )
+    assert res_nokkt.total_readmitted() == 0
+
+
+def test_elastic_gd_path_grows_support():
+    base = _base()
+    grid = make_grid(base, (3e-2, 1e-2, 3e-3, 1e-3), (1e-4, 1e-3))
+    rounds = _inert_tail_rounds()
+    res = paths.run_path(
+        grid, rounds, path=paths.PathConfig(strategy="elastic_gd", egd_steps=32)
+    )
+    assert res.weights.shape == (grid.n_cfg, DIM)
+    assert res.losses.shape == (grid.n_cfg, 32)
+    assert np.all(np.isfinite(res.losses))
+    # selection admits more coordinates as lam1 descends: nnz is monotone
+    # non-decreasing along the trajectory (coords never selected stay 0)
+    nnz = [d.nnz for d in res.stages]
+    assert all(b >= a for a, b in zip(nnz, nnz[1:])), nnz
+    assert nnz[0] < DIM  # the strong-lam1 stages are genuinely selective
+
+
+def test_elastic_gd_solver_axis_replicates():
+    base = _base()
+    grid = make_grid(base, (1e-2, 1e-3), (1e-4,), solvers=("sgd", "fobos"))
+    rounds = _inert_tail_rounds(n_rounds=1)
+    res = paths.run_path(
+        grid, rounds, path=paths.PathConfig(strategy="elastic_gd", egd_steps=8)
+    )
+    assert res.weights.shape == (grid.n_cfg, DIM)
+    np.testing.assert_array_equal(res.weights[: grid.sub_n], res.weights[grid.sub_n :])
+    assert [d.solver for d in res.stages] == ["sgd", "sgd", "fobos", "fobos"]
+
+
+def test_single_stage_grid_runs():
+    base = _base()
+    grid = make_grid(base, (1e-3,), (1e-4, 1e-5))
+    rounds = _inert_tail_rounds(n_rounds=1)
+    res = paths.run_path(grid, rounds)
+    assert res.weights.shape == (grid.n_cfg, DIM)
+    assert len(res.stages) == 1
+    assert np.all(np.isfinite(res.losses))
+
+
+def test_multi_solver_paths_are_solver_major():
+    base = _base()
+    grid = make_grid(base, (1e-2, 1e-3), (1e-4,), solvers=("fobos", "sgd"))
+    rounds = _inert_tail_rounds(n_rounds=1)
+    res = paths.run_path(grid, rounds, path=paths.PathConfig(screen_first=False))
+    assert res.weights.shape == (grid.n_cfg, DIM)
+    assert [d.solver for d in res.stages] == ["fobos", "fobos", "sgd", "sgd"]
+    # per-solver paths differ (different update rules on the same data)
+    assert not np.array_equal(res.weights[: grid.sub_n], res.weights[grid.sub_n :])
+
+
+def test_best_by_loss_and_select():
+    base = _base()
+    grid = make_grid(base, (1e-2, 1e-4), (1e-4, 1e-5))
+    rounds = _inert_tail_rounds(n_rounds=1)
+    res = paths.run_path(grid, rounds)
+    best = paths.best_by_loss(res, window=ROUND_LEN)
+    assert 0 <= best < grid.n_cfg
+    cfg, w, b = paths.select(grid, res, best)
+    assert cfg.lam1 in grid.lam1 and w.shape == (DIM,)
+    tail = res.losses[:, -ROUND_LEN:].mean(axis=1)
+    assert tail[best] == tail.min()

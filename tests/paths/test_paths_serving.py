@@ -1,0 +1,41 @@
+"""Path -> serving handoff: ``paths.select`` must produce exactly the
+``(config, weights, b)`` triple ``LinearService.swap_weights`` takes, and
+the served predictions must come from the selected path point."""
+
+import numpy as np
+
+from repro import paths
+from repro.core import LinearConfig, ScheduleConfig, SparseBatch
+from repro.data import BowConfig, SyntheticBow
+from repro.serving import LinearService, ServiceConfig
+from repro.sweeps import log_ladder, make_grid
+
+DIM = 300
+
+
+def test_path_winner_swaps_into_service():
+    base = LinearConfig(
+        dim=DIM,
+        flavor="fobos",
+        round_len=16,
+        schedule=ScheduleConfig(kind="inv_sqrt", eta0=0.3, t0=50.0),
+    )
+    grid = make_grid(base, log_ladder(1e-2, 1e-4, 3), (1e-4, 1e-5))
+    bow = SyntheticBow(
+        BowConfig(dim=DIM, p_max=16, p_mean=8.0, informative_pool=64, n_informative=24, seed=3)
+    )
+    rounds = [bow.sample_round(r, base.round_len, 4) for r in range(2)]
+    res = paths.run_path(grid, rounds)
+    best = paths.best_by_loss(res)
+    cfg, w, b = paths.select(grid, res, best)
+    assert cfg.solver == grid.solver_axis[best // grid.sub_n]
+
+    svc = LinearService(cfg, ServiceConfig(p_max=16, micro_batch=4))
+    svc.swap_weights(w, b, cfg=cfg)
+    chunk = bow.sample_round(999, 1, 4)
+    batch = SparseBatch(idx=chunk.idx[0], val=chunk.val[0], y=chunk.y[0])
+    probs = np.asarray(svc.predict(batch))
+    # served scores ARE the selected path point's linear model
+    z = np.einsum("bp,bp->b", np.asarray(chunk.val[0]), w[np.asarray(chunk.idx[0])]) + b
+    want = 1.0 / (1.0 + np.exp(-z))
+    np.testing.assert_allclose(probs, want, atol=1e-5)

@@ -1,0 +1,82 @@
+"""backend.screen_mask: the strong-rule / KKT tile op.  Pure comparisons —
+the reference jnp twin and the Pallas kernel must agree EXACTLY, not to a
+tolerance, and the KKT-check mode (w := active mask, thr unreachable) must
+reduce to 'violations among the coordinates the mask discarded'."""
+
+import numpy as np
+import pytest
+
+from repro import backend as kb
+from repro.paths import make_screen_fn
+from repro.paths.screen import UNREACHABLE
+
+
+def _case(d=517, seed=0):
+    rng = np.random.RandomState(seed)
+    g = (rng.randn(d) * 0.1).astype(np.float32)
+    w = np.where(rng.uniform(size=d) < 0.2, rng.randn(d), 0.0).astype(np.float32)
+    return g, w
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_screen_mask_semantics(backend):
+    g, w = _case()
+    thr, chk = 0.12, 0.05
+    active, viol = kb.resolve(backend).screen_mask(g, w, thr, chk)
+    active, viol = np.asarray(active), np.asarray(viol)
+    want_active = ((np.abs(g) >= thr) | (w != 0.0)).astype(np.float32)
+    want_viol = (1.0 - want_active) * (np.abs(g) > chk).astype(np.float32)
+    np.testing.assert_array_equal(active, want_active)
+    np.testing.assert_array_equal(viol, want_viol)
+
+
+def test_backends_agree_exactly():
+    g, w = _case(d=1031, seed=3)
+    for thr, chk in [(0.0, 0.05), (0.12, 0.05), (UNREACHABLE, 0.02)]:
+        a_ref, v_ref = kb.resolve("reference").screen_mask(g, w, thr, chk)
+        a_pal, v_pal = kb.resolve("pallas").screen_mask(g, w, thr, chk)
+        np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_pal))
+        np.testing.assert_array_equal(np.asarray(v_ref), np.asarray(v_pal))
+
+
+def test_zero_threshold_keeps_everything():
+    """thr = 0 disables screening (|g| >= 0 always): the stage-0 fallback."""
+    g, w = _case(seed=7)
+    active, viol = kb.resolve("reference").screen_mask(g, w, 0.0, 0.01)
+    assert np.all(np.asarray(active) == 1.0)
+    assert np.all(np.asarray(viol) == 0.0)
+
+
+def test_kkt_mode_flags_only_discarded_coords():
+    """With w := the active mask and thr unreachable, active reduces to the
+    passed mask and viol flags exactly the discarded coords over ``chk``."""
+    g, _ = _case(seed=11)
+    mask = (np.arange(g.shape[0]) % 3 == 0).astype(np.float32)
+    active, viol = kb.resolve("reference").screen_mask(g, mask, UNREACHABLE, 0.08)
+    np.testing.assert_array_equal(np.asarray(active), mask)
+    want = (1.0 - mask) * (np.abs(g) > 0.08).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(viol), want)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_union_across_lanes(backend):
+    """make_screen_fn unions active over lanes and keeps only violations on
+    coords NO lane kept."""
+    import dataclasses
+
+    from repro.core import LinearConfig
+
+    base = dataclasses.replace(LinearConfig(dim=64), backend=backend)
+    fn = make_screen_fn(base)
+    d = 64
+    g = np.zeros((2, d), np.float32)
+    w = np.zeros((2, d), np.float32)
+    g[0, 1] = 0.5  # lane 0 keeps coord 1 by gradient
+    w[1, 2] = 1.0  # lane 1 keeps coord 2 by ever-active
+    g[1, 3] = 0.2  # over chk but under thr in both lanes -> violation
+    active, viol = fn(g, w, 0.4, 0.1)
+    active, viol = np.asarray(active), np.asarray(viol)
+    assert active[1] == 1.0 and active[2] == 1.0
+    assert viol[3] == 1.0
+    assert viol[1] == 0.0 and viol[2] == 0.0  # kept coords never violate
+    assert active.sum() == 2.0 and viol.sum() == 1.0

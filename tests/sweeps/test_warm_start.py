@@ -88,6 +88,38 @@ def test_warm_start_first_step_loss_drops():
     )
 
 
+def test_single_stage_ladder_is_the_plain_grid_fit():
+    """A one-point lam1 "ladder" has no continuation: run_path must run it
+    as the plain batched grid fit (bitwise, warm or cold — the flags are
+    vacuous) without building the continuation machinery."""
+    base = _base()
+    grid = make_grid(base, (1e-3,), (1e-3, 1e-5), (0.2, 0.4))
+    rounds = _bow_rounds(2, base.round_len, 2)
+    bstate, losses = run_grid(grid, rounds)
+    want_w = np.asarray(bstate.wpsi[:, :, 0])
+    for warm in (True, False):
+        res = run_path(grid, rounds, warm_start=warm)
+        np.testing.assert_array_equal(res.weights, want_w)
+        np.testing.assert_array_equal(res.b, np.asarray(bstate.b))
+        np.testing.assert_array_equal(res.losses, np.asarray(losses))
+
+
+def test_single_stage_ladder_honors_caller_round_fn():
+    """kfold_cv shares one jitted round program across folds; a single-stage
+    grid must still route through it (and match the default path)."""
+    from repro.sweeps import make_batched_round_fn
+
+    base = _base()
+    grid = make_grid(base, (1e-3,), (1e-3, 1e-5))
+    rounds = _bow_rounds(2, base.round_len, 2)
+    round_fn = make_batched_round_fn(base)
+    res = run_path(grid, rounds, round_fn=round_fn)
+    plain = run_path(grid, rounds)
+    np.testing.assert_array_equal(res.weights, plain.weights)
+    np.testing.assert_array_equal(res.b, plain.b)
+    np.testing.assert_array_equal(res.losses, plain.losses)
+
+
 def test_path_result_shapes():
     base = _base()
     grid = make_grid(base, log_ladder(1e-2, 1e-4, 3), (1e-3, 1e-5))
